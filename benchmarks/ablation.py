@@ -1,0 +1,77 @@
+"""Ablations of the paper's scheduler modifications (§3.3, §3.5).
+
+Three scheduler variants over the benchmark suite at 8 nodes:
+  * full      — cache-aware HEFT + lazy/clonable fills (the CMM scheduler);
+  * no_cache  — node-level cache disabled (vanilla-HEFT comm costing);
+  * no_lazy   — fills ranked/placed like ordinary tasks (pre-§3.3 CMM).
+
+The paper argues both modifications are necessary; this measures how much
+each contributes to the simulated makespan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+from repro.core import (CMMEngine, c5_9xlarge, simulate, tile_expression)
+from repro.core.heft import heft_schedule, register_fill_origin
+
+from .cmm_suite import BENCHMARKS
+from .table3_scaling import time_model
+
+
+@dataclass
+class Row:
+    name: str
+    full: float
+    no_cache: float
+    no_lazy: float
+
+
+def run(n: int = 1024, nodes: int = 8, tile_frac: float = 0.3,
+        origin: str = "local") -> List[Row]:
+    """origin='local': generated data (the lazy-fill/§3.3 regime);
+    origin='master': user-supplied data resident on the master (the
+    node-level-cache/§3.5 regime — tiles get re-used across nodes)."""
+    tm = time_model()
+    spec = c5_9xlarge(nodes)
+    tile = max(1, int(n * tile_frac))
+    rows = []
+    for name, build in BENCHMARKS.items():
+        mks = {}
+        for variant, kw, sim_kw in [
+                ("full", {}, {}),
+                ("no_cache", {"cache_aware": False}, {"use_cache": False}),
+                ("no_lazy", {"lazy_fill": False}, {})]:
+            prog = tile_expression(build(n), tile)
+            register_fill_origin({k: origin for k in prog.leaf_nodes})
+            sched = heft_schedule(prog.graph, spec, tm, **kw)
+            mks[variant] = simulate(prog.graph, sched, spec, tm,
+                                    **sim_kw).makespan
+        rows.append(Row(name, mks["full"], mks["no_cache"], mks["no_lazy"]))
+    return rows
+
+
+def render(rows: List[Row]) -> str:
+    out = [f"{'bench':14s} {'full(s)':>9s} {'no_cache':>9s} {'no_lazy':>9s} "
+           f"{'cache x':>8s} {'lazy x':>7s}"]
+    for r in rows:
+        out.append(f"{r.name:14s} {r.full:9.3f} {r.no_cache:9.3f} "
+                   f"{r.no_lazy:9.3f} {r.no_cache/max(r.full,1e-12):7.2f}x "
+                   f"{r.no_lazy/max(r.full,1e-12):6.2f}x")
+    return "\n".join(out)
+
+
+def main(n: int = 1024):
+    out = {}
+    for origin in ("local", "master"):
+        rows = run(n=n, origin=origin)
+        print(f"--- data origin: {origin} ---")
+        print(render(rows))
+        print()
+        out[origin] = rows
+    return out
+
+
+if __name__ == "__main__":
+    main()

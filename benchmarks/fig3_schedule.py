@@ -1,0 +1,42 @@
+"""Figure 3: task schedules (Gantt) for the Markov benchmark, 1-4 nodes.
+
+Reproduced features (checked in tests):
+  * comm appears at the start (master -> workers) and end (takecopy)
+    with few nodes;
+  * more nodes -> more tasks (the paper counts 421/579/644 CMM tasks for
+    1/2/4 worker-node networks at 3k tiles — ours counts its own tiling);
+  * workers start after the master (they wait on the first transfers).
+"""
+from __future__ import annotations
+
+from repro.core import CMMEngine, ClusteredMatrix as CM, c5_9xlarge, simulate
+from .table3_scaling import time_model
+
+
+def markov_input_pinned(n: int):
+    """Markov with user-supplied (master-resident) inputs, so the initial
+    master->worker communication phase of Fig. 3 is visible."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    P = CM.from_array(rng.standard_normal((n, n)), "P")
+    u = CM.from_array(rng.standard_normal((n, 1)), "u")
+    return (P @ P @ P) @ u
+
+
+def main(n: int = 512, nodes_list=(2, 4), width: int = 96):
+    tm = time_model()
+    for nodes in nodes_list:
+        eng = CMMEngine(c5_9xlarge(nodes), tm, tile=max(1, 3 * n // 10))
+        plan = eng.plan(markov_input_pinned(n))
+        print(f"=== Markov n={n} tile={3*n//10} nodes={nodes} "
+              f"tasks={len(plan.program.graph)} "
+              f"makespan={plan.sim.makespan:.3f}s ===")
+        print(plan.sim.gantt(width))
+        print("legend: #=addmul f=fill .=calloc c=takecopy >=transfer "
+              "-=sub ~=ewise t=transpose")
+        print()
+    return True
+
+
+if __name__ == "__main__":
+    main()

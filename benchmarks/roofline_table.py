@@ -1,0 +1,57 @@
+"""Render the §Roofline table from results/dryrun/*.json (launch/dryrun.py
+must have been run).  One row per (arch x shape x mesh) cell."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..", "results")
+#: prefer the final (optimized-plan) sweep when present
+RESULTS = (os.path.join(_ROOT, "dryrun_final")
+           if os.path.isdir(os.path.join(_ROOT, "dryrun_final"))
+           else os.path.join(_ROOT, "dryrun"))
+
+
+def load_cells(mesh: str = "single_pod_16x16") -> List[dict]:
+    out = []
+    base = os.path.join(RESULTS, mesh)
+    if not os.path.isdir(base):
+        return out
+    for arch in sorted(os.listdir(base)):
+        ad = os.path.join(base, arch)
+        for f in sorted(os.listdir(ad)):
+            if f.endswith(".json"):
+                with open(os.path.join(ad, f)) as fh:
+                    out.append(json.load(fh))
+    return out
+
+
+def render(cells: List[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'bound':>10s} {'roofl%':>7s} {'useful%':>8s} "
+           f"{'peakGiB':>8s}")
+    rows = [hdr, "-" * len(hdr)]
+    for c in cells:
+        t = c["roofline"]
+        rows.append(
+            f"{c['arch']:24s} {c['shape']:12s} {t['compute_s']:9.4f} "
+            f"{t['memory_s']:9.4f} {t['collective_s']:9.4f} "
+            f"{t['bound']:>10s} {t['roofline_fraction']*100:6.1f}% "
+            f"{min(c['useful_flops_ratio'],9.99)*100:7.1f}% "
+            f"{c['memory']['peak_bytes']/2**30:8.2f}")
+    return "\n".join(rows)
+
+
+def main(mesh: str = "single_pod_16x16"):
+    cells = load_cells(mesh)
+    if not cells:
+        print(f"(no dry-run results for {mesh}; run "
+              f"`python -m repro.launch.dryrun --all`)")
+        return []
+    print(render(cells))
+    return cells
+
+
+if __name__ == "__main__":
+    main()

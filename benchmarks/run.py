@@ -1,0 +1,107 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
+  * us_per_call — wall-clock (exec) or simulated makespan in microseconds;
+  * derived     — the table's own metric (speedup, GFLOPS, accuracy, ...).
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--size N] [--full]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def bench_table2_gflops(rows_out):
+    from . import table2_gflops
+    for r in table2_gflops.run():
+        rows_out.append((f"table2/gflops/threads={r.threads}",
+                         0.0, f"{r.gflops_real:.2f}|model="
+                              f"{r.gflops_model:.2f}"))
+
+
+def bench_table3_scaling(rows_out, n):
+    from . import table3_scaling
+    tm = table3_scaling.time_model()
+    for name in table3_scaling.BENCHMARKS:
+        rows = table3_scaling.run_benchmark(name, n=n, tm=tm)
+        print(table3_scaling.render(rows), file=sys.stderr)
+        for r in rows:
+            us = (r.exec_s if r.exec_s is not None else r.sim_s) * 1e6
+            acc = f"|acc={r.accuracy*100:.0f}%" if r.accuracy else ""
+            rows_out.append((
+                f"table3/{r.name}/n={r.nodes}/tile={r.tile}", us,
+                f"speedup={r.speedup:.2f}{acc}"))
+
+
+def bench_table4_theoretical(rows_out, n):
+    from . import table4_theoretical
+    rows = table4_theoretical.run(n=n)
+    print(table4_theoretical.render(rows), file=sys.stderr)
+    for r in rows:
+        rows_out.append((f"table4/{r.name}", 0.0,
+                         f"obs={r.observed:.2f}|theo={r.theoretical:.2f}"
+                         f"|frac={r.fraction*100:.0f}%"))
+
+
+def bench_fig3_schedule(rows_out, n):
+    from . import fig3_schedule
+    fig3_schedule.main(n=n)
+    rows_out.append(("fig3/markov_gantt", 0.0, "rendered"))
+
+
+def bench_ablation(rows_out, n):
+    from . import ablation
+    out = ablation.main(n=n)
+    for origin, rows in out.items():
+        for r in rows:
+            rows_out.append((
+                f"ablation/{origin}/{r.name}", r.full * 1e6,
+                f"cache_x={r.no_cache/max(r.full,1e-12):.2f}"
+                f"|lazy_x={r.no_lazy/max(r.full,1e-12):.2f}"))
+
+
+def bench_roofline(rows_out):
+    from . import roofline_table
+    cells = roofline_table.main()
+    for c in cells:
+        t = c["roofline"]
+        rows_out.append((
+            f"roofline/{c['mesh']}/{c['arch']}/{c['shape']}",
+            t["step_lower_bound_s"] * 1e6,
+            f"bound={t['bound']}|roofline={t['roofline_fraction']*100:.1f}%"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=384,
+                    help="matrix size for the CMM benchmarks")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on one core)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: t2,t3,t4,f3,roofline")
+    args = ap.parse_args()
+    n = 2048 if args.full else args.size
+    only = set(args.only.split(",")) if args.only else None
+
+    rows = []
+    if not only or "t3" in only:
+        bench_table3_scaling(rows, n)
+    if not only or "t4" in only:
+        bench_table4_theoretical(rows, n)
+    if not only or "t2" in only:
+        bench_table2_gflops(rows)
+    if not only or "f3" in only:
+        bench_fig3_schedule(rows, min(n, 512))
+    if not only or "ablation" in only:
+        bench_ablation(rows, max(n, 512))
+    if not only or "roofline" in only:
+        bench_roofline(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Table 4: observed vs theoretical (zero-communication) speedup.
+
+Configuration mirrors the paper: 8 nodes, tile = n/2 (their 5 k at 10 k).
+Theoretical speedup = sim(1 node) / sim(8 nodes, comm instantaneous);
+observed = sim(1 node) / sim(8 nodes).  The paper's claim: observed lands
+at 55-80 % of theoretical.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.core import CMMEngine, c5_9xlarge, simulate
+from repro.core.timemodel import TimeModel
+
+from .cmm_suite import BENCHMARKS
+from .table3_scaling import time_model
+
+
+@dataclass
+class Row:
+    name: str
+    observed: float
+    theoretical: float
+
+    @property
+    def fraction(self) -> float:
+        return self.observed / max(self.theoretical, 1e-12)
+
+
+def run(n: int = 512, nodes: int = 8,
+        tm: Optional[TimeModel] = None) -> List[Row]:
+    tm = tm or time_model()
+    rows = []
+    for name, build in BENCHMARKS.items():
+        tile = max(1, n // 2)
+        eng1 = CMMEngine(c5_9xlarge(1), tm, tile=tile)
+        base = eng1.plan(build(n)).predicted_makespan
+        engN = CMMEngine(c5_9xlarge(nodes), tm, tile=tile)
+        plan = engN.plan(build(n))
+        obs = base / max(plan.predicted_makespan, 1e-12)
+        zc = simulate(plan.program.graph, plan.schedule, engN.spec, tm,
+                      zero_comm=True)
+        theo = base / max(zc.makespan, 1e-12)
+        rows.append(Row(name, obs, theo))
+    return rows
+
+
+def render(rows: List[Row]) -> str:
+    out = [f"{'bench':14s} {'observed':>9s} {'theoretical':>12s} {'frac':>6s}"]
+    for r in rows:
+        out.append(f"{r.name:14s} {r.observed:9.2f} {r.theoretical:12.2f} "
+                   f"{r.fraction*100:5.0f}%")
+    return "\n".join(out)
+
+
+def main(n: int = 512):
+    rows = run(n=n)
+    print(render(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Batched serving driver: continuous prefill + decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-8b --requests 6
+
+Uses the REDUCED config of the chosen architecture (CPU container); the
+same `prefill`/`decode_step` functions are what the dry-run lowers for the
+full configs on the production mesh.  Exercises:
+  * batched prefill of a request batch,
+  * greedy decode loop with the per-family cache (KV / ring+state / GLA),
+  * simple continuous-batching bookkeeping (per-sequence stop + stats).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_plan, get_reduced
+from repro.models import lm as M
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-8b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    plan = get_plan(args.arch, "decode_32k")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    print(f"serving {cfg.name} (reduced: {M.param_count(params)/1e3:.0f}k "
+          f"params), batch={args.requests}")
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab,
+                           (args.requests, args.prompt_len)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(prompts)}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(rng.standard_normal(
+            (args.requests, cfg.enc_frames, cfg.d_model)), jnp.float32)
+    if cfg.vision_patches:
+        batch["patches"] = jnp.asarray(rng.standard_normal(
+            (args.requests, cfg.vision_patches, cfg.d_model)), jnp.float32)
+
+    max_len = args.prompt_len + args.max_new + (cfg.vision_patches or 0)
+    prefill = jax.jit(make_prefill_step(cfg, plan, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg, plan))
+
+    t0 = time.perf_counter()
+    cache, logits, tok = prefill(params, batch)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {args.requests}x{args.prompt_len} tokens in "
+          f"{t_prefill*1e3:.0f} ms "
+          f"({args.requests*args.prompt_len/t_prefill:.0f} tok/s)")
+
+    eos = 0  # token 0 acts as EOS for the demo
+    done = np.zeros(args.requests, bool)
+    out_tokens = [np.asarray(tok)[:, 0]]
+    t0 = time.perf_counter()
+    steps = 0
+    for _ in range(args.max_new - 1):
+        cache, logits, tok = decode(params, cache, tok)
+        steps += 1
+        t = np.asarray(tok)[:, 0]
+        out_tokens.append(np.where(done, eos, t))
+        done |= (t == eos)
+        if done.all():
+            break
+    dt = time.perf_counter() - t0
+    gen = np.stack(out_tokens, 1)
+    print(f"decode: {steps} steps x {args.requests} seqs in {dt*1e3:.0f} ms "
+          f"({steps*args.requests/max(dt,1e-9):.0f} tok/s)")
+    for i in range(min(3, args.requests)):
+        print(f"  req{i}: prompt={prompts[i][:8].tolist()}... "
+              f"-> generated={gen[i][:12].tolist()}...")
+    print(f"cache position after serve: {int(cache['pos'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Checkpoint manager: save cadence, rotation, and restart orchestration.
+
+``maybe_restore`` is the restart entry point: it finds the newest intact
+checkpoint whose config hash matches, restores params/opt-state (re-sharded
+onto the *current* mesh — which may be smaller after a slice-down), and
+returns the step to resume from.  The data pipeline is counter-based
+(data/pipeline.py) so resuming at step N replays the exact stream.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+from .store import CheckpointStore, config_hash
+
+
+@dataclass
+class CheckpointPolicy:
+    every_steps: int = 100
+    keep: int = 3
+    async_save: bool = True
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, policy: CheckpointPolicy = None):
+        self.store = CheckpointStore(directory)
+        self.policy = policy or CheckpointPolicy()
+
+    def step_hook(self, step: int, params, opt_state, meta: dict):
+        if step % self.policy.every_steps:
+            return False
+        tree = {f"params/{k}": v for k, v in params.items()}
+        tree.update(_flatten_opt(opt_state))
+        if self.policy.async_save:
+            self.store.save_async(step, tree, meta)
+        else:
+            self.store.save(step, tree, meta)
+        self.store.rotate(self.policy.keep)
+        return True
+
+    def maybe_restore(self, cfg_obj, param_shardings=None,
+                      opt_shardings=None
+                      ) -> Optional[Tuple[int, Dict, Dict]]:
+        step = self.store.latest_step()
+        if step is None:
+            return None
+        man = self.store.manifest(step)
+        want = config_hash(cfg_obj)
+        got = man["meta"].get("config_hash")
+        if got is not None and got != want:
+            raise ValueError(
+                f"checkpoint config hash {got} != current {want}; refusing "
+                "to restore a mismatched architecture")
+        shardings = {}
+        if param_shardings:
+            shardings.update({f"params/{k}": v
+                              for k, v in param_shardings.items()})
+        if opt_shardings:
+            shardings.update(opt_shardings)
+        tree = self.store.restore(step, shardings=shardings or None)
+        params = {k[len("params/"):]: v for k, v in tree.items()
+                  if k.startswith("params/")}
+        opt = _unflatten_opt({k: v for k, v in tree.items()
+                              if not k.startswith("params/")})
+        self.store.wait()
+        return step, params, opt
+
+
+def _flatten_opt(opt_state: dict, prefix: str = "opt") -> Dict[str, Any]:
+    """Flatten the 2-level opt-state schema {top: {param_name: leaf}}.
+
+    Param names themselves contain '/', so structure uses '|' as the
+    separator: 'opt|m|layers/attn/wq', tuples as 'opt|f|name#i'.
+    """
+    out = {}
+    for k, v in opt_state.items():
+        key = f"{prefix}|{k}"
+        if isinstance(v, dict):
+            for pk, pv in v.items():
+                if isinstance(pv, tuple):
+                    for i, vi in enumerate(pv):
+                        out[f"{key}|{pk}#{i}"] = vi
+                else:
+                    out[f"{key}|{pk}"] = pv
+        else:
+            out[key] = v
+    return out
+
+
+def _unflatten_opt(flat: Dict[str, Any]) -> dict:
+    out: dict = {}
+    tuples: Dict[tuple, list] = {}
+    for k, v in sorted(flat.items()):
+        parts = k.split("|")
+        assert parts[0] == "opt"
+        if len(parts) == 2:
+            out[parts[1]] = v
+        else:
+            _, top, name = parts
+            if "#" in name:
+                base, idx = name.rsplit("#", 1)
+                tuples.setdefault((top, base), []).append((int(idx), v))
+            else:
+                out.setdefault(top, {})[name] = v
+    for (top, base), items in tuples.items():
+        items.sort()
+        out.setdefault(top, {})[base] = tuple(v for _, v in items)
+    return out

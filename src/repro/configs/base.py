@@ -1,0 +1,240 @@
+"""Config system: architectures, input-shape cells, and parallelism plans.
+
+``ModelConfig`` describes an architecture; ``ShapeCell`` one assigned input
+shape; ``ParallelPlan`` a sharding/microbatching layout.  The dry-run
+enumerates (arch x shape x mesh); the CMM-style autotuner picks plans by
+predicted cost (core/autotune.py + launch/roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0             # 0 -> d_model // n_heads
+    act: str = "silu"
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    pos: str = "rope"           # rope | sinusoidal
+    rope_theta: float = 1e6
+    tie_embeddings: bool = False
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    enc_layers: int = 0
+    enc_frames: int = 1500      # audio stub sequence length
+    # vlm (phi-3-vision)
+    vision_patches: int = 0     # patch-embedding stub tokens prepended
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity: float = 1.25
+    # ssm / hybrid
+    block: str = "attn"         # attn | mlstm | hymba
+    ssm_state: int = 0          # GLA key dim for mamba-style heads
+    window: int = 0             # sliding-window size for hybrid attention
+    slstm_every: int = 0        # xLSTM: optional sLSTM block cadence (tests)
+    # numerics
+    dtype: str = "bfloat16"
+    source: str = ""            # provenance note
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def vocab_padded(self, mult: int = 16) -> int:
+        return -(-self.vocab // mult) * mult
+
+    # -- parameter accounting (for 6ND MODEL_FLOPS) ------------------------
+    def param_counts(self) -> Dict[str, int]:
+        d, hd = self.d_model, self.head_dim
+        h, kv, ff = self.n_heads, self.n_kv, self.d_ff
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        if self.block == "mlstm":
+            # q/k/v/out + gates (see lm.py mlstm block)
+            per_layer = d * (2 * d) * 2 + 2 * d * (2 * d) + 2 * d * 2 * self.n_heads
+            per_layer += 2 * d
+        elif self.block == "hymba":
+            glah = self.n_heads
+            ssm = d * glah * self.ssm_state * 2 + d * glah * hd + glah * hd * d \
+                + d * glah
+            mlp = 3 * d * ff
+            per_layer = attn + ssm + mlp + 4 * d
+        elif self.is_moe:
+            ffe = ff  # for MoE archs d_ff is the per-expert width
+            moe = d * self.n_experts + self.n_experts * 3 * d * ffe
+            per_layer = attn + moe + 2 * d
+        else:
+            mlp = (3 if self.act == "silu" else 2) * d * ff
+            per_layer = attn + mlp + 2 * d
+        total = self.n_layers * per_layer
+        if self.enc_dec:
+            enc = self.enc_layers * (attn + 2 * d * ff + 2 * d)
+            dec_cross = self.n_layers * (attn + d)
+            total += enc + dec_cross
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        total += emb + d
+        if self.is_moe:
+            ffe = ff
+            active_moe = d * self.n_experts + self.top_k * 3 * d * ffe
+            mlp_full = self.n_experts * 3 * d * ffe + d * self.n_experts
+            active = total - self.n_layers * (mlp_full - active_moe)
+        else:
+            active = total
+        return {"total": int(total), "active": int(active)}
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str                   # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+#: archs whose attention is sub-quadratic / recurrent -> run long_500k
+LONG_CONTEXT_OK = {"xlstm-1.3b", "hymba-1.5b"}
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    """Sharding layout: logical-axis -> mesh-axis rules + step options.
+
+    Rules may name mesh axes that do not exist on a given mesh (e.g. 'pod'
+    on the single-pod mesh) — they are dropped at resolution time.  A rule
+    whose target does not evenly divide the dimension is dropped too (e.g.
+    20 heads on a 16-way 'model' axis), with the drop recorded.
+    """
+
+    name: str = "fsdp_tp"
+    rules: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+        ("batch", ("pod", "data")),
+        ("embed", ("data",)),       # FSDP (ZeRO-3) storage shard
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("head_dv", ()),            # xlstm: shard value head dim instead
+        ("ff", ("model",)),
+        ("vocab", ("model",)),
+        ("experts", ("model",)),
+        ("expert_ff", ()),
+        ("seq", ()),
+        ("seq_kv", ("model",)),   # decode KV-cache sequence sharding
+        ("seq_attn", ()),         # context parallelism: q-sequence on model
+        ("seq_act", ()),          # Megatron-SP: activations' seq on model
+        ("state", ()),
+        ("frames", ()),
+    )
+    microbatches: int = 1
+    remat: bool = True
+    #: kv cache layout for decode: auto | heads | seq | replicated
+    kv_shard: str = "auto"
+    #: gradient cross-replica reduction: psum | psum_scatter
+    grad_reduce: str = "psum"
+    #: optimizer: adamw | adafactor
+    optimizer: str = "adamw"
+    #: int8 gradient compression for the DP all-reduce
+    compress_grads: bool = False
+    #: KV-chunk size for the flash attention scan
+    attn_chunk: int = 1024
+    #: explicit sharding constraints on MoE dispatch/expert tensors
+    moe_constraints: bool = False
+    #: MoE execution: scatter (GSPMD) | expert_parallel (shard_map)
+    moe_impl: str = "scatter"
+    #: constrain accumulated grads to param sharding inside the micro loop
+    #: (forces reduce-scatter placement instead of all-reduce + slice)
+    grad_constraint: bool = False
+    #: all-gather FSDP-sharded weights ONCE per step (outside the microbatch
+    #: scan) and reuse across microbatches — the CMM node-level-cache insight;
+    #: costs model-sharded-only weight residency (fits when params/16 < HBM)
+    gather_once: bool = False
+
+    def rule(self, logical: str) -> Tuple[str, ...]:
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return ()
+
+    def with_rules(self, **updates) -> "ParallelPlan":
+        rules = tuple((k, tuple(updates.pop(k)) if k in updates else v)
+                      for k, v in self.rules)
+        if updates:
+            raise ValueError(f"unknown logical axes: {sorted(updates)}")
+        return replace(self, rules=rules)
+
+
+#: registry of assigned architectures
+ARCH_IDS: List[str] = [
+    "whisper-large-v3", "qwen1.5-4b", "qwen3-8b", "qwen2.5-32b",
+    "nemotron-4-340b", "phi-3-vision-4.2b", "xlstm-1.3b", "hymba-1.5b",
+    "qwen3-moe-235b-a22b", "olmoe-1b-7b",
+]
+
+_MODULES = {
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "qwen3-8b": "qwen3_8b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "hymba-1.5b": "hymba_1_5b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    """Smoke-test variant: same family/topology, tiny dims."""
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.reduced()
+
+
+def get_plan(arch: str, shape: str) -> ParallelPlan:
+    """Per-(arch, shape) tuned plan; configs may override `plan_overrides`."""
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    over = getattr(mod, "PLAN_OVERRIDES", {})
+    if shape in over:
+        return over[shape]
+    return over.get("default", ParallelPlan())
+
+
+def cells(arch: str) -> List[str]:
+    """Shape cells that apply to this arch (long_500k gating)."""
+    out = []
+    for s in SHAPES:
+        if s == "long_500k" and arch not in LONG_CONTEXT_OK:
+            continue
+        out.append(s)
+    return out

@@ -1,0 +1,30 @@
+"""hymba-1.5b — parallel attention + mamba heads per block
+[arXiv:2411.13676].
+
+Each block runs sliding-window GQA attention and mamba-style GLA heads in
+parallel on the same input; branch outputs are per-branch normalised and
+averaged (the paper's fusion), then an MLP sublayer follows.  Sliding
+window + SSM state keeps decode sub-quadratic -> long_500k runs.
+"""
+from .base import ModelConfig, ParallelPlan
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv=5, d_ff=5504,
+    vocab=32001, block="hymba", ssm_state=16, window=1024,
+    rope_theta=1e4,
+    source="arXiv:2411.13676",
+)
+
+
+def reduced() -> ModelConfig:
+    from dataclasses import replace
+    return replace(CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                   d_ff=160, vocab=512, window=16)
+
+
+PLAN_OVERRIDES = {
+    # 25 heads don't divide 16 -> heads rule auto-drops; ff/vocab TP only
+    "default": ParallelPlan(microbatches=2),
+    "train_4k": ParallelPlan(microbatches=8),
+}

@@ -1,0 +1,28 @@
+"""nemotron-4-340b — dense decoder, squared-ReLU MLP, GQA kv=8
+[arXiv:2402.16819].
+
+At 340B params on a 256-chip v5e pod, AdamW fp32 moments alone exceed HBM;
+the plan uses AdaFactor (factored second moment) — see EXPERIMENTS.md
+§Dry-run memory notes.
+"""
+from .base import ModelConfig, ParallelPlan
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b", family="dense",
+    n_layers=96, d_model=18432, n_heads=96, n_kv=8, d_ff=73728,
+    vocab=256000, act="squared_relu", rope_theta=1e4,
+    source="arXiv:2402.16819",
+)
+
+
+def reduced() -> ModelConfig:
+    from dataclasses import replace
+    return replace(CONFIG, n_layers=2, d_model=96, n_heads=6, n_kv=2,
+                   d_ff=384, vocab=512)
+
+
+PLAN_OVERRIDES = {
+    "default": ParallelPlan(microbatches=4, optimizer="adafactor"),
+    "train_4k": ParallelPlan(microbatches=16, optimizer="adafactor",
+                             grad_reduce="psum_scatter"),
+}

@@ -1,0 +1,22 @@
+"""olmoe-1b-7b — 64-expert top-8 MoE [arXiv:2409.02060]."""
+from .base import ModelConfig, ParallelPlan
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv=16, d_ff=1024,
+    vocab=50304, act="silu", qk_norm=True, rope_theta=1e4,
+    n_experts=64, top_k=8,
+    source="arXiv:2409.02060",
+)
+
+
+def reduced() -> ModelConfig:
+    from dataclasses import replace
+    return replace(CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv=4,
+                   d_ff=32, vocab=512, n_experts=8, top_k=2)
+
+
+PLAN_OVERRIDES = {
+    "default": ParallelPlan(microbatches=2, moe_impl="expert_parallel"),
+    "train_4k": ParallelPlan(microbatches=4, moe_impl="expert_parallel"),
+}

@@ -1,0 +1,27 @@
+"""phi-3-vision-4.2b — phi3-mini backbone + CLIP stub
+[hf:microsoft/Phi-3-vision-128k-instruct].
+
+The CLIP tower is a STUB: ``input_specs()`` provides precomputed
+(B, 576, d_model) patch embeddings, prepended to the token sequence
+(loss-masked).
+"""
+from .base import ModelConfig, ParallelPlan
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    n_layers=32, d_model=3072, n_heads=32, n_kv=32, d_ff=8192,
+    vocab=32064, act="silu", rope_theta=1e4, vision_patches=576,
+    source="hf:microsoft/Phi-3-vision-128k-instruct",
+)
+
+
+def reduced() -> ModelConfig:
+    from dataclasses import replace
+    return replace(CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv=4,
+                   d_ff=160, vocab=512, vision_patches=8)
+
+
+PLAN_OVERRIDES = {
+    "default": ParallelPlan(microbatches=2),
+    "train_4k": ParallelPlan(microbatches=8),
+}

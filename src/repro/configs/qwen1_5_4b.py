@@ -1,0 +1,24 @@
+"""qwen1.5-4b — dense decoder, QKV bias [hf:Qwen/Qwen1.5 family]."""
+from .base import ModelConfig, ParallelPlan
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b", family="dense",
+    n_layers=40, d_model=2560, n_heads=20, n_kv=20, d_ff=6912,
+    vocab=151936, act="silu", qkv_bias=True, rope_theta=1e6,
+    source="hf:Qwen/Qwen1.5-0.5B (scaled per assignment)",
+)
+
+
+def reduced() -> ModelConfig:
+    from dataclasses import replace
+    return replace(CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv=4,
+                   d_ff=160, vocab=512)
+
+
+PLAN_OVERRIDES = {
+    # indivisible heads (20 on 16) -> context parallelism (§Perf cell A)
+    "default": ParallelPlan(microbatches=2).with_rules(
+        seq_attn=("model",), seq_act=("model",)),
+    "train_4k": ParallelPlan(microbatches=8, gather_once=True).with_rules(
+        seq_attn=("model",), seq_act=("model",)),
+}

@@ -1,0 +1,24 @@
+"""qwen2.5-32b — dense decoder, GQA kv=8, QKV bias [hf:Qwen/Qwen2.5]."""
+from .base import ModelConfig, ParallelPlan
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv=8, d_ff=27648,
+    vocab=152064, act="silu", qkv_bias=True, rope_theta=1e6,
+    source="hf:Qwen/Qwen2.5-0.5B (scaled per assignment)",
+)
+
+
+def reduced() -> ModelConfig:
+    from dataclasses import replace
+    return replace(CONFIG, n_layers=2, d_model=80, n_heads=5, n_kv=1,
+                   d_ff=224, vocab=512)
+
+
+PLAN_OVERRIDES = {
+    # indivisible heads (20 on 16) -> context parallelism (§Perf cell A)
+    "default": ParallelPlan(microbatches=2).with_rules(
+        seq_attn=("model",), seq_act=("model",)),
+    "train_4k": ParallelPlan(microbatches=8, gather_once=True).with_rules(
+        seq_attn=("model",), seq_act=("model",)),
+}

@@ -1,0 +1,28 @@
+"""qwen3-moe-235b-a22b — 128-expert top-8 MoE [hf:Qwen/Qwen3 family].
+
+d_ff=1536 is the PER-EXPERT width (MoE convention in base.ModelConfig).
+Experts shard over the 16-way `model` axis (8 experts/device); the dispatch
+einsum lowers to all-to-all.
+"""
+from .base import ModelConfig, ParallelPlan
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv=4, d_ff=1536,
+    d_head=128, vocab=151936, act="silu", qk_norm=True, rope_theta=1e6,
+    n_experts=128, top_k=8,
+    source="hf:Qwen/Qwen3-30B-A3B (scaled per assignment)",
+)
+
+
+def reduced() -> ModelConfig:
+    from dataclasses import replace
+    return replace(CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                   d_head=16, d_ff=32, vocab=512, n_experts=8, top_k=2)
+
+
+PLAN_OVERRIDES = {
+    # shard_map expert parallelism (§Perf cell B: 3.0x step-bound win)
+    "default": ParallelPlan(microbatches=4, moe_impl="expert_parallel"),
+    "train_4k": ParallelPlan(microbatches=16, moe_impl="expert_parallel"),
+}

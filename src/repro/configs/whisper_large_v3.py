@@ -1,0 +1,30 @@
+"""whisper-large-v3 — encoder-decoder audio backbone [arXiv:2212.04356].
+
+The conv/mel frontend is a STUB: ``input_specs()`` feeds precomputed
+(B, 1500, d_model) frame embeddings to the encoder.
+"""
+from .base import ModelConfig, ParallelPlan
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="audio",
+    n_layers=32, d_model=1280, n_heads=20, n_kv=20, d_ff=5120,
+    vocab=51866, act="gelu", norm="layernorm", pos="sinusoidal",
+    qkv_bias=True, enc_dec=True, enc_layers=32, enc_frames=1500,
+    source="arXiv:2212.04356",
+)
+
+
+def reduced() -> ModelConfig:
+    from dataclasses import replace
+    return replace(CONFIG, n_layers=2, enc_layers=2, d_model=64, n_heads=4,
+                   n_kv=4, d_ff=128, vocab=512, enc_frames=16)
+
+
+PLAN_OVERRIDES = {
+    # 20 heads don't divide the 16-way model axis -> context parallelism:
+    # q-sequence + activation seq shard over `model` (see §Perf cell A).
+    "default": ParallelPlan(microbatches=4).with_rules(
+        seq_attn=("model",), seq_act=("model",)),
+    "train_4k": ParallelPlan(microbatches=8).with_rules(
+        seq_attn=("model",), seq_act=("model",)),
+}

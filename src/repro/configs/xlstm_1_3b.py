@@ -1,0 +1,29 @@
+"""xlstm-1.3b — mLSTM matrix-memory blocks [arXiv:2405.04517].
+
+The 1.3B config uses the mLSTM-dominant xLSTM[1:0] layout (all-mLSTM) so the
+layer stack scans uniformly; the sLSTM cell is implemented and unit-tested
+(``slstm_every`` mixes it in for tests).  d_ff=0 per assignment: the mLSTM
+block is the whole sublayer (2x up-projection, per-head gates, down-proj).
+Recurrent state means long_500k decode is O(1) in sequence length.
+"""
+from .base import ModelConfig, ParallelPlan
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv=4, d_ff=0,
+    vocab=50304, block="mlstm", pos="none",
+    source="arXiv:2405.04517",
+)
+
+
+def reduced() -> ModelConfig:
+    from dataclasses import replace
+    return replace(CONFIG, n_layers=2, d_model=64, n_heads=2, n_kv=2,
+                   vocab=512)
+
+
+PLAN_OVERRIDES = {
+    # 4 heads don't divide 16: shard the mLSTM value head-dim instead
+    "default": ParallelPlan(microbatches=2).with_rules(head_dv=("model",)),
+    "train_4k": ParallelPlan(microbatches=8).with_rules(head_dv=("model",)),
+}

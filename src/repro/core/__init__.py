@@ -1,0 +1,12 @@
+"""CMM core: the paper's contribution as a composable library."""
+from .lazy import ClusteredMatrix, Op, eager_eval, topo_order  # noqa: F401
+from .graph import Task, TaskGraph, TaskKind, TileRef          # noqa: F401
+from .tiling import tile_expression, TiledProgram              # noqa: F401
+from .machine import ClusterSpec, c5_9xlarge, tpu_v5e_pod      # noqa: F401
+from .timemodel import TimeModel, PolyModel, analytic_time_model  # noqa: F401
+from .profiler import profile_machine                          # noqa: F401
+from .cache import NodeCache                                   # noqa: F401
+from .heft import heft_schedule, Schedule                      # noqa: F401
+from .simulator import simulate, SimResult                     # noqa: F401
+from .engine import CMMEngine, Plan                            # noqa: F401
+from .autotune import tune_tile, argmin_search, tile_candidates  # noqa: F401

@@ -1,0 +1,52 @@
+"""Simulation-driven configuration search (CMM §3.3 generalised).
+
+The paper picks tile sizes by simulating candidate schedules under the time
+model and taking the argmin makespan.  This module keeps that loop generic so
+the same machinery tunes (a) matrix tile sizes for the CMM engine and (b)
+layout/microbatch candidates for the LM stack (where the "simulator" is the
+roofline model over the compiled dry-run — see launch/roofline.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Generic, Iterable, List, Sequence, Tuple, TypeVar
+
+C = TypeVar("C")
+
+
+@dataclass
+class TuneResult(Generic[C]):
+    best: C
+    scores: List[Tuple[C, float]]  # (candidate, predicted cost), sorted asc
+
+    def table(self) -> str:
+        rows = [f"  {c!r:>24} -> {s:.6f}" for c, s in self.scores]
+        return "\n".join(rows)
+
+
+def argmin_search(candidates: Iterable[C],
+                  cost_fn: Callable[[C], float]) -> TuneResult:
+    scored = [(c, float(cost_fn(c))) for c in candidates]
+    scored.sort(key=lambda cs: cs[1])
+    if not scored:
+        raise ValueError("no candidates")
+    return TuneResult(scored[0][0], scored)
+
+
+def tile_candidates(dim: int, granularity: int = 10) -> List[int]:
+    """Paper-style candidate grid: dim/10, 3dim/10, 5dim/10, 7dim/10 (+full)."""
+    fracs = [1, 3, 5, 7]
+    cands = sorted({max(1, dim * f // granularity) for f in fracs})
+    if dim not in cands:
+        cands.append(dim)
+    return cands
+
+
+def tune_tile(engine, root, candidates: Sequence[int] = None) -> TuneResult:
+    """Tile-size selection by simulated makespan (the §3.3 loop)."""
+    from .lazy import topo_order
+    if candidates is None:
+        dim = max(max(n.shape) for n in topo_order(root))
+        candidates = tile_candidates(dim)
+    return argmin_search(candidates,
+                         lambda t: engine.plan(root, tile=t).predicted_makespan)

@@ -1,0 +1,66 @@
+"""Node-level cache (CMM §3.5).
+
+When a tile produced on node A is consumed on node B, the transferred copy is
+kept in B's main memory.  Subsequent consumers of the *same tile version* on B
+incur zero communication.  A tile version is identified by the producer task
+id — accumulation chains (addmul) create a new version per step, so stale
+partial sums are never reused.
+
+An optional byte-capacity turns the cache into an LRU (the paper's cache is
+unbounded main memory; capacity is exposed for experiments).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Hashable, Optional, Tuple
+
+Key = Tuple[int, int]  # (producer task id, tile tensor uid) — see heft.py
+
+
+class NodeCache:
+    def __init__(self, n_nodes: int, capacity_bytes: Optional[int] = None):
+        self.n_nodes = n_nodes
+        self.capacity = capacity_bytes
+        self._c: Dict[int, OrderedDict] = {n: OrderedDict()
+                                           for n in range(n_nodes)}
+        self.hits = 0
+        self.misses = 0
+
+    def has(self, node: int, key: Hashable) -> bool:
+        c = self._c[node]
+        if key in c:
+            c.move_to_end(key)
+            self.hits += 1
+            return True
+        self.misses += 1
+        return False
+
+    def peek(self, node: int, key: Hashable) -> bool:
+        """has() without touching hit/miss counters or LRU order."""
+        return key in self._c[node]
+
+    def put(self, node: int, key: Hashable, nbytes: int = 0):
+        c = self._c[node]
+        c[key] = nbytes
+        c.move_to_end(key)
+        if self.capacity is not None:
+            total = sum(c.values())
+            while total > self.capacity and len(c) > 1:
+                _, evicted = c.popitem(last=False)
+                total -= evicted
+
+    def invalidate(self, key: Hashable):
+        for c in self._c.values():
+            c.pop(key, None)
+
+    def bytes_at(self, node: int) -> int:
+        return sum(self._c[node].values())
+
+    def snapshot(self) -> Dict[int, int]:
+        return {n: len(c) for n, c in self._c.items()}
+
+    def clone(self) -> "NodeCache":
+        nc = NodeCache(self.n_nodes, self.capacity)
+        for n, c in self._c.items():
+            nc._c[n] = OrderedDict(c)
+        return nc

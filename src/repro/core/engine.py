@@ -1,0 +1,126 @@
+"""CMM engine: expression -> tiled DAG -> HEFT schedule -> simulation -> run.
+
+This is the user-facing orchestration layer (Fig. 1 of the paper): a
+``ClusteredMatrix.compute()`` lands here.  The engine
+
+1. tiles the expression (``tiling.tile_expression``) at the configured or
+   auto-selected tile size (§3.3),
+2. schedules with cache-aware HEFT under the offline-profiled time model,
+3. simulates the schedule (the ~0.1 s check the paper runs before execution),
+4. executes with the selected executor (local threaded / Pallas-kernel /
+   sharded SUMMA) and returns the materialised ndarray.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import TaskGraph
+from .heft import Schedule, heft_schedule, register_fill_origin
+from .lazy import ClusteredMatrix, Op, topo_order
+from .machine import ClusterSpec, c5_9xlarge
+from .simulator import SimResult, simulate
+from .tiling import TiledProgram, normalize_tile, tile_expression
+from .timemodel import TimeModel, analytic_time_model
+
+
+@dataclass
+class Plan:
+    program: TiledProgram
+    schedule: Schedule
+    sim: SimResult
+    tile: Tuple[int, int]
+    plan_seconds: float
+
+    @property
+    def predicted_makespan(self) -> float:
+        return self.sim.makespan
+
+
+class CMMEngine:
+    _default: Optional["CMMEngine"] = None
+
+    def __init__(self, spec: Optional[ClusterSpec] = None,
+                 timemodel: Optional[TimeModel] = None,
+                 tile: Optional[int] = None,
+                 cache_aware: bool = True):
+        self.spec = spec or c5_9xlarge(1)
+        self.timemodel = timemodel or analytic_time_model()
+        self.tile = tile
+        self.cache_aware = cache_aware
+
+    @classmethod
+    def default(cls) -> "CMMEngine":
+        if cls._default is None:
+            cls._default = CMMEngine()
+        return cls._default
+
+    # -- planning -----------------------------------------------------------
+    def _fill_origins(self, root: ClusteredMatrix) -> Dict[int, str]:
+        out = {}
+        for node in topo_order(root):
+            if node.op is Op.INPUT:
+                out[node.uid] = "master"     # user data lives on the master
+            elif node.op in (Op.RANDOM, Op.ZEROS, Op.EYE):
+                out[node.uid] = "local"      # generated in place (§3.3)
+        return out
+
+    def plan(self, root: ClusteredMatrix, tile=None) -> Plan:
+        t0 = time.perf_counter()
+        tile = normalize_tile(tile or self.tile or self._default_tile(root))
+        prog = tile_expression(root, tile)
+        register_fill_origin(self._fill_origins(root))
+        sched = heft_schedule(prog.graph, self.spec, self.timemodel,
+                              cache_aware=self.cache_aware)
+        sim = simulate(prog.graph, sched, self.spec, self.timemodel)
+        return Plan(prog, sched, sim, tile, time.perf_counter() - t0)
+
+    def _default_tile(self, root: ClusteredMatrix) -> int:
+        # paper finding: tile ~ n/2 is best for n=10k on 8 nodes (§3.3);
+        # fall back to half the largest dimension.
+        dim = max(max(n.shape) for n in topo_order(root))
+        return max(1, dim // 2)
+
+    def autotune_tile(self, root: ClusteredMatrix,
+                      candidates: Sequence[int]) -> Tuple[int, Dict[int, float]]:
+        """§3.3: pick the tile size with the best *simulated* makespan."""
+        scores: Dict[int, float] = {}
+        for c in candidates:
+            scores[c] = self.plan(root, tile=c).predicted_makespan
+        best = min(scores, key=lambda k: (scores[k], k))
+        return best, scores
+
+    # -- execution ------------------------------------------------------------
+    def run(self, root: ClusteredMatrix, tile=None, executor: str = "local",
+            validate: bool = False, plan: Optional[Plan] = None,
+            **exec_kw) -> np.ndarray:
+        plan = plan or self.plan(root, tile=tile)
+        if executor == "local":
+            from ..exec.local import LocalExecutor
+            ex = LocalExecutor(**exec_kw)
+        elif executor == "kernel":
+            from ..exec.local import LocalExecutor
+            ex = LocalExecutor(use_pallas=True, **exec_kw)
+        else:
+            raise ValueError(f"unknown executor {executor!r}")
+        out = ex.execute(plan)
+        if validate:
+            ref = root.eager()
+            np.testing.assert_allclose(out, ref, rtol=1e-8, atol=1e-8)
+        return out
+
+    def theoretical_speedup(self, root: ClusteredMatrix, tile=None,
+                            n_nodes: Optional[int] = None) -> float:
+        """Table 4: zero-communication simulated speedup vs one node."""
+        spec_n = self.spec if n_nodes is None else self.spec.with_nodes(n_nodes)
+        eng_n = CMMEngine(spec_n, self.timemodel, cache_aware=self.cache_aware)
+        plan_n = eng_n.plan(root, tile=tile)
+        zc = simulate(plan_n.program.graph, plan_n.schedule, spec_n,
+                      self.timemodel, zero_comm=True)
+        eng_1 = CMMEngine(self.spec.with_nodes(1), self.timemodel,
+                          cache_aware=self.cache_aware)
+        plan_1 = eng_1.plan(root, tile=tile)
+        return plan_1.sim.makespan / max(zc.makespan, 1e-12)

@@ -1,0 +1,181 @@
+"""Tiled task-dependency graph (CMM §3.1–3.2).
+
+Task classification follows the paper exactly:
+
+* ``calloc``  — allocation + zero-init of an output tile (paper merged
+  malloc+fillzero into one async calloc task, §3.3);
+* ``fill``    — materialise an input tile (data fill, scheduled just before
+  first use, §3.3);
+* ``addmul``  — tiled GEMM-accumulate ``C_ij += A_ik @ B_kj`` (the hot task);
+* ``sub``     — tiled subtraction (paper's ``sub!``); add/ewise/scale kept as
+  separate kinds with the same cost-model family;
+* ``takecopy``— copy a result tile from its worker to the master node;
+* ``send``/``recv`` — communication tasks, created by the scheduler when an
+  edge crosses nodes (they are not part of the logical DAG).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+
+class TaskKind(enum.Enum):
+    CALLOC = "calloc"
+    FILL = "fill"
+    ADDMUL = "addmul"
+    MATMUL = "matmul"      # first k-step of an accumulate chain (C = A@B)
+    ADD = "add"
+    SUB = "sub"
+    EWMUL = "ewmul"
+    SCALE = "scale"
+    EWISE = "ewise"
+    TRANSPOSE = "transpose"
+    TAKECOPY = "takecopy"
+    SEND = "send"
+    RECV = "recv"
+
+
+#: kinds that do arithmetic (appear in the compute time model)
+COMPUTE_KINDS = {
+    TaskKind.ADDMUL, TaskKind.MATMUL, TaskKind.ADD, TaskKind.SUB,
+    TaskKind.EWMUL, TaskKind.SCALE, TaskKind.EWISE, TaskKind.TRANSPOSE,
+}
+
+
+@dataclass(frozen=True)
+class TileRef:
+    """Identity of one tile of one logical tensor.
+
+    ``tensor`` is the ClusteredMatrix uid (or a synthesised uid for
+    intermediates); ``(i, j)`` the tile grid coordinate; ``shape`` the actual
+    tile shape (edge tiles may be ragged, Listing 1 uses ``min`` bounds).
+    """
+
+    tensor: int
+    i: int
+    j: int
+    shape: Tuple[int, int]
+
+    @property
+    def bytes(self) -> int:
+        return self.shape[0] * self.shape[1] * 8  # f64 default accounting
+
+    def __repr__(self):
+        return f"T{self.tensor}[{self.i},{self.j}]{self.shape}"
+
+
+@dataclass
+class Task:
+    tid: int
+    kind: TaskKind
+    #: input tiles (data operands); order matters (addmul: A_ik, B_kj)
+    ins: Tuple[TileRef, ...]
+    #: output tile
+    out: Optional[TileRef]
+    #: op-specific payload (ewise fn name, scale (kind, s), leaf node uid…)
+    payload: object = None
+    preds: Set[int] = field(default_factory=set)
+    succs: Set[int] = field(default_factory=set)
+    #: floating point ops (for the time model / GFLOPS accounting)
+    flops: int = 0
+
+    def dims(self) -> Tuple[int, ...]:
+        """Operand dims fed to the Table-1 interpolation equations."""
+        if self.kind in (TaskKind.ADDMUL, TaskKind.MATMUL):
+            (m, n) = self.ins[0].shape
+            k = self.ins[1].shape[1]
+            return (m, n, k)
+        shp = (self.out.shape if self.out is not None else self.ins[0].shape)
+        return shp
+
+    @property
+    def out_bytes(self) -> int:
+        return self.out.bytes if self.out is not None else 0
+
+    def __repr__(self):
+        return (f"Task#{self.tid}:{self.kind.value}"
+                f"({','.join(map(repr, self.ins))})->{self.out}")
+
+
+class TaskGraph:
+    """A DAG of tiled tasks with dependency edges."""
+
+    def __init__(self):
+        self.tasks: Dict[int, Task] = {}
+        self._next = 0
+        #: tiles of the final result, in (i, j) grid order
+        self.result_tiles: List[TileRef] = []
+        self.result_grid: Tuple[int, int] = (0, 0)
+        self.result_shape: Tuple[int, int] = (0, 0)
+
+    # -- construction ------------------------------------------------------
+    def add(self, kind: TaskKind, ins: Sequence[TileRef],
+            out: Optional[TileRef], payload=None, flops: int = 0,
+            deps: Iterable[int] = ()) -> Task:
+        t = Task(self._next, kind, tuple(ins), out, payload, flops=flops)
+        self._next += 1
+        self.tasks[t.tid] = t
+        for d in deps:
+            self.add_edge(d, t.tid)
+        return t
+
+    def add_edge(self, u: int, v: int):
+        if u == v:
+            raise ValueError("self-edge")
+        self.tasks[u].succs.add(v)
+        self.tasks[v].preds.add(u)
+
+    # -- queries -------------------------------------------------------------
+    def __len__(self):
+        return len(self.tasks)
+
+    def __iter__(self):
+        return iter(self.tasks.values())
+
+    def sources(self) -> List[Task]:
+        return [t for t in self.tasks.values() if not t.preds]
+
+    def sinks(self) -> List[Task]:
+        return [t for t in self.tasks.values() if not t.succs]
+
+    def topo(self) -> List[Task]:
+        """Kahn topological order; raises on cycles."""
+        indeg = {tid: len(t.preds) for tid, t in self.tasks.items()}
+        ready = sorted(tid for tid, d in indeg.items() if d == 0)
+        out: List[Task] = []
+        import heapq
+        heapq.heapify(ready)
+        while ready:
+            tid = heapq.heappop(ready)
+            out.append(self.tasks[tid])
+            for s in sorted(self.tasks[tid].succs):
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    heapq.heappush(ready, s)
+        if len(out) != len(self.tasks):
+            raise ValueError("task graph has a cycle")
+        return out
+
+    def validate(self):
+        """Structural invariants (used by property tests)."""
+        for t in self.tasks.values():
+            for p in t.preds:
+                assert t.tid in self.tasks[p].succs, "edge asymmetry"
+            for s in t.succs:
+                assert t.tid in self.tasks[s].preds, "edge asymmetry"
+            if t.kind in (TaskKind.ADDMUL, TaskKind.MATMUL):
+                (m, n) = t.ins[0].shape
+                (n2, k) = t.ins[1].shape
+                assert n == n2, f"inner dim mismatch in {t}"
+                assert t.out.shape == (m, k), f"out shape mismatch in {t}"
+        self.topo()  # raises on cycle
+
+    def counts(self) -> Dict[str, int]:
+        c: Dict[str, int] = {}
+        for t in self.tasks.values():
+            c[t.kind.value] = c.get(t.kind.value, 0) + 1
+        return c
+
+    def total_flops(self) -> int:
+        return sum(t.flops for t in self.tasks.values())

@@ -1,0 +1,304 @@
+"""Cache-aware modified HEFT scheduler (CMM §3.6).
+
+Two phases, as in the original HEFT:
+
+1. *Ranking* — tasks are recursively ranked by upward rank
+   ``rank_u(t) = w_avg(t) + max_succ (c_avg(t, s) + rank_u(s))`` using the
+   profiled time model for ``w`` and the per-pair link model for ``c``.
+2. *Placement* — in decreasing rank order, each task is assigned to the
+   (node, worker-process) slot with the earliest finish time, with an
+   insertion policy over per-slot busy intervals.
+
+CMM modifications implemented here:
+
+* **node-level cache** (§3.5): the communication cost of an edge is zero when
+  the consumer's node already holds that tile version; the cache is updated
+  *during* scheduling, so later placement decisions see earlier transfers.
+* **per-pair connection speeds** (§3.4): comm costs come from
+  ``spec.bandwidth(a, b)``.
+* **pinning**: ``takecopy`` runs on the master; ``fill`` of user-supplied
+  (INPUT) data originates on the master (the initial master->worker comm
+  phase visible in Fig. 3); generated data (RANDOM/ZEROS/EYE) fills locally
+  on whichever node the scheduler picks (§3.3 optimisation).
+* ``calloc`` is free-placed and cheap (async in the engine; §3.3).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .cache import NodeCache
+from .graph import Task, TaskGraph, TaskKind
+from .machine import ClusterSpec
+from .timemodel import TimeModel
+
+
+@dataclass
+class Placement:
+    node: int
+    slot: int
+    start: float
+    finish: float
+
+
+@dataclass
+class CommEvent:
+    """A cross-node transfer committed during scheduling."""
+
+    src_task: int
+    dst_task: int
+    src: int
+    dst: int
+    nbytes: int
+    cached: bool  # True -> satisfied by node-level cache (no transfer)
+
+
+@dataclass
+class Schedule:
+    placements: Dict[int, Placement]
+    order: List[int]                      # rank order (scheduling priority)
+    comms: List[CommEvent]
+    makespan: float
+    cache_hits: int
+    cache_misses: int
+
+    def node_of(self, tid: int) -> int:
+        return self.placements[tid].node
+
+
+def edge_bytes(g: TaskGraph, u: Task, v: Task) -> int:
+    """Bytes flowing along dependency edge u->v.
+
+    u's output tile is data for v if v reads it (in ``v.ins``) or if v
+    accumulates into the same tile (addmul chains share ``out``).  Pure
+    ordering edges carry no data.
+    """
+    if u.out is None:
+        return 0
+    if u.out in v.ins:
+        return u.out.bytes
+    if v.out is not None and u.out == v.out:
+        return u.out.bytes
+    return 0
+
+
+def _avg_comm(nbytes: int, spec: ClusterSpec) -> float:
+    if spec.n_nodes <= 1 or nbytes == 0:
+        return 0.0
+    frac = (spec.n_nodes - 1) / spec.n_nodes
+    return frac * spec.comm_time(nbytes, 0, 1 if spec.n_nodes > 1 else 0)
+
+
+def upward_rank(g: TaskGraph, spec: ClusterSpec,
+                tm: TimeModel) -> Dict[int, float]:
+    rank: Dict[int, float] = {}
+    w: Dict[int, float] = {}
+    for t in g:
+        if t.kind is TaskKind.CALLOC:
+            w[t.tid] = 1e-6  # async, near-free (§3.3)
+        else:
+            costs = [tm.compute_time(t, spec, n) for n in range(spec.n_nodes)]
+            w[t.tid] = sum(costs) / len(costs)
+    for t in reversed(g.topo()):
+        best = 0.0
+        for s in t.succs:
+            st = g.tasks[s]
+            c = _avg_comm(edge_bytes(g, t, st), spec)
+            best = max(best, c + rank[s])
+        rank[t.tid] = w[t.tid] + best
+    return rank
+
+
+class _SlotTimeline:
+    """Busy intervals of one worker-process slot, for insertion policy."""
+
+    __slots__ = ("iv",)
+
+    def __init__(self):
+        self.iv: List[Tuple[float, float]] = []
+
+    def earliest(self, ready: float, dur: float) -> float:
+        t = ready
+        for (s, e) in self.iv:
+            if t + dur <= s:
+                break
+            t = max(t, e)
+        return t
+
+    def insert(self, start: float, dur: float):
+        import bisect
+        bisect.insort(self.iv, (start, start + dur))
+
+
+def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
+                  cache: Optional[NodeCache] = None,
+                  cache_aware: bool = True,
+                  lazy_fill: bool = True) -> Schedule:
+    """Schedule ``g`` on ``spec`` under time model ``tm``.
+
+    ``cache_aware=False`` disables the node-level-cache modification (the
+    vanilla-HEFT ablation baseline).
+
+    ``lazy_fill=True`` implements the paper's §3.3 optimisation: data fills
+    of *generated* inputs are NOT ranked/placed independently (which
+    scatters tiles across nodes and forces large transfers); instead a fill
+    is placed on the node of its first-scheduled consumer, just before that
+    consumer runs ("initialize the tiles when they are allocated to the
+    respective nodes ... schedule the data fill only right before the first
+    tasks are executed").  Later consumers on other nodes pay the normal
+    (cache-aware) transfer.
+    """
+    rank = upward_rank(g, spec, tm)
+    cache = cache if cache is not None else NodeCache(spec.n_nodes)
+
+    def is_lazy(t: Task) -> bool:
+        if not lazy_fill or t.kind is not TaskKind.FILL:
+            return False
+        origin = _FILL_ORIGIN.get(t.payload)
+        return origin != "master"   # master-resident INPUT data stays pinned
+
+    order_all = sorted(g.tasks, key=lambda tid: (-rank[tid], tid))
+    order = [tid for tid in order_all if not is_lazy(g.tasks[tid])]
+
+    slots = {n: [_SlotTimeline() for _ in range(spec.worker_procs)]
+             for n in range(spec.n_nodes)}
+    placements: Dict[int, Placement] = {}
+    comms: List[CommEvent] = []
+
+    def allowed_nodes(t: Task) -> Sequence[int]:
+        if t.kind is TaskKind.TAKECOPY:
+            return (spec.master,)
+        if t.kind is TaskKind.FILL and isinstance(t.payload, int):
+            origin = _FILL_ORIGIN.get(t.payload)
+            if origin == "master":
+                return (spec.master,)
+        return range(spec.n_nodes)
+
+    def commit(tid: int, node: int, si: int, st: float, eft: float,
+               transfers) -> None:
+        t = g.tasks[tid]
+        slots[node][si].insert(st, eft - st)
+        placements[tid] = Placement(node, si, st, eft)
+        for (p, src, nbytes, hit) in transfers:
+            key = (p, g.tasks[p].out.tensor)
+            comms.append(CommEvent(p, tid, src, node, nbytes, hit))
+            if hit:
+                cache.hits += 1
+            else:
+                cache.misses += 1
+                if cache_aware:
+                    cache.put(node, key, nbytes)
+        if t.out is not None:
+            cache.put(node, (tid, t.out.tensor), t.out.bytes)
+
+    def place_fill_on(fid: int, node: int) -> float:
+        """Place a lazy fill on `node` at its earliest slot; returns EFT."""
+        ft = g.tasks[fid]
+        dur = tm.compute_time(ft, spec, node)
+        best = None
+        for si, sl in enumerate(slots[node]):
+            st = sl.earliest(0.0, dur)
+            if best is None or st + dur < best[0]:
+                best = (st + dur, si, st)
+        eft, si, st = best
+        commit(fid, node, si, st, eft, [])
+        return eft
+
+    def fill_eft_estimate(fid: int, node: int) -> float:
+        ft = g.tasks[fid]
+        dur = tm.compute_time(ft, spec, node)
+        return min(sl.earliest(0.0, dur) + dur for sl in slots[node])
+
+    def eval_on_node(t: Task, node: int, dur: float):
+        """(eft, slot, start, transfers, lazy_fills, regen_fills)."""
+        ready = 0.0
+        transfers = []
+        lazy_here = []
+        regen_here = []
+        for p in t.preds:
+            pt = g.tasks[p]
+            if p not in placements:
+                # unplaced lazy fill: generated locally on this node
+                assert is_lazy(pt), f"unplaced non-lazy pred {pt}"
+                arr = fill_eft_estimate(p, node)
+                lazy_here.append(p)
+                ready = max(ready, arr)
+                continue
+            pp = placements[p]
+            nbytes = edge_bytes(g, pt, t)
+            arr = pp.finish
+            if nbytes and pp.node != node:
+                key = (p, pt.out.tensor)
+                hit = cache_aware and cache.peek(node, key)
+                if not hit:
+                    arr_x = pp.finish + spec.comm_time(nbytes, pp.node,
+                                                       node)
+                    if is_lazy(pt):
+                        # generated data is a pure function of (seed, tile):
+                        # regenerating locally can beat transferring
+                        # (§3.3 local initialisation)
+                        arr_r = fill_eft_estimate(p, node)
+                        if arr_r < arr_x:
+                            regen_here.append(p)
+                            ready = max(ready, arr_r)
+                            continue
+                    arr = arr_x
+                transfers.append((p, pp.node, nbytes, hit))
+            ready = max(ready, arr)
+        best = None
+        for si, sl in enumerate(slots[node]):
+            st = sl.earliest(ready, dur)
+            if best is None or st + dur < best[0]:
+                best = (st + dur, si, st)
+        eft, si, st = best
+        return eft, si, st, transfers, lazy_here, regen_here
+
+    for tid in order:
+        t = g.tasks[tid]
+
+        best = None  # (eft, node, dur)
+        for node in allowed_nodes(t):
+            dur = (1e-6 if t.kind is TaskKind.CALLOC
+                   else tm.compute_time(t, spec, node))
+            eft, *_ = eval_on_node(t, node, dur)
+            if best is None or eft < best[0] - 1e-15 or \
+                    (abs(eft - best[0]) <= 1e-15 and node < best[1]):
+                best = (eft, node, dur)
+
+        _, node, dur = best
+        # commit this node: place lazy/regenerated fills FIRST, then
+        # re-evaluate so the consumer's slot fit sees the fills' intervals
+        _, _, _, _, lazy_here, regen_here = eval_on_node(t, node, dur)
+        for fid in lazy_here:
+            place_fill_on(fid, node)
+        for fid in regen_here:
+            ft = g.tasks[fid]
+            clone = g.add(TaskKind.FILL, (), ft.out, payload=ft.payload)
+            g.tasks[fid].succs.discard(tid)
+            t.preds.discard(fid)
+            g.add_edge(clone.tid, tid)
+            place_fill_on(clone.tid, node)
+        eft, si, st, transfers, lazy2, regen2 = eval_on_node(t, node, dur)
+        assert not lazy2 and not regen2
+        commit(tid, node, si, st, eft, transfers)
+
+    # any fill no consumer reached (dead code in the expression) — place it
+    for tid in order_all:
+        if tid not in placements:
+            place_fill_on(tid, spec.master)
+
+    final_order = sorted(placements, key=lambda x: (placements[x].start, x))
+    makespan = max((p.finish for p in placements.values()), default=0.0)
+    return Schedule(placements, final_order, comms, makespan,
+                    cache.hits, cache.misses)
+
+
+#: expr-node uid -> "master" | "local"; registered by the engine before
+#: scheduling (INPUT leaves are master-resident, generated leaves local).
+_FILL_ORIGIN: Dict[int, str] = {}
+
+
+def register_fill_origin(mapping: Dict[int, str]):
+    _FILL_ORIGIN.clear()
+    _FILL_ORIGIN.update(mapping)

@@ -1,0 +1,267 @@
+"""ClusteredMatrix: the paper's lazy matrix type (CMM §3, Fig. 2).
+
+User-level matrix expressions build an expression DAG instead of evaluating
+eagerly.  ``compute()`` hands the DAG to the engine, which tiles it into a
+task-dependency graph, schedules it with cache-aware HEFT, simulates the
+schedule, and executes it.
+
+The type mirrors the paper's Julia ``ClusteredMatrix``: every object has a
+unique id, represents a node in the expression graph, and carries shape/dtype
+metadata only — no data until materialisation (inputs hold their generator).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class Op(enum.Enum):
+    """Expression-level operators (pre-tiling)."""
+
+    INPUT = "input"          # materialised data supplied by the user
+    RANDOM = "random"        # random matrix generated from dims (paper's P, u)
+    ZEROS = "zeros"
+    EYE = "eye"
+    ADD = "add"
+    SUB = "sub"
+    MATMUL = "matmul"        # the paper's ``x`` on (m,n)x(n,k)
+    EWMUL = "ewmul"          # Hadamard
+    SCALE = "scale"          # matrix (+,-,x,/) scalar — Table 1 row 4
+    EWISE = "ewise"          # unary sin/cos/... — Table 1 row 3
+    TRANSPOSE = "transpose"
+
+
+#: unary elementwise functions supported by Op.EWISE (Table 1 row 3)
+EWISE_FNS = {
+    "sin": np.sin,
+    "cos": np.cos,
+    "exp": np.exp,
+    "tanh": np.tanh,
+    "abs": np.abs,
+    "relu": lambda x: np.maximum(x, 0.0),
+    "sqrt": np.sqrt,
+    "sign": np.sign,
+}
+
+_id_counter = itertools.count()
+_id_lock = threading.Lock()
+
+
+def _next_id() -> int:
+    with _id_lock:
+        return next(_id_counter)
+
+
+@dataclass
+class ClusteredMatrix:
+    """A lazy 2-D matrix expression node (CMM's ClusteredMatrix)."""
+
+    op: Op
+    shape: Tuple[int, int]
+    dtype: np.dtype = field(default_factory=lambda: np.dtype(np.float64))
+    parents: Tuple["ClusteredMatrix", ...] = ()
+    #: op-specific payload: ndarray for INPUT, seed for RANDOM, fn name for
+    #: EWISE, float for SCALE (+ the scalar op kind).
+    payload: object = None
+    name: str = ""
+    uid: int = field(default_factory=_next_id)
+
+    # -- constructors -----------------------------------------------------
+    @staticmethod
+    def from_array(a, name: str = "") -> "ClusteredMatrix":
+        a = np.asarray(a)
+        if a.ndim == 1:
+            a = a.reshape(-1, 1)
+        if a.ndim != 2:
+            raise ValueError(f"ClusteredMatrix is 2-D, got shape {a.shape}")
+        return ClusteredMatrix(Op.INPUT, a.shape, a.dtype, payload=a, name=name)
+
+    @staticmethod
+    def rand(m: int, n: int, seed: int = 0, dtype=np.float64,
+             name: str = "") -> "ClusteredMatrix":
+        return ClusteredMatrix(Op.RANDOM, (m, n), np.dtype(dtype),
+                               payload=int(seed), name=name)
+
+    @staticmethod
+    def zeros(m: int, n: int, dtype=np.float64, name: str = "") -> "ClusteredMatrix":
+        return ClusteredMatrix(Op.ZEROS, (m, n), np.dtype(dtype), name=name)
+
+    @staticmethod
+    def eye(n: int, dtype=np.float64, name: str = "") -> "ClusteredMatrix":
+        return ClusteredMatrix(Op.EYE, (n, n), np.dtype(dtype), name=name)
+
+    # -- metadata ----------------------------------------------------------
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    def _binop(self, other: "ClusteredMatrix", op: Op) -> "ClusteredMatrix":
+        if not isinstance(other, ClusteredMatrix):
+            # scalar broadcast (Table 1 row 4)
+            return ClusteredMatrix(Op.SCALE, self.shape, self.dtype,
+                                   parents=(self,),
+                                   payload=(op.value, float(other)))
+        if op in (Op.ADD, Op.SUB, Op.EWMUL) and self.shape != other.shape:
+            raise ValueError(f"shape mismatch {self.shape} vs {other.shape}")
+        dtype = np.promote_types(self.dtype, other.dtype)
+        return ClusteredMatrix(op, self.shape, dtype, parents=(self, other))
+
+    # -- operators ----------------------------------------------------------
+    def __add__(self, other):
+        return self._binop(other, Op.ADD)
+
+    def __radd__(self, other):
+        return self._binop(other, Op.ADD)
+
+    def __sub__(self, other):
+        return self._binop(other, Op.SUB)
+
+    def __mul__(self, other):
+        """Paper semantics: ``x`` between matrices is matmul; with a scalar,
+        elementwise scale (Table 1 rows 1/4/6)."""
+        if isinstance(other, ClusteredMatrix):
+            return self.__matmul__(other)
+        return self._binop(other, Op.SCALE)
+
+    def __rmul__(self, other):
+        return self._binop(other, Op.SCALE)
+
+    def __truediv__(self, other):
+        if isinstance(other, ClusteredMatrix):
+            raise TypeError("matrix / matrix is not a CMM operator")
+        return ClusteredMatrix(Op.SCALE, self.shape, self.dtype,
+                               parents=(self,), payload=("div", float(other)))
+
+    def __matmul__(self, other: "ClusteredMatrix") -> "ClusteredMatrix":
+        if not isinstance(other, ClusteredMatrix):
+            raise TypeError("@ needs a ClusteredMatrix")
+        if self.n != other.m:
+            raise ValueError(
+                f"matmul inner-dim mismatch: {self.shape} @ {other.shape}")
+        dtype = np.promote_types(self.dtype, other.dtype)
+        return ClusteredMatrix(Op.MATMUL, (self.m, other.n), dtype,
+                               parents=(self, other))
+
+    def hadamard(self, other: "ClusteredMatrix") -> "ClusteredMatrix":
+        return self._binop(other, Op.EWMUL)
+
+    @property
+    def T(self) -> "ClusteredMatrix":
+        return ClusteredMatrix(Op.TRANSPOSE, (self.n, self.m), self.dtype,
+                               parents=(self,))
+
+    def ewise(self, fn: str) -> "ClusteredMatrix":
+        if fn not in EWISE_FNS:
+            raise ValueError(f"unknown elementwise fn {fn!r}")
+        return ClusteredMatrix(Op.EWISE, self.shape, self.dtype,
+                               parents=(self,), payload=fn)
+
+    def sin(self):
+        return self.ewise("sin")
+
+    def cos(self):
+        return self.ewise("cos")
+
+    def relu(self):
+        return self.ewise("relu")
+
+    # -- evaluation ----------------------------------------------------------
+    def compute(self, engine=None, **kw) -> np.ndarray:
+        """Materialise through the CMM engine (tiling + HEFT + execution)."""
+        if engine is None:
+            from .engine import CMMEngine  # local import to avoid cycle
+            engine = CMMEngine.default()
+        return engine.run(self, **kw)
+
+    def eager(self) -> np.ndarray:
+        """Reference evaluation — direct recursive NumPy (the oracle)."""
+        return eager_eval(self)
+
+    # dataclass-generated __eq__ would recurse; identity semantics instead
+    def __hash__(self):
+        return self.uid
+
+    def __eq__(self, other):
+        return self is other
+
+    def __repr__(self):
+        ps = ",".join(str(p.uid) for p in self.parents)
+        return (f"ClusteredMatrix(#{self.uid} {self.op.value} {self.shape} "
+                f"{self.dtype} parents=[{ps}] {self.name})")
+
+
+def topo_order(root: ClusteredMatrix) -> Sequence[ClusteredMatrix]:
+    """Deterministic post-order DFS over the expression DAG."""
+    seen, order = set(), []
+
+    def visit(node: ClusteredMatrix):
+        if node.uid in seen:
+            return
+        seen.add(node.uid)
+        for p in node.parents:
+            visit(p)
+        order.append(node)
+
+    visit(root)
+    return order
+
+
+def materialize_leaf(node: ClusteredMatrix) -> np.ndarray:
+    """Produce the full ndarray for a leaf node (INPUT/RANDOM/ZEROS/EYE)."""
+    if node.op is Op.INPUT:
+        return np.asarray(node.payload, dtype=node.dtype)
+    if node.op is Op.RANDOM:
+        rng = np.random.default_rng(node.payload)
+        return rng.standard_normal(node.shape).astype(node.dtype)
+    if node.op is Op.ZEROS:
+        return np.zeros(node.shape, node.dtype)
+    if node.op is Op.EYE:
+        return np.eye(node.shape[0], dtype=node.dtype)
+    raise ValueError(f"{node.op} is not a leaf")
+
+
+def apply_scale(kind: str, x: np.ndarray, s: float) -> np.ndarray:
+    if kind in ("add",):
+        return x + s
+    if kind in ("sub",):
+        return x - s
+    if kind in ("scale", "mul", "ewmul"):
+        return x * s
+    if kind == "div":
+        return x / s
+    raise ValueError(f"unknown scalar op {kind}")
+
+
+def eager_eval(root: ClusteredMatrix) -> np.ndarray:
+    """Pure-NumPy oracle used to validate the tiled/scheduled execution."""
+    vals = {}
+    for node in topo_order(root):
+        if node.op in (Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE):
+            vals[node.uid] = materialize_leaf(node)
+        elif node.op is Op.ADD:
+            vals[node.uid] = vals[node.parents[0].uid] + vals[node.parents[1].uid]
+        elif node.op is Op.SUB:
+            vals[node.uid] = vals[node.parents[0].uid] - vals[node.parents[1].uid]
+        elif node.op is Op.EWMUL:
+            vals[node.uid] = vals[node.parents[0].uid] * vals[node.parents[1].uid]
+        elif node.op is Op.MATMUL:
+            vals[node.uid] = vals[node.parents[0].uid] @ vals[node.parents[1].uid]
+        elif node.op is Op.SCALE:
+            kind, s = node.payload
+            vals[node.uid] = apply_scale(kind, vals[node.parents[0].uid], s)
+        elif node.op is Op.EWISE:
+            vals[node.uid] = EWISE_FNS[node.payload](vals[node.parents[0].uid])
+        elif node.op is Op.TRANSPOSE:
+            vals[node.uid] = vals[node.parents[0].uid].T
+        else:  # pragma: no cover
+            raise ValueError(node.op)
+    return vals[root.uid]

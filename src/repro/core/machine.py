@@ -1,0 +1,88 @@
+"""Cluster machine model (CMM §4.1–4.2).
+
+The paper's ideal configuration per c5.9xlarge node: 3 worker processes
+(4 BLAS threads each), 2 communication processes on workers, more on the
+master; 10 Gbps shared network.  These are *model* parameters — the HEFT
+scheduler and the discrete-event simulator consume them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    n_nodes: int = 1
+    #: compute slots per node (paper: 3 worker processes x 4 BLAS threads)
+    worker_procs: int = 3
+    threads_per_worker: int = 4
+    #: dedicated communication processes (paper: master gets more, §3.6)
+    comm_procs_worker: int = 2
+    comm_procs_master: int = 4
+    #: link bandwidth, bytes/s (c5.9xlarge: 10 Gbps guaranteed)
+    link_bw: float = 10e9 / 8
+    #: per-message latency, s
+    latency: float = 200e-6
+    #: per-pair bandwidth overrides {(a,b): bytes/s} — the paper's fix of
+    #: modelling *connection speeds between two nodes* (§3.4)
+    pair_bw: Tuple[Tuple[Tuple[int, int], float], ...] = ()
+    #: master node index
+    master: int = 0
+    #: per-node compute slowdown factors (straggler modelling, runtime/fault)
+    slowdown: Tuple[float, ...] = ()
+
+    def comm_procs(self, node: int) -> int:
+        return self.comm_procs_master if node == self.master \
+            else self.comm_procs_worker
+
+    def bandwidth(self, a: int, b: int) -> float:
+        for (pa, pb), bw in self.pair_bw:
+            if (pa, pb) == (a, b) or (pa, pb) == (b, a):
+                return bw
+        return self.link_bw
+
+    def node_slowdown(self, node: int) -> float:
+        if self.slowdown and node < len(self.slowdown):
+            return self.slowdown[node]
+        return 1.0
+
+    def comm_time(self, nbytes: int, a: int, b: int) -> float:
+        if a == b:
+            return 0.0
+        return self.latency + nbytes / self.bandwidth(a, b)
+
+    def with_nodes(self, n: int) -> "ClusterSpec":
+        return replace(self, n_nodes=n)
+
+    def zero_comm(self) -> "ClusterSpec":
+        """Theoretical-speedup variant (§5.1): instantaneous communication."""
+        return replace(self, link_bw=float("inf"), latency=0.0, pair_bw=())
+
+
+def c5_9xlarge(n_nodes: int = 1, **kw) -> ClusterSpec:
+    """The paper's AWS instance: 36 vCPU / 18 physical cores, 10 Gbps."""
+    return ClusterSpec(n_nodes=n_nodes, **kw)
+
+
+def local_spec(n_nodes: int = 1, **kw) -> ClusterSpec:
+    """Machine model matching THIS host (for sim-vs-exec accuracy runs):
+    worker slots capped at the real core count — a 1-core container cannot
+    run 3 BLAS workers in parallel, and the simulator must know that."""
+    import os
+    kw.setdefault("worker_procs", max(1, min(3, os.cpu_count() or 1)))
+    return ClusterSpec(n_nodes=n_nodes, **kw)
+
+
+def tpu_v5e_pod(n_nodes: int = 256, **kw) -> ClusterSpec:
+    """TPU-flavoured machine model for the simulator (ICI ~50 GB/s/link).
+
+    Used when the CMM simulator models the TPU mesh rather than the AWS
+    cluster: one 'node' = one chip, comm = ICI.
+    """
+    kw.setdefault("worker_procs", 1)
+    kw.setdefault("comm_procs_worker", 2)
+    kw.setdefault("comm_procs_master", 2)
+    kw.setdefault("link_bw", 50e9)
+    kw.setdefault("latency", 1e-6)
+    return ClusterSpec(n_nodes=n_nodes, **kw)

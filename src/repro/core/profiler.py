@@ -1,0 +1,147 @@
+"""Offline profiling (CMM §3.4).
+
+Runs each task family over a grid of operand sizes on the actual machine,
+times it, and fits the Table-1 interpolation equations by OLS.  The fitted
+``TimeModel`` is persisted to JSON and reused by the scheduler/simulator —
+profiling is *offline*, scheduling uses only the model (as in the paper).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .timemodel import PolyModel, TimeModel
+
+
+def _time_call(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def profile_matmul(sizes: Sequence[int], reps: int = 3,
+                   rng: Optional[np.random.Generator] = None
+                   ) -> Tuple[List[Tuple[int, int, int]], List[float]]:
+    rng = rng or np.random.default_rng(0)
+    dims_list, times = [], []
+    for m in sizes:
+        for k in sizes:
+            a = rng.standard_normal((m, m))
+            b = rng.standard_normal((m, k))
+            c = np.zeros((m, k))
+
+            def run(a=a, b=b, c=c):
+                np.add(c, a @ b, out=c)  # addmul: C += A @ B
+
+            times.append(_time_call(run, reps))
+            dims_list.append((m, m, k))
+    return dims_list, times
+
+
+def profile_ewise(sizes: Sequence[int], reps: int = 3,
+                  rng: Optional[np.random.Generator] = None
+                  ) -> Tuple[List[Tuple[int, int]], List[float]]:
+    rng = rng or np.random.default_rng(1)
+    dims_list, times = [], []
+    for m in sizes:
+        for n in sizes:
+            a = rng.standard_normal((m, n))
+            b = rng.standard_normal((m, n))
+
+            def run(a=a, b=b):
+                np.add(a, b)
+
+            times.append(_time_call(run, reps))
+            dims_list.append((m, n))
+    return dims_list, times
+
+
+def profile_fill(sizes: Sequence[int], reps: int = 3
+                 ) -> Tuple[List[Tuple[int, int]], List[float]]:
+    """Data-generation (fill) cost: RNG-bound, much slower than memcpy."""
+    dims_list, times = [], []
+    for m in sizes:
+        for n in sizes:
+            rng = np.random.default_rng(m * n)
+
+            def run(rng=rng, m=m, n=n):
+                rng.standard_normal((m, n))
+
+            times.append(_time_call(run, reps))
+            dims_list.append((m, n))
+    return dims_list, times
+
+
+def profile_machine(sizes: Sequence[int] = (64, 128, 256, 384, 512),
+                    reps: int = 3) -> TimeModel:
+    """Full offline profile -> fitted TimeModel (compute families)."""
+    tm = TimeModel()
+    dims, times = profile_matmul(sizes, reps)
+    tm.models["matmul"] = PolyModel.fit("matmul", dims, times)
+    dims_e, times_e = profile_ewise(sizes, reps)
+    tm.models["ewise"] = PolyModel.fit("ewise", dims_e, times_e)
+    dims_f, times_f = profile_fill(sizes, reps)
+    tm.models["fill"] = PolyModel.fit("ewise", dims_f, times_f)
+    calibrate_dispatch(tm)
+    return tm
+
+
+def calibrate_dispatch(tm: TimeModel, n: int = 256, tile: int = 64,
+                       workers: int = 3) -> float:
+    """Fit the per-task dispatch overhead (threadpool/GIL cost dominates
+    sub-ms tiles): run a small tiled program for real and attribute the
+    wall-time excess over the simulated makespan to per-task overhead."""
+    import time as _time
+
+    from .engine import CMMEngine
+    from .lazy import ClusteredMatrix as CM
+    from .machine import c5_9xlarge
+
+    eng = CMMEngine(c5_9xlarge(1), tm, tile=tile)
+    A = CM.rand(n, n, seed=0)
+    expr = A @ A
+    plan = eng.plan(expr)
+    t0 = _time.perf_counter()
+    eng.run(expr, plan=plan, workers=workers)
+    wall = _time.perf_counter() - t0
+    n_tasks = len(plan.program.graph)
+    # overhead per task, serialised over `workers` lanes
+    over = max(0.0, (wall - plan.predicted_makespan) * workers / n_tasks)
+    tm.dispatch_overhead = min(over, 5e-3)
+    return tm.dispatch_overhead
+
+
+def profile_comm_synthetic(spec, sizes_bytes: Sequence[int] = None,
+                           noise: float = 0.03, seed: int = 0):
+    """Synthesise comm-profile observations from the machine model.
+
+    On the real cluster this function would round-trip buffers between node
+    pairs; offline here, we sample the parametric link model with noise and
+    refit — exercising the same per-pair regression path the paper describes
+    (§3.4: "additionally taking the connection speeds between two nodes into
+    account").  Returns {(a, b): (latency, bandwidth)} fitted per pair.
+    """
+    rng = np.random.default_rng(seed)
+    sizes_bytes = sizes_bytes or [2 ** p for p in range(12, 27, 2)]
+    fitted = {}
+    for a in range(spec.n_nodes):
+        for b in range(spec.n_nodes):
+            if a == b:
+                continue
+            xs, ys = [], []
+            for s in sizes_bytes:
+                true = spec.comm_time(s, a, b)
+                obs = true * (1.0 + noise * rng.standard_normal())
+                xs.append([1.0, float(s)])
+                ys.append(max(obs, 0.0))
+            coef, *_ = np.linalg.lstsq(np.asarray(xs), np.asarray(ys),
+                                       rcond=None)
+            lat = max(float(coef[0]), 0.0)
+            bw = 1.0 / max(float(coef[1]), 1e-30)
+            fitted[(a, b)] = (lat, bw)
+    return fitted

@@ -1,0 +1,241 @@
+"""Discrete-event schedule simulator (CMM §3.3, §4.2).
+
+Simulates a HEFT schedule under the profiled time model, with the machine
+model's resources made explicit:
+
+* each node has ``worker_procs`` compute slots (a task occupies one);
+* each node has ``comm_procs`` communication slots — a cross-node transfer
+  occupies one slot at the sender *and* one at the receiver for its duration
+  (the paper's dedicated communication processes; the master has more);
+* ``calloc`` is asynchronous: it does not occupy a worker slot (§3.3);
+* the node-level cache absorbs repeated transfers of the same tile version
+  (§3.5) — transfers in flight are joined, not duplicated;
+* ``zero_comm=True`` makes communication instantaneous, which is exactly the
+  paper's *theoretical speedup* condition (§5.1).
+
+The simulator is what the engine uses for tile-size auto-selection (§3.3) and
+what `benchmarks/` uses for Table 3/4 and Fig. 3.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .cache import NodeCache
+from .graph import Task, TaskGraph, TaskKind
+from .heft import Schedule, edge_bytes
+from .machine import ClusterSpec
+from .timemodel import TimeModel
+
+
+@dataclass
+class Interval:
+    tid: int
+    kind: str
+    node: int
+    slot: int
+    start: float
+    end: float
+
+
+@dataclass
+class Transfer:
+    key: Tuple[int, int]
+    src: int
+    dst: int
+    nbytes: int
+    start: float = 0.0
+    end: float = 0.0
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    intervals: List[Interval]
+    transfers: List[Transfer]
+    cache_hits: int
+    cache_misses: int
+    spec: ClusterSpec
+
+    def stats_by_kind(self) -> Dict[str, Tuple[int, float]]:
+        acc: Dict[str, List[float]] = defaultdict(list)
+        for iv in self.intervals:
+            acc[iv.kind].append(iv.end - iv.start)
+        return {k: (len(v), sum(v)) for k, v in acc.items()}
+
+    def node_busy_fraction(self) -> Dict[int, float]:
+        busy = defaultdict(float)
+        for iv in self.intervals:
+            busy[iv.node] += iv.end - iv.start
+        cap = self.spec.worker_procs * max(self.makespan, 1e-12)
+        return {n: busy[n] / cap for n in range(self.spec.n_nodes)}
+
+    def comm_busy_seconds(self) -> float:
+        return sum(t.end - t.start for t in self.transfers)
+
+    def gantt(self, width: int = 100) -> str:
+        """ASCII Gantt chart per (node, slot) lane — the Fig. 3 artefact."""
+        if not self.intervals:
+            return "(empty)"
+        scale = width / max(self.makespan, 1e-12)
+        lanes: Dict[Tuple[int, int], List[Interval]] = defaultdict(list)
+        for iv in self.intervals:
+            lanes[(iv.node, iv.slot)].append(iv)
+        sym = {"addmul": "#", "matmul": "#", "add": "+", "sub": "-",
+               "ewmul": "*", "scale": "*", "ewise": "~", "transpose": "t",
+               "fill": "f", "calloc": ".", "takecopy": "c"}
+        out = []
+        for (node, slot) in sorted(lanes):
+            row = [" "] * width
+            for iv in lanes[(node, slot)]:
+                a = min(int(iv.start * scale), width - 1)
+                b = min(max(int(iv.end * scale), a + 1), width)
+                for x in range(a, b):
+                    row[x] = sym.get(iv.kind, "?")
+            out.append(f"n{node}.w{slot} |{''.join(row)}|")
+        for t in sorted(self.transfers, key=lambda t: (t.src, t.start)):
+            a = min(int(t.start * scale), width - 1)
+            b = min(max(int(t.end * scale), a + 1), width)
+            row = [" "] * width
+            for x in range(a, b):
+                row[x] = ">"
+            out.append(f"n{t.src}>n{t.dst} |{''.join(row)}|")
+        return "\n".join(out)
+
+
+def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
+             zero_comm: bool = False, use_cache: bool = True) -> SimResult:
+    """``use_cache=False`` disables the node-level cache in the MACHINE
+    (every consumer transfer is re-sent) — the §3.5 mechanism ablation."""
+    if zero_comm:
+        spec = spec.zero_comm()
+    prio = {tid: i for i, tid in enumerate(sched.order)}
+    node_of = {tid: p.node for tid, p in sched.placements.items()}
+
+    cache = NodeCache(spec.n_nodes)
+    free_workers = {n: spec.worker_procs for n in range(spec.n_nodes)}
+    free_slots = {n: list(range(spec.worker_procs))
+                  for n in range(spec.n_nodes)}
+    free_comm = {n: spec.comm_procs(n) for n in range(spec.n_nodes)}
+
+    deps_left = {t.tid: len(t.preds) for t in g}
+    # (key, dst) -> list of task ids waiting for that arrival
+    waiting_data: Dict[Tuple[Tuple[int, int], int], List[int]] = defaultdict(list)
+    data_left = {t.tid: 0 for t in g}
+    ready: Dict[int, List[Tuple[int, int]]] = {n: [] for n in range(spec.n_nodes)}
+    pending_xfers: List[Tuple[int, Transfer]] = []  # (priority, transfer)
+    in_flight: Set[Tuple[Tuple[int, int], int]] = set()
+
+    events: List[Tuple[float, int, str, object]] = []
+    seq = itertools.count()
+    intervals: List[Interval] = []
+    transfers_done: List[Transfer] = []
+    now = 0.0
+
+    def push(t, kind, payload):
+        heapq.heappush(events, (t, next(seq), kind, payload))
+
+    def task_ready(tid: int):
+        n = node_of[tid]
+        heapq.heappush(ready[n], (prio[tid], tid))
+
+    def finish_producer(tid: int):
+        """Producer done: release deps, create transfers for cross-node data."""
+        t = g.tasks[tid]
+        src = node_of[tid]
+        if t.out is not None:
+            cache.put(src, (tid, t.out.tensor), t.out.bytes)
+        for s in sorted(t.succs, key=lambda x: prio[x]):
+            st = g.tasks[s]
+            nbytes = edge_bytes(g, t, st)
+            dst = node_of[s]
+            if nbytes and dst != src:
+                key = (tid, t.out.tensor) if use_cache \
+                    else (tid, t.out.tensor, s)   # unique -> never cached
+                if use_cache and cache.peek(dst, key):
+                    cache.hits += 1
+                else:
+                    data_left[s] += 1
+                    waiting_data[(key, dst)].append(s)
+                    if (key, dst) not in in_flight:
+                        cache.misses += 1
+                        in_flight.add((key, dst))
+                        pending_xfers.append(
+                            (prio[s], Transfer(key, src, dst, nbytes)))
+            deps_left[s] -= 1
+            if deps_left[s] == 0 and data_left[s] == 0:
+                task_ready(s)
+
+    def dispatch(now: float):
+        # start feasible transfers in priority order
+        pending_xfers.sort(key=lambda x: x[0])
+        started = True
+        while started:
+            started = False
+            for i, (p, tr) in enumerate(pending_xfers):
+                if free_comm[tr.src] > 0 and free_comm[tr.dst] > 0:
+                    free_comm[tr.src] -= 1
+                    free_comm[tr.dst] -= 1
+                    tr.start = now
+                    tr.end = now + spec.comm_time(tr.nbytes, tr.src, tr.dst)
+                    push(tr.end, "xfer_done", tr)
+                    pending_xfers.pop(i)
+                    started = True
+                    break
+        # start ready compute tasks
+        for n in range(spec.n_nodes):
+            while ready[n]:
+                _, tid = ready[n][0]
+                t = g.tasks[tid]
+                if t.kind is TaskKind.CALLOC:
+                    heapq.heappop(ready[n])
+                    dur = 1e-6  # async (§3.3): no worker slot occupied
+                    intervals.append(Interval(tid, t.kind.value, n, -1,
+                                              now, now + dur))
+                    push(now + dur, "task_done", tid)
+                    continue
+                if free_workers[n] <= 0:
+                    break
+                heapq.heappop(ready[n])
+                free_workers[n] -= 1
+                slot = free_slots[n].pop()
+                dur = tm.compute_time(t, spec, n)
+                intervals.append(Interval(tid, t.kind.value, n, slot,
+                                          now, now + dur))
+                push(now + dur, "task_done", (tid, slot))
+
+    # seed: source tasks are immediately ready
+    for t in g.sources():
+        task_ready(t.tid)
+    dispatch(0.0)
+
+    while events:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == "task_done":
+            if isinstance(payload, tuple):
+                tid, slot = payload
+                n = node_of[tid]
+                free_workers[n] += 1
+                free_slots[n].append(slot)
+            else:
+                tid = payload
+            finish_producer(tid)
+        elif kind == "xfer_done":
+            tr: Transfer = payload
+            free_comm[tr.src] += 1
+            free_comm[tr.dst] += 1
+            cache.put(tr.dst, tr.key, tr.nbytes)
+            transfers_done.append(tr)
+            in_flight.discard((tr.key, tr.dst))
+            for s in waiting_data.pop((tr.key, tr.dst), []):
+                data_left[s] -= 1
+                if deps_left[s] == 0 and data_left[s] == 0:
+                    task_ready(s)
+        dispatch(now)
+
+    makespan = max((iv.end for iv in intervals), default=0.0)
+    return SimResult(makespan, intervals, transfers_done,
+                     cache.hits, cache.misses, spec)

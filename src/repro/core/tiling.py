@@ -1,0 +1,192 @@
+"""Automatic tiling: expression DAG -> tiled task graph (CMM §3.2, Listing 1).
+
+A single tile size ``t`` (or ``(tm, tn)`` tuple) is applied to every matrix in
+the expression, exactly like the paper (10 k matrices, 5 k tiles -> 2x2 grid;
+edge tiles are ragged via ``min`` bounds as in Listing 1).  The expression DAG
+is expanded node-by-node into per-tile tasks while preserving the task
+dependencies; tiled matmul introduces the ``calloc`` + ``addmul``-chain
+structure of Fig. 2.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .graph import Task, TaskGraph, TaskKind, TileRef
+from .lazy import ClusteredMatrix, Op, topo_order
+
+
+def cld(a: int, b: int) -> int:
+    """Ceiling division (Julia's ``cld`` used in Listing 1)."""
+    return -(-a // b)
+
+
+def tile_slices(dim: int, tile: int) -> List[Tuple[int, int]]:
+    """Listing 1 row/col bounds: [(start, end)] with ragged final tile."""
+    n = cld(dim, tile)
+    return [(tile * i, min(tile * (i + 1), dim)) for i in range(n)]
+
+
+def grid_of(shape: Tuple[int, int], tile: Tuple[int, int]) -> Tuple[int, int]:
+    return (cld(shape[0], tile[0]), cld(shape[1], tile[1]))
+
+
+def tile_shape(shape: Tuple[int, int], tile: Tuple[int, int],
+               i: int, j: int) -> Tuple[int, int]:
+    rs = tile_slices(shape[0], tile[0])[i]
+    cs = tile_slices(shape[1], tile[1])[j]
+    return (rs[1] - rs[0], cs[1] - cs[0])
+
+
+def normalize_tile(tile) -> Tuple[int, int]:
+    if isinstance(tile, int):
+        return (tile, tile)
+    tm, tn = tile
+    return (int(tm), int(tn))
+
+
+class TiledProgram:
+    """Result of tiling: the task graph plus tile bookkeeping for execution."""
+
+    def __init__(self, graph: TaskGraph, tile: Tuple[int, int],
+                 root: ClusteredMatrix,
+                 leaf_nodes: Dict[int, ClusteredMatrix]):
+        self.graph = graph
+        self.tile = tile
+        self.root = root
+        #: expr-node uid -> leaf ClusteredMatrix (for FILL materialisation)
+        self.leaf_nodes = leaf_nodes
+
+
+def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
+    """Expand the expression DAG into a tiled TaskGraph.
+
+    Per node we keep ``producer[(i, j)]`` — the task id that last wrote tile
+    ``(i, j)`` of that node's output — so consumers depend on exactly the
+    right task (for matmul that is the *last* addmul of the k-chain).
+    """
+    t = normalize_tile(tile)
+    g = TaskGraph()
+    # node uid -> {(i,j): (TileRef, producer_tid)}
+    tiles: Dict[int, Dict[Tuple[int, int], Tuple[TileRef, int]]] = {}
+    leaf_nodes: Dict[int, ClusteredMatrix] = {}
+
+    def ref(node: ClusteredMatrix, i: int, j: int) -> TileRef:
+        return TileRef(node.uid, i, j, tile_shape(node.shape, t, i, j))
+
+    for node in topo_order(root):
+        gm, gn = grid_of(node.shape, t)
+        entry: Dict[Tuple[int, int], Tuple[TileRef, int]] = {}
+
+        if node.op in (Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE):
+            leaf_nodes[node.uid] = node
+            for i in range(gm):
+                for j in range(gn):
+                    r = ref(node, i, j)
+                    # fill = data materialisation for an input tile; the
+                    # engine/scheduler delays it until just before first use
+                    # (§3.3) — structurally it is a source task.
+                    task = g.add(TaskKind.FILL, (), r, payload=node.uid)
+                    entry[(i, j)] = (r, task.tid)
+
+        elif node.op is Op.MATMUL:
+            a, b = node.parents
+            ga = tiles[a.uid]
+            gb = tiles[b.uid]
+            kt = grid_of(a.shape, t)[1]  # inner tile count
+            for i in range(gm):
+                for j in range(gn):
+                    r = ref(node, i, j)
+                    calloc = g.add(TaskKind.CALLOC, (), r, payload=node.uid)
+                    prev = calloc.tid
+                    for k in range(kt):
+                        ra, pa = ga[(i, k)]
+                        rb, pb = gb[(k, j)]
+                        m_, n_ = ra.shape
+                        k_ = rb.shape[1]
+                        task = g.add(TaskKind.ADDMUL, (ra, rb), r,
+                                     flops=2 * m_ * n_ * k_,
+                                     deps=(prev, pa, pb))
+                        prev = task.tid
+                    entry[(i, j)] = (r, prev)
+
+        elif node.op in (Op.ADD, Op.SUB, Op.EWMUL):
+            kind = {Op.ADD: TaskKind.ADD, Op.SUB: TaskKind.SUB,
+                    Op.EWMUL: TaskKind.EWMUL}[node.op]
+            a, b = node.parents
+            for i in range(gm):
+                for j in range(gn):
+                    ra, pa = tiles[a.uid][(i, j)]
+                    rb, pb = tiles[b.uid][(i, j)]
+                    r = ref(node, i, j)
+                    m_, n_ = r.shape
+                    task = g.add(kind, (ra, rb), r, flops=m_ * n_,
+                                 deps=(pa, pb))
+                    entry[(i, j)] = (r, task.tid)
+
+        elif node.op is Op.SCALE:
+            (kindstr, s) = node.payload
+            a = node.parents[0]
+            for i in range(gm):
+                for j in range(gn):
+                    ra, pa = tiles[a.uid][(i, j)]
+                    r = ref(node, i, j)
+                    task = g.add(TaskKind.SCALE, (ra,), r,
+                                 payload=(kindstr, s),
+                                 flops=r.shape[0] * r.shape[1], deps=(pa,))
+                    entry[(i, j)] = (r, task.tid)
+
+        elif node.op is Op.EWISE:
+            a = node.parents[0]
+            for i in range(gm):
+                for j in range(gn):
+                    ra, pa = tiles[a.uid][(i, j)]
+                    r = ref(node, i, j)
+                    task = g.add(TaskKind.EWISE, (ra,), r, payload=node.payload,
+                                 flops=4 * r.shape[0] * r.shape[1], deps=(pa,))
+                    entry[(i, j)] = (r, task.tid)
+
+        elif node.op is Op.TRANSPOSE:
+            a = node.parents[0]
+            for i in range(gm):
+                for j in range(gn):
+                    ra, pa = tiles[a.uid][(j, i)]
+                    r = ref(node, i, j)
+                    task = g.add(TaskKind.TRANSPOSE, (ra,), r,
+                                 flops=r.shape[0] * r.shape[1], deps=(pa,))
+                    entry[(i, j)] = (r, task.tid)
+
+        else:  # pragma: no cover
+            raise ValueError(node.op)
+
+        tiles[node.uid] = entry
+
+    # takecopy: gather every result tile to the master node.  Each takecopy
+    # depends only on its own producer chain (§3.3 optimisation: originally
+    # serialised behind *all* jobs; CMM made it depend only on its subtree).
+    gm, gn = grid_of(root.shape, t)
+    for i in range(gm):
+        for j in range(gn):
+            r, p = tiles[root.uid][(i, j)]
+            g.add(TaskKind.TAKECOPY, (r,), r, deps=(p,))
+            g.result_tiles.append(r)
+    g.result_grid = (gm, gn)
+    g.result_shape = root.shape
+    return TiledProgram(g, t, root, leaf_nodes)
+
+
+def assemble(tile_values: Dict[TileRef, "object"],
+             shape: Tuple[int, int], tile: Tuple[int, int],
+             tensor_uid: int):
+    """Reassemble a full matrix from its tile values (inverse of tiling)."""
+    import numpy as np
+
+    rows = tile_slices(shape[0], tile[0])
+    cols = tile_slices(shape[1], tile[1])
+    first = next(iter(tile_values.values()))
+    out = np.empty(shape, dtype=np.asarray(first).dtype)
+    for i, (r0, r1) in enumerate(rows):
+        for j, (c0, c1) in enumerate(cols):
+            key = TileRef(tensor_uid, i, j, (r1 - r0, c1 - c0))
+            out[r0:r1, c0:c1] = np.asarray(tile_values[key])
+    return out

@@ -1,0 +1,165 @@
+"""Time-prediction model (CMM §3.4, Table 1).
+
+Each task kind has an interpolation equation — a multivariate polynomial in
+the operand dimensions — whose coefficients are fitted by ordinary least
+squares on offline-profiled timings:
+
+    (n,1)  op (n,1)   +,-,x      a0 + a1*n
+    (m,n)      sin,cos           a0 + a1*n + a2*m + a3*m*n
+    (m,n)  op scalar  +,-,x,/    a0 + a1*n + a2*m + a3*m*n
+    (m,n)  op (m,n)   +,-,x      a0 + a1*n + a2*m + a3*m*n
+    (m,n)  x  (n,k)              a0 + a1*m + a2*n + a3*k + a4*mn + a5*nk
+                                    + a6*mk + a7*mnk
+
+Communication time is modelled per node pair: latency + bytes / pair
+bandwidth (the paper's §3.4 fix after the one-worker-only pathology).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import Task, TaskKind
+from .machine import ClusterSpec
+
+
+def features_ewise(dims: Sequence[int]) -> np.ndarray:
+    m, n = dims
+    return np.array([1.0, n, m, m * n])
+
+
+def features_matmul(dims: Sequence[int]) -> np.ndarray:
+    m, n, k = dims
+    return np.array([1.0, m, n, k, m * n, n * k, m * k, m * n * k])
+
+
+FEATURES = {
+    "ewise": features_ewise,    # all (m,n)-shaped kinds
+    "matmul": features_matmul,  # (m,n)x(n,k) kinds
+}
+
+#: task kind -> feature family
+KIND_FAMILY = {
+    TaskKind.ADDMUL: "matmul",
+    TaskKind.MATMUL: "matmul",
+    TaskKind.ADD: "ewise",
+    TaskKind.SUB: "ewise",
+    TaskKind.EWMUL: "ewise",
+    TaskKind.SCALE: "ewise",
+    TaskKind.EWISE: "ewise",
+    TaskKind.TRANSPOSE: "ewise",
+    TaskKind.CALLOC: "ewise",
+    TaskKind.FILL: "ewise",
+    TaskKind.TAKECOPY: "ewise",
+}
+
+
+@dataclass
+class PolyModel:
+    """One fitted interpolation equation."""
+
+    family: str
+    coef: np.ndarray
+
+    def predict(self, dims: Sequence[int]) -> float:
+        x = FEATURES[self.family](dims)
+        return float(max(x @ self.coef, 1e-9))
+
+    @staticmethod
+    def fit(family: str, dims_list: Sequence[Sequence[int]],
+            times: Sequence[float]) -> "PolyModel":
+        X = np.stack([FEATURES[family](d) for d in dims_list])
+        y = np.asarray(times, dtype=np.float64)
+        # OLS via lstsq (the paper's ordinary-least-squares regression)
+        coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+        return PolyModel(family, coef)
+
+    def r2(self, dims_list, times) -> float:
+        y = np.asarray(times)
+        pred = np.array([self.predict(d) for d in dims_list])
+        ss_res = float(((y - pred) ** 2).sum())
+        ss_tot = float(((y - y.mean()) ** 2).sum()) or 1.0
+        return 1.0 - ss_res / ss_tot
+
+
+@dataclass
+class TimeModel:
+    """Per-kind compute models + the per-pair communication model."""
+
+    models: Dict[str, PolyModel] = field(default_factory=dict)
+    #: overhead multiplier for scheduling/dispatch (fitted or 1.0)
+    dispatch_overhead: float = 0.0
+
+    def compute_time(self, task: Task, spec: Optional[ClusterSpec] = None,
+                     node: int = 0) -> float:
+        kind = task.kind
+        if kind in (TaskKind.SEND, TaskKind.RECV):
+            raise ValueError("comm tasks are costed by comm_time()")
+        family = KIND_FAMILY[kind]
+        key = kind.value
+        model = self.models.get(key) or self.models.get(family)
+        if model is None:
+            # analytic fallback: ~1 GFLOP/s effective if unprofiled
+            flops = max(task.flops, int(np.prod(task.dims())))
+            t = flops / 1e9
+        else:
+            t = model.predict(task.dims())
+        t += self.dispatch_overhead
+        if spec is not None:
+            t *= spec.node_slowdown(node)
+        return t
+
+    def comm_time(self, nbytes: int, src: int, dst: int,
+                  spec: ClusterSpec) -> float:
+        return spec.comm_time(nbytes, src, dst)
+
+    # -- (de)serialisation --------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "dispatch_overhead": self.dispatch_overhead,
+            "models": {k: {"family": m.family, "coef": m.coef.tolist()}
+                       for k, m in self.models.items()},
+        })
+
+    @staticmethod
+    def from_json(s: str) -> "TimeModel":
+        d = json.loads(s)
+        return TimeModel(
+            models={k: PolyModel(v["family"], np.asarray(v["coef"]))
+                    for k, v in d["models"].items()},
+            dispatch_overhead=d.get("dispatch_overhead", 0.0),
+        )
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @staticmethod
+    def load(path: str) -> "TimeModel":
+        with open(path) as f:
+            return TimeModel.from_json(f.read())
+
+
+def analytic_time_model(gflops: float = 5.5, mem_gbs: float = 10.0,
+                        base_us: float = 30.0) -> TimeModel:
+    """A synthetic time model from machine constants (no profiling).
+
+    Matches the paper's observed ~5.5 GFLOPS/worker-process plateau (Table 2).
+    Used when offline profiles are unavailable (e.g. pure-simulation tests).
+    """
+    tm = TimeModel()
+    a0 = base_us * 1e-6
+    # matmul: time = flops / rate -> coefficient only on the mnk term
+    c = np.zeros(8)
+    c[0] = a0
+    c[7] = 2.0 / (gflops * 1e9)
+    tm.models["matmul"] = PolyModel("matmul", c)
+    # ewise family: bandwidth-bound, 8 B/elem in + 8 out
+    e = np.zeros(4)
+    e[0] = a0
+    e[3] = 16.0 / (mem_gbs * 1e9)
+    tm.models["ewise"] = PolyModel("ewise", e)
+    return tm

@@ -1,0 +1,1 @@
+from .local import LocalExecutor  # noqa: F401

@@ -1,0 +1,144 @@
+"""Sharded tiled-GEMM executors — the TPU-native analogue of CMM's schedule.
+
+On a MIMD cluster CMM materialises the tiled matmul as addmul tasks plus
+send/recv pairs.  On an SPMD TPU mesh the same tiling becomes a *static*
+collective schedule.  Two classic schedules are provided, both built with
+``shard_map`` so the collectives are explicit (not left to GSPMD):
+
+* ``matmul_2d`` — broadcast-panel 2-D algorithm: each device all-gathers its
+  A-block row panel along the mesh columns and its B-block column panel along
+  the mesh rows, then does one local GEMM.  One all-gather per operand; the
+  gathered panels are the SPMD incarnation of CMM's *node-level cache* (each
+  device keeps the gathered panel resident and reuses it for every local
+  k-step instead of re-receiving per addmul).
+
+* ``matmul_cannon`` — Cannon's systolic ring: blocks circulate with
+  ``ppermute`` while partial products accumulate, overlapping communication
+  with compute; requires a square mesh.  This is the minimal-resident-memory
+  schedule (one block of A and B live per device).
+
+Both are validated against ``jnp.dot`` on a host-device mesh in tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def matmul_2d(a: jax.Array, b: jax.Array, mesh: Mesh,
+              axes: Tuple[str, str] = ("x", "y"),
+              precision=None) -> jax.Array:
+    """C = A @ B with A sharded P(x, y), B sharded P(x, y), C sharded P(x, y).
+
+    comm volume per device: |A|/r + |B|/c (the 2-D algorithm's lower bound
+    shape); local compute: (m/r) x n x (k/c) GEMM.
+    """
+    ax_r, ax_c = axes
+
+    def body(ab, bb):
+        # ab: (m/r, n/c); gather k-panels of A along mesh columns
+        a_row = jax.lax.all_gather(ab, ax_c, axis=1, tiled=True)  # (m/r, n)
+        b_col = jax.lax.all_gather(bb, ax_r, axis=0, tiled=True)  # (n, k/c)
+        return jnp.dot(a_row, b_col, precision=precision,
+                       preferred_element_type=jnp.float32).astype(ab.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ax_r, ax_c), P(ax_r, ax_c)),
+        out_specs=P(ax_r, ax_c),
+    )(a, b)
+
+
+def matmul_cannon(a: jax.Array, b: jax.Array, mesh: Mesh,
+                  axes: Tuple[str, str] = ("x", "y")) -> jax.Array:
+    """Cannon's algorithm on a square (p x p) mesh with ppermute rings.
+
+    Initial skew: A block-row i rotated left by i, B block-col j rotated up
+    by j; then p steps of (local GEMM-accumulate, rotate A left, rotate B up).
+    The rotate of step t+1 overlaps with the GEMM of step t on real hardware
+    (XLA latency-hiding) — the compute/comm overlap CMM gets from dedicated
+    comm processes.
+    """
+    ax_r, ax_c = axes
+    p_r = mesh.shape[ax_r]
+    p_c = mesh.shape[ax_c]
+    if p_r != p_c:
+        raise ValueError(f"Cannon needs a square mesh, got {p_r}x{p_c}")
+    p = p_r
+
+    def shift(x, axis_name, by):
+        n = p
+        perm = [(i, (i - by) % n) for i in range(n)]
+        return jax.lax.ppermute(x, axis_name, perm)
+
+    def body(ab, bb):
+        i = jax.lax.axis_index(ax_r)
+        j = jax.lax.axis_index(ax_c)
+        # skew: A_ij <- A_i,(j+i);  B_ij <- B_(i+j),j  -- realised as rotation
+        # by the *row/col index*, done with a log-free loop of ppermutes is
+        # data-dependent; instead use the standard trick: rotate row i left
+        # by i via a single ppermute with per-device permutation.
+        perm_a = []
+        for ii in range(p):
+            for jj in range(p):
+                src = ii * p + jj
+                dst = ii * p + ((jj - ii) % p)
+                perm_a.append((src, dst))
+        perm_b = []
+        for ii in range(p):
+            for jj in range(p):
+                src = ii * p + jj
+                dst = ((ii - jj) % p) * p + jj
+                perm_b.append((src, dst))
+        flat = (ax_r, ax_c)
+        ab = jax.lax.ppermute(ab, flat, perm_a)
+        bb = jax.lax.ppermute(bb, flat, perm_b)
+
+        def step(carry, _):
+            ab, bb, acc = carry
+            acc = acc + jnp.dot(ab, bb,
+                                preferred_element_type=jnp.float32)
+            ab = shift(ab, ax_c, 1)   # rotate A blocks left
+            bb = shift(bb, ax_r, 1)   # rotate B blocks up
+            return (ab, bb, acc), ()
+
+        acc0 = jnp.zeros((ab.shape[0], bb.shape[1]), jnp.float32)
+        # mark the carry as device-varying so the scan carry types match
+        # after the ppermutes (JAX >= 0.8 varying-manual-axes check)
+        if hasattr(jax.lax, "pcast"):
+            acc0 = jax.lax.pcast(acc0, (ax_r, ax_c), to="varying")
+        elif hasattr(jax.lax, "pvary"):
+            acc0 = jax.lax.pvary(acc0, (ax_r, ax_c))
+        (_, _, acc), _ = jax.lax.scan(step, (ab, bb, acc0), None, length=p)
+        return acc.astype(a.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ax_r, ax_c), P(ax_r, ax_c)),
+        out_specs=P(ax_r, ax_c),
+    )(a, b)
+
+
+def reduce_scatter_matmul(a: jax.Array, b: jax.Array, mesh: Mesh,
+                          axis: str = "model") -> jax.Array:
+    """k-sharded GEMM: A P(None, axis), B P(axis, None) -> C via psum_scatter.
+
+    The tensor-parallel contraction used by the LM stack's MLP second matmul:
+    each device holds a k-slice, computes a partial C, and the partials are
+    reduce-scattered (half the bytes of an all-reduce; the 'keep the result
+    sharded' trick — beyond-paper optimisation recorded in §Perf).
+    """
+    def body(ab, bb):
+        part = jnp.dot(ab, bb, preferred_element_type=jnp.float32)
+        out = jax.lax.psum_scatter(part, axis, scatter_dimension=1,
+                                   tiled=True)
+        return out.astype(a.dtype)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, axis), P(axis, None)),
+                     out_specs=P(None, axis))(a, b)

@@ -1,0 +1,105 @@
+"""Pallas flash attention (forward) — blocked online-softmax attention.
+
+Used by the LM stack's prefill path on TPU.  Tiling: grid over
+(batch*heads, q_blocks, kv_blocks) with the kv dimension minor-most; per
+(bh, qi) the kernel keeps the running max ``m``, normaliser ``l`` and the
+fp32 output accumulator in VMEM scratch, so the S x S score matrix never
+exists in HBM — the standard flash schedule re-blocked for VMEM (the MXU
+consumes (block_q, d) x (d, block_k) score GEMMs).
+
+Causal masking is two-level: kv blocks strictly above the diagonal are
+skipped entirely (``pl.when`` — no MXU work is issued), and the diagonal
+block is masked elementwise with iotas.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               nkv: int, scale: float, causal: bool,
+               block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip kv blocks entirely above the diagonal
+    run = (ki * block_k <= (qi + 1) * block_q - 1) if causal else True
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0]                      # (block_q, d)
+        k = k_ref[0]                      # (block_k, d)
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]               # (block_q, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """(B, H, S, D) flash attention; S must be padded to block multiples by
+    the caller for the causal case (non-causal pads with masked keys)."""
+    b, h, s, d = q.shape
+    sk = k.shape[2]
+    if s % block_q or sk % block_k:
+        raise ValueError(f"seq {s}/{sk} not divisible by blocks "
+                         f"{block_q}/{block_k}")
+    scale = 1.0 / (d ** 0.5)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    grid = (b * h, s // block_q, sk // block_k)
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, nkv=grid[2], scale=scale,
+                          causal=causal, block_q=block_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # normaliser l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

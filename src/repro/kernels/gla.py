@@ -1,0 +1,111 @@
+"""Pallas chunkwise gated-linear-attention kernel (mLSTM / mamba-head GLA).
+
+The XLA-level chunkwise GLA (models/ssm.py) is memory-bound on the hymba /
+xlstm cells: the per-chunk decay matrices and fp32 intermediates round-trip
+HBM.  This kernel keeps the recurrent state S (dk x dv), the normaliser n
+(dk), and all chunk intermediates in VMEM across the sequential chunk
+walk; HBM traffic is one read of q/k/v/log_a and one write of y.
+
+Grid: (B*H, S/chunk) with the chunk dim minor-most (sequential) — the
+state scratch persists across chunk steps of the same (b, h) program,
+exactly like the accumulator in the blocked-GEMM kernel.
+
+Layout notes: q/k/v arrive (B*H, S, d) so each block is a (chunk, d)
+VMEM tile; per-step scalar decays arrive (B*H, S, 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, la_ref, y_ref, state_ref, norm_ref, *,
+                nc: int, chunk: int, normalize: bool):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+        norm_ref[...] = jnp.zeros_like(norm_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (c, dk)
+    k = k_ref[0].astype(jnp.float32)          # (c, dk)
+    v = v_ref[0].astype(jnp.float32)          # (c, dv)
+    la = la_ref[0].astype(jnp.float32)        # (c, 1)
+
+    F = jnp.cumsum(la, axis=0)                # (c, 1)
+    total = F[-1]                             # (1,)
+    S_prev = state_ref[...]                   # (dk, dv)
+    n_prev = norm_ref[...]                    # (dk, 1)
+
+    q_dec = q * jnp.exp(F)                    # (c, dk)
+    y_inter = jnp.dot(q_dec, S_prev, preferred_element_type=jnp.float32)
+    n_inter = jnp.dot(q_dec, n_prev, preferred_element_type=jnp.float32)
+
+    qk = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (c, c)
+    d = F - F.T                               # F_i - F_j
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where(mask, d, -1e30))
+    scores = qk * decay
+    y_intra = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    n_intra = scores.sum(-1, keepdims=True)   # (c, 1)
+
+    k_tail = k * jnp.exp(total - F)           # (c, dk)
+    state_ref[...] = (jnp.exp(total) * S_prev
+                      + jnp.dot(k_tail.T, v,
+                                preferred_element_type=jnp.float32))
+    norm_ref[...] = (jnp.exp(total) * n_prev
+                     + k_tail.sum(0, keepdims=True).T)
+
+    y = y_inter + y_intra
+    if normalize:
+        y = y / jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "normalize",
+                                             "interpret"))
+def gla(q: jax.Array, k: jax.Array, v: jax.Array, log_a: jax.Array, *,
+        chunk: int = 128, normalize: bool = True,
+        interpret: bool = False) -> jax.Array:
+    """q/k (B, S, H, dk), v (B, S, H, dv), log_a (B, S, H) -> y (B,S,H,dv).
+
+    S must be divisible by `chunk`.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, x.shape[-1])
+
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    laf = log_a.transpose(0, 2, 1).reshape(b * h, s, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_gla_kernel, nc=nc, chunk=chunk,
+                          normalize=normalize),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), jnp.float32),   # recurrent state
+            pltpu.VMEM((dk, 1), jnp.float32),    # normaliser
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, laf)
+    return out.reshape(b, h, s, dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,138 @@
+"""Pallas blocked GEMM / GEMM-accumulate — CMM's ``addmul`` task on TPU.
+
+The paper's hot task is ``C_ij += A_ik @ B_kj`` on an L3-cache-tiled CPU
+BLAS.  The TPU adaptation re-tiles for the memory hierarchy HBM -> VMEM ->
+MXU: the ``pallas_call`` grid walks (i, j, k) output/contraction blocks, each
+step streaming one (bm, bk) A-block and one (bk, bn) B-block into VMEM,
+feeding the 128x128 systolic MXU, and accumulating into a float32 VMEM
+scratch that is written back to HBM once per (i, j) block (on the last k
+step).  Block sizes default to MXU-aligned 128 multiples; the CMM autotuner
+(core/autotune.py) selects them with the same simulate-candidates loop the
+paper uses for tile sizes.
+
+Kernels:
+  * ``matmul_kernel``  — C = A @ B
+  * ``addmul_kernel``  — C = C_in + A @ B   (the paper's addmul, fused)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    """Grid (i, j, k); k is the minor-most (fastest) dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _addmul_kernel(c_ref, a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    """o = c + a @ b ; accumulator seeded from the C block (fused addmul)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = c_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, mult: Tuple[int, int]) -> jax.Array:
+    m, n = x.shape
+    pm = (-m) % mult[0]
+    pn = (-n) % mult[1]
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _blocks(dim: int, blk: int) -> int:
+    return -(-dim // blk)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+           block_n: int = 128, block_k: int = 128,
+           interpret: bool = False) -> jax.Array:
+    """C = A @ B via the blocked Pallas kernel.  Ragged shapes are padded to
+    block multiples and the result sliced back (edge-tile handling)."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad matmul shapes {a.shape} @ {b.shape}")
+    m, kdim = a.shape
+    _, n = b.shape
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    ap = _pad_to(a, (block_m, block_k))
+    bp = _pad_to(b, (block_k, block_n))
+    gm, gn, gk = (_blocks(m, block_m), _blocks(n, block_n),
+                  _blocks(kdim, block_k))
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * block_m, gn * block_n),
+                                       out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def addmul(c: jax.Array, a: jax.Array, b: jax.Array, *, block_m: int = 128,
+           block_n: int = 128, block_k: int = 128,
+           interpret: bool = False) -> jax.Array:
+    """CMM's addmul: C + A @ B, fused (C is read block-wise into the VMEM
+    accumulator — no separate add pass over HBM)."""
+    m, kdim = a.shape
+    _, n = b.shape
+    if c.shape != (m, n):
+        raise ValueError(f"bad addmul shapes {c.shape} + {a.shape}@{b.shape}")
+    out_dtype = c.dtype
+    ap = _pad_to(a, (block_m, block_k))
+    bp = _pad_to(b, (block_k, block_n))
+    cp = _pad_to(c, (block_m, block_n))
+    gm, gn, gk = (_blocks(m, block_m), _blocks(n, block_n),
+                  _blocks(kdim, block_k))
+    out = pl.pallas_call(
+        functools.partial(_addmul_kernel, nk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * block_m, gn * block_n),
+                                       out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(cp, ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode — the
+kernel body runs as traced Python, validating the exact TPU tiling logic; on
+a TPU backend the same calls compile to Mosaic.  ``use_pallas()`` is the
+single switch the rest of the framework consults.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as _mm
+from . import flash_attention as _fa
+from . import gla as _gla
+from . import ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(a, b, *, block_m: int = 128, block_n: int = 128,
+           block_k: int = 128, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _mm.matmul(a, b, block_m=block_m, block_n=block_n,
+                      block_k=block_k, interpret=interpret)
+
+
+def addmul(c, a, b, *, block_m: int = 128, block_n: int = 128,
+           block_k: int = 128, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _mm.addmul(c, a, b, block_m=block_m, block_n=block_n,
+                      block_k=block_k, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def gla(q, k, v, log_a, *, chunk: int = 128, normalize: bool = True,
+        interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _gla.gla(q, k, v, log_a, chunk=chunk, normalize=normalize,
+                    interpret=interpret)
+
+
+__all__ = ["matmul", "addmul", "flash_attention", "gla", "ref"]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def addmul(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    acc = c.astype(jnp.float32) + jnp.dot(a, b,
+                                          preferred_element_type=jnp.float32)
+    return acc.astype(c.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: float | None = None
+                    ) -> jax.Array:
+    """(B, H, S, D) attention oracle, fp32 softmax."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        s, t = logits.shape[-2:]
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)

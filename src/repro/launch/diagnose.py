@@ -1,0 +1,91 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Per-op roofline diagnostics for one cell: top collectives and top HBM
+# kernels, with trip-count multipliers.  The §Perf hypothesis loop's
+# "profile" (no real hardware: the lowered IR is the profile).
+#
+#   python -m repro.launch.diagnose --arch qwen2.5-32b --shape prefill_32k
+
+import argparse
+
+import jax
+
+from . import hlo_analysis as H
+from .dryrun import build_cell
+from .mesh import make_production_mesh
+
+
+def dump(arch: str, shape: str, multi_pod: bool = False, top: int = 20,
+         plan_override=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, plan, cell, jitted, args = build_cell(arch, shape, mesh,
+                                               plan_override)
+    with mesh:
+        compiled = jitted.lower(*args).compile()
+    txt = compiled.as_text()
+    comps = H.parse_module(txt)
+    mult = H._multipliers(comps)
+    fusion_bodies = set()
+    for comp in comps.values():
+        for op in comp.ops.values():
+            if op.kind == "fusion":
+                fusion_bodies.update(op.callees)
+
+    colls, hbms = [], []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 1) or 1
+        dims_table = {}
+        for op in comp.ops.values():
+            sm = H._SHAPE_RE.search(op.text)
+            if sm and sm.group(2):
+                dims_table[op.name + "__dims__"] = tuple(
+                    int(x) for x in sm.group(2).split(","))
+            dims_table[op.name] = (op.result_elems, op.result_bytes)
+        in_fusion = cname in fusion_bodies
+        for op in comp.ops.values():
+            if op.kind in H.COLLECTIVES:
+                f = 2.0 if op.kind == "all-reduce" else 1.0
+                colls.append((m * f * op.result_bytes, m, op.kind, cname,
+                              op.text[:150]))
+            elif not in_fusion and op.kind not in H._SKIP_KINDS and \
+                    op.kind not in ("while", "conditional", "call"):
+                if op.kind in ("dynamic-slice", "slice", "gather"):
+                    b = 2 * op.result_bytes
+                elif op.kind == "dynamic-update-slice":
+                    b = 2 * (dims_table.get(op.operands[1], (0, 0))[1]
+                             if len(op.operands) > 1 else op.result_bytes)
+                elif op.kind == "fusion":
+                    b = op.result_bytes + H._fusion_operand_bytes(
+                        op, comps, dims_table)
+                else:
+                    b = op.result_bytes + sum(
+                        dims_table.get(o, (0, 0))[1] for o in op.operands)
+                hbms.append((m * b, m, op.kind, cname, op.text[:120]))
+
+    colls.sort(reverse=True)
+    hbms.sort(reverse=True)
+    print(f"\n==== {arch} {shape} "
+          f"{'multi' if multi_pod else 'single'}-pod ====")
+    st = H.analyze(txt)
+    print(f"flops={st.flops:.3e} hbm={st.hbm_bytes:.3e} "
+          f"coll={st.collective_bytes:.3e}")
+    print(f"\n-- top {top} collectives (bytes x mult) --")
+    for b, m, kind, cname, t in colls[:top]:
+        print(f"{b/2**30:9.2f}GiB x{m:5d} {kind:19s} {t[:100]}")
+    print(f"\n-- top {top} HBM kernels --")
+    for b, m, kind, cname, t in hbms[:top]:
+        print(f"{b/2**30:9.2f}GiB x{m:5d} {kind:19s} {t[:100]}")
+    return compiled
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    ap.parse_args_ns = ap.parse_args()
+    a = ap.parse_args_ns
+    dump(a.arch, a.shape, a.multi, a.top)

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST precede every other import (including
+# `from __future__`-free jax imports) — jax locks the device count at first
+# init.  That is why this module has no `from __future__ import annotations`.
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS assignment above executes before any jax import so the 512
+placeholder host devices exist when jax initialises.
+
+For each cell this produces, into ``results/dryrun/<mesh>/<arch>/<shape>.json``:
+  * compiled memory_analysis (arg/output/temp/peak bytes per device),
+  * compiled cost_analysis (XLA's own numbers, trip-count-naive),
+  * our HLO-text analysis (flops / HBM bytes / collective bytes, with
+    while-loop trip counts applied — see hlo_analysis.py),
+  * the roofline terms (launch/roofline.py) and MODEL_FLOPS ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --resume   # skip cells already done
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ARCH_IDS, SHAPES, cells
+from ..train.steps import make_train_step, make_prefill_step, make_decode_step
+from . import specs as S
+from .mesh import make_production_mesh
+from .hlo_analysis import analyze
+from .roofline import roofline_terms, V5E
+
+RESULTS_DIR = os.environ.get(
+    "DRYRUN_RESULTS",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "results", "dryrun"))
+
+
+def build_cell(arch: str, shape: str, mesh, plan_override=None):
+    """Returns (jitted_fn, example_args_abstract) for the cell."""
+    cfg, plan, cell = S.resolve_cell(arch, shape, mesh)
+    if plan_override is not None:
+        plan = plan_override(cfg, plan, cell)
+    if cell.kind == "train":
+        step, _ = make_train_step(cfg, plan, mesh)
+        params = S.params_struct(cfg)
+        p_sh = S.params_shardings(cfg, plan, mesh)
+        opt = S.opt_struct(plan, params)
+        o_sh = S.opt_shardings(cfg, plan, mesh)
+        batch = S.batch_struct(cfg, cell, plan, train=True)
+        b_sh = S.batch_shardings(cfg, cell, plan, mesh, train=True)
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+        args = (params, opt, batch)
+    elif cell.kind == "prefill":
+        max_len = cell.seq_len + (cfg.vision_patches or 0)
+        step = make_prefill_step(cfg, plan, mesh, max_len=max_len)
+        params = S.params_struct(cfg)
+        p_sh = S.params_shardings(cfg, plan, mesh)
+        batch = S.batch_struct(cfg, cell, plan, train=False)
+        b_sh = S.batch_shardings(cfg, cell, plan, mesh, train=False)
+        # pin the produced cache's sharding (seq-sharded KV etc.) — without
+        # this the inferred output layout replicates the cache over `model`
+        cache_abs = D_cache = S.decode_cache_struct(cfg, plan, cell)
+        c_sh = S.cache_shardings(cfg, plan, mesh, cache_abs)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(c_sh, None, None))
+        args = (params, batch)
+    else:  # decode
+        step = make_decode_step(cfg, plan, mesh)
+        params = S.params_struct(cfg)
+        p_sh = S.params_shardings(cfg, plan, mesh)
+        cache = S.decode_cache_struct(cfg, plan, cell)
+        c_sh = S.cache_shardings(cfg, plan, mesh, cache)
+        token = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+        t_sh = jax.NamedSharding(
+            mesh, S.M.Resolver(plan, mesh).spec(
+                ("batch", None), (cell.global_batch, 1)))
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                         donate_argnums=(1,))
+        args = (params, cache, token)
+    return cfg, plan, cell, jitted, args
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str,
+             save: bool = True, plan_override=None) -> dict:
+    t0 = time.perf_counter()
+    cfg, plan, cell, jitted, args = build_cell(arch, shape, mesh,
+                                               plan_override)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = analyze(compiled.as_text())
+    n_chips = mesh.devices.size
+    terms = roofline_terms(hlo, n_chips, V5E)
+    mf = S.model_flops(cfg, cell)
+    out = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "chips": int(n_chips),
+        "plan": {"name": plan.name, "microbatches": plan.microbatches,
+                 "optimizer": plan.optimizer, "remat": plan.remat,
+                 "kv_shard": plan.kv_shard,
+                 "grad_reduce": plan.grad_reduce,
+                 "compress_grads": plan.compress_grads},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.peak_memory_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "xla_cost": {k: cost.get(k) for k in
+                     ("flops", "bytes accessed", "transcendentals")},
+        "hlo": hlo.as_dict(),
+        "roofline": terms,
+        "model_flops": mf,
+        "model_flops_per_chip": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / max(hlo.flops, 1.0),
+        "timing": {"lower_s": t_lower, "compile_s": t_compile},
+    }
+    if save:
+        d = os.path.join(RESULTS_DIR, mesh_name, arch)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{shape}.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def cell_done(arch, shape, mesh_name) -> bool:
+    return os.path.exists(os.path.join(RESULTS_DIR, mesh_name, arch,
+                                       f"{shape}.json"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    todo = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in cells(arch):
+                todo.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch, shape in todo:
+            if args.resume and cell_done(arch, shape, mesh_name):
+                print(f"[skip] {mesh_name} {arch} {shape}")
+                continue
+            try:
+                r = run_cell(arch, shape, mesh, mesh_name)
+                t = r["roofline"]
+                print(f"[ok] {mesh_name} {arch:24s} {shape:12s} "
+                      f"compile={r['timing']['compile_s']:.1f}s "
+                      f"peak={r['memory']['peak_bytes']/2**30:.2f}GiB "
+                      f"comp={t['compute_s']:.4f}s mem={t['memory_s']:.4f}s "
+                      f"coll={t['collective_s']:.4f}s "
+                      f"bound={t['bound']}", flush=True)
+            except Exception as e:
+                failures.append((mesh_name, arch, shape, repr(e)))
+                print(f"[FAIL] {mesh_name} {arch} {shape}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        raise SystemExit(1)
+    print("\nall cells compiled")
+
+
+if __name__ == "__main__":
+    main()

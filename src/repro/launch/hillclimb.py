@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# §Perf hillclimb driver: re-lower a cell under a named plan variant and
+# compare its roofline terms against the stored baseline.
+#
+#   python -m repro.launch.hillclimb --cell qwen2.5-32b/prefill_32k \
+#       --variant ctx_parallel
+#   python -m repro.launch.hillclimb --all        # run the whole ladder
+
+import argparse
+import json
+from dataclasses import replace
+
+from .dryrun import RESULTS_DIR, run_cell
+from .mesh import make_production_mesh
+
+PERF_DIR = os.path.join(os.path.dirname(RESULTS_DIR), "perf")
+
+
+# ---- plan variants (the hypothesis ladder; see EXPERIMENTS.md §Perf) ------
+
+def v_ctx_parallel(cfg, plan, cell):
+    """Context parallelism: shard q-sequence + activations' seq on model.
+    For heads%16!=0 archs this removes the replicated-attention partition
+    GSPMD falls into (the 40 GiB f32 score all-reduces)."""
+    return plan.with_rules(seq_attn=("model",), seq_act=("model",))
+
+
+def v_seq_act(cfg, plan, cell):
+    """Megatron-SP style: activations' sequence sharded between sublayers
+    (norms/residuals compute on seq shards; boundary collectives become
+    reduce-scatter/all-gather pairs)."""
+    return plan.with_rules(seq_act=("model",))
+
+
+def v_grad_rs(cfg, plan, cell):
+    """Pin accumulated grads to param sharding inside the micro loop ->
+    per-microbatch reduce-scatter instead of all-reduce."""
+    return replace(plan, grad_constraint=True)
+
+
+def v_moe_constraints(cfg, plan, cell):
+    """Pin MoE dispatch/expert buffers to the experts axis (all-to-all
+    dispatch instead of GSPMD's scatter guess)."""
+    return replace(plan, moe_constraints=True)
+
+
+def v_compress(cfg, plan, cell):
+    """int8 error-feedback grad compression (hypothesis: reduces DP wire
+    bytes — measured to check whether the quantise/dequantise pair actually
+    straddles the GSPMD-inserted reduction)."""
+    return replace(plan, compress_grads=True)
+
+
+def chain(*fns):
+    def f(cfg, plan, cell):
+        for fn in fns:
+            plan = fn(cfg, plan, cell)
+        return plan
+    f.__doc__ = " + ".join(fn.__name__ for fn in fns)
+    return f
+
+
+def v_chunk2k(cfg, plan, cell):
+    """Double the flash KV chunk: halves (m,l,acc) carry rmw traffic."""
+    return replace(plan, attn_chunk=2048)
+
+
+def v_chunk4k(cfg, plan, cell):
+    return replace(plan, attn_chunk=4096)
+
+
+def v_gather_once(cfg, plan, cell):
+    """all-gather FSDP weights once per step, reuse across microbatches
+    (CMM cache insight); one reduce-scatter of the accumulated cotangent."""
+    return replace(plan, gather_once=True)
+
+
+def v_moe_ep(cfg, plan, cell):
+    """shard_map expert parallelism: local dispatch + one psum combine
+    (replaces GSPMD's fp32 flat-tensor all-reduces)."""
+    return replace(plan, moe_impl="expert_parallel")
+
+
+VARIANTS = {
+    "ctx_parallel": v_ctx_parallel,
+    "moe_ep": v_moe_ep,
+    "gather_once": v_gather_once,
+    "ctx_gather": chain(v_ctx_parallel, v_gather_once),
+    "ctx_chunk2k": chain(v_ctx_parallel, v_chunk2k),
+    "ctx_chunk4k": chain(v_ctx_parallel, v_chunk4k),
+    "seq_act": v_seq_act,
+    "grad_rs": v_grad_rs,
+    "moe_constraints": v_moe_constraints,
+    "compress": v_compress,
+    "moe_all": chain(v_moe_constraints, v_grad_rs, v_seq_act),
+    "dense_all": chain(v_seq_act, v_grad_rs),
+    "ctx_all": chain(v_ctx_parallel, v_grad_rs),
+}
+
+#: the three hillclimb cells (worst roofline fraction / most collective-
+#: bound / most technique-representative) and their variant ladders
+LADDER = [
+    ("qwen2.5-32b", "prefill_32k", ["ctx_parallel"]),
+    ("qwen3-moe-235b-a22b", "train_4k",
+     ["moe_constraints", "grad_rs", "seq_act", "moe_ep"]),
+    ("nemotron-4-340b", "train_4k",
+     ["seq_act", "grad_rs", "dense_all", "compress"]),
+]
+
+
+def baseline(arch, shape, mesh_name="single_pod_16x16"):
+    p = os.path.join(RESULTS_DIR, mesh_name, arch, f"{shape}.json")
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+def run_variant(arch, shape, variant, mesh=None, save=True):
+    mesh = mesh or make_production_mesh()
+    fn = VARIANTS[variant]
+    out = run_cell(arch, shape, mesh, "single_pod_16x16", save=False,
+                   plan_override=fn)
+    out["variant"] = variant
+    if save:
+        d = os.path.join(PERF_DIR, arch)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{shape}__{variant}.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    base = baseline(arch, shape)
+    print(f"\n=== {arch} {shape} :: {variant} ===")
+    if base:
+        for term in ("compute_s", "memory_s", "collective_s"):
+            b = base["roofline"][term]
+            v = out["roofline"][term]
+            d = (v - b) / max(b, 1e-12) * 100
+            print(f"  {term:14s} {b:10.3f} -> {v:10.3f}  ({d:+.1f}%)")
+        print(f"  bound          {base['roofline']['bound']:>10s} -> "
+              f"{out['roofline']['bound']:>10s}")
+        print(f"  step bound     {base['roofline']['step_lower_bound_s']:10.3f} -> "
+              f"{out['roofline']['step_lower_bound_s']:10.3f}")
+        print(f"  peak GiB       {base['memory']['peak_bytes']/2**30:10.2f} -> "
+              f"{out['memory']['peak_bytes']/2**30:10.2f}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", help="arch/shape")
+    ap.add_argument("--variant", choices=list(VARIANTS))
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    mesh = make_production_mesh()
+    if args.all:
+        for arch, shape, variants in LADDER:
+            for v in variants:
+                try:
+                    run_variant(arch, shape, v, mesh)
+                except Exception as e:
+                    print(f"[FAIL] {arch}/{shape}/{v}: {e}")
+    else:
+        arch, shape = args.cell.split("/")
+        run_variant(arch, shape, args.variant, mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,357 @@
+"""HLO-text analysis for the roofline: FLOPs, HBM bytes, collective bytes —
+with while-loop trip counts applied.
+
+``compiled.cost_analysis()`` does NOT multiply while bodies by their trip
+count (verified empirically: a 10-step scan of matmuls reports 1x the
+flops), so every term here is derived from our own parse of
+``compiled.as_text()``:
+
+* computations are parsed into (name -> ops) with a per-op result shape and
+  operand names;
+* while ops carry ``backend_config={"known_trip_count":{"n":"N"}}`` for
+  lax.scan — we build the computation call graph and propagate multipliers
+  (a collective inside the layer scan inside the microbatch scan counts
+  L x MB times);
+* FLOPs: dot ops contribute 2 * prod(result) * prod(contracted dims)
+  (elementwise is ignored — sub-1% for these models);
+* HBM bytes: the scheduled module's top-level ops are post-fusion kernels;
+  each kernel reads its operands and writes its result once.  We sum
+  (result + operands) bytes over kernel ops, skipping pure-metadata ops
+  (tuple/gte/parameter/constant/bitcast) and collectives (counted in their
+  own term);
+* collective bytes (per device): all-gather / reduce-scatter /
+  all-to-all / collective-permute move ~result bytes per device;
+  all-reduce moves ~2x (reduce-scatter + all-gather phases).
+
+CPU-backend promotion correction: the host-device dry-run promotes every
+bf16 reduction to f32 (``to_apply=%add.clone_promoted`` — the XLA:CPU
+lowering converts operands to f32 around the all-reduce), and the f32
+chains it creates drag neighbouring weight all-gathers to f32 via fused
+converts.  On the TPU target these collectives are native bf16, so:
+  * an all-reduce applying a ``*_promoted`` computation is counted at
+    HALF its f32 size;
+  * a gather-family collective with an f32 result whose producer is a
+    convert-fusion is likewise counted at half (bf16 storage dtype).
+The corrected and uncorrected totals are both reported.
+
+These are estimator semantics (ring-algorithm (n-1)/n factors are folded
+to 1), i.e. a slight upper bound — applied uniformly across cells, so
+comparisons and hillclimbing stay valid.  See EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_shape(s: str) -> Tuple[int, int]:
+    """'bf16[16,512]' -> (elements, bytes). Tuples: sum of parts."""
+    total_elems, total_bytes = 0, 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_elems += elems
+        total_bytes += elems * _DTYPE_BYTES[dt]
+    return total_elems, total_bytes
+
+
+@dataclass
+class Op:
+    name: str
+    text: str
+    kind: str
+    result_bytes: int
+    result_elems: int
+    operands: List[str]
+    callees: List[str]
+    trip: Optional[int] = None
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op] = field(default_factory=dict)
+
+
+_SKIP_KINDS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "broadcast",
+    "reshape", "transpose",  # layout ops usually fused/free at this level
+}
+
+
+def _first_shape_span(rhs: str) -> str:
+    # result type is the text before the opcode, e.g. '(f32[],...) while(...'
+    # or 'bf16[16,512]{1,0} dot(...'
+    return rhs
+
+
+def _opcode(rhs: str) -> str:
+    # rhs looks like: 'bf16[2,4]{1,0} dot(%a, %b), ...' or '(s32[],..) while(..)'
+    m = re.search(r"\)?\s*([a-z][a-z0-9\-]*)\(", rhs)
+    return m.group(1) if m else "unknown"
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if line and not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(1))
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        kind = _opcode(rhs)
+        # result shape: everything before the opcode token
+        idx = rhs.find(f" {kind}(")
+        shape_txt = rhs[:idx] if idx > 0 else rhs.split(kind + "(")[0]
+        elems, nbytes = parse_shape(shape_txt)
+        # operand names: %refs inside the first (...) after opcode
+        paren = rhs[rhs.find(kind + "(") + len(kind):]
+        depth = 0
+        arglist = []
+        for ch_i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    arglist = re.findall(r"%([\w\.\-]+)", paren[:ch_i])
+                    break
+        callees = _CALL_ATTR_RE.findall(rhs)
+        trip = None
+        tm = _TRIP_RE.search(rhs)
+        if tm:
+            trip = int(tm.group(1))
+        cur.ops[name] = Op(name, rhs, kind, nbytes, elems,
+                           arglist, callees, trip)
+    return comps
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, int]:
+    """computation name -> total execution multiplier (trip products)."""
+    entry = comps.get("__entry__")
+    mult = {c: 0 for c in comps if c != "__entry__"}
+    if entry is None:
+        return {c: 1 for c in mult}
+    mult[entry.name] = 1
+
+    # propagate: repeat until fixpoint (call graphs are shallow)
+    for _ in range(50):
+        changed = False
+        for cname, comp in comps.items():
+            if cname == "__entry__" or mult.get(cname, 0) == 0:
+                continue
+            base = mult[cname]
+            for op in comp.ops.values():
+                t = op.trip if (op.kind == "while" and op.trip) else 1
+                for callee in op.callees:
+                    want = base * t
+                    if callee in mult and mult[callee] < want:
+                        mult[callee] = want
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(op: Op, shapes: Dict[str, Tuple[int, int]]) -> int:
+    """2 * prod(result dims) * prod(contracted dims of lhs)."""
+    m = _DOT_CONTRACT_RE.search(op.text)
+    if not m or not op.operands:
+        return 2 * op.result_elems  # fallback
+    lhs = op.operands[0]
+    dims = shapes.get(lhs + "__dims__")
+    if dims is None:
+        return 2 * op.result_elems
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    csize = 1
+    for c in cdims:
+        if c < len(dims):
+            csize *= dims[c]
+    return 2 * op.result_elems * csize
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_operand_bytes(op: Op, comps: Dict[str, "Computation"],
+                          dims_table: Dict[str, Tuple]) -> int:
+    body = comps.get(op.callees[0])
+    full = {i: dims_table.get(o, (0, 0))[1]
+            for i, o in enumerate(op.operands)}
+    if body is None:
+        return sum(full.values())
+    # map body parameter names -> operand index
+    pidx = {}
+    for bop in body.ops.values():
+        if bop.kind == "parameter":
+            m2 = _PARAM_IDX_RE.search(bop.text)
+            if m2:
+                pidx[bop.name] = int(m2.group(1))
+    sliced_bytes: Dict[int, int] = {}
+    direct_use: Dict[int, bool] = {}
+    for bop in body.ops.values():
+        if bop.kind == "parameter":
+            continue
+        for oi, oname in enumerate(bop.operands):
+            if oname in pidx:
+                i = pidx[oname]
+                if bop.kind in ("dynamic-slice", "gather", "slice") and \
+                        oi == 0:
+                    sliced_bytes[i] = sliced_bytes.get(i, 0) + \
+                        bop.result_bytes
+                else:
+                    direct_use[i] = True
+    total = 0
+    for i, fb in full.items():
+        if i in sliced_bytes and not direct_use.get(i):
+            total += min(sliced_bytes[i], fb)
+        else:
+            total += fb
+    return total
+
+
+@dataclass
+class HloStats:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    per_collective: Dict[str, float]
+    n_collectives: Dict[str, int]
+    #: bytes before the CPU-promotion correction (see module docstring)
+    collective_bytes_raw: float = 0.0
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_bytes_raw": self.collective_bytes_raw,
+            "per_collective": self.per_collective,
+            "n_collectives": self.n_collectives,
+        }
+
+
+def _promotion_factor(op: Op, comp: "Computation") -> float:
+    """0.5 when this collective's f32 width is a CPU-lowering artifact."""
+    if "f32[" not in op.text:
+        return 1.0
+    if op.kind == "all-reduce" and "_promoted" in op.text:
+        return 0.5
+    if op.kind in ("all-gather", "reduce-scatter", "all-to-all",
+                   "collective-permute") and op.operands:
+        prod = comp.ops.get(op.operands[0])
+        if prod is not None and "convert" in prod.name:
+            return 0.5
+    return 1.0
+
+
+def analyze(text: str) -> HloStats:
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+
+    # computations that are fusion bodies: their internal elementwise ops do
+    # NOT touch HBM (the fusion kernel's own operands/result do, counted at
+    # the call site); dots inside them still count for flops.
+    fusion_bodies = set()
+    for comp in comps.values():
+        for op in comp.ops.values():
+            if op.kind == "fusion":
+                fusion_bodies.update(op.callees)
+
+    flops = 0.0
+    hbm = 0.0
+    coll = 0.0
+    coll_raw = 0.0
+    per: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    cnt: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 1) or 1
+        in_fusion = cname in fusion_bodies
+        # per-comp dims table
+        dims_table: Dict[str, Tuple] = {}
+        for op in comp.ops.values():
+            sm = _SHAPE_RE.search(op.text)
+            if sm and sm.group(2):
+                dims_table[op.name + "__dims__"] = tuple(
+                    int(x) for x in sm.group(2).split(","))
+            dims_table[op.name] = (op.result_elems, op.result_bytes)
+        for op in comp.ops.values():
+            if op.kind in ("dot", "convolution"):
+                flops += m * _dot_flops(op, dims_table)
+            if op.kind in COLLECTIVES:
+                factor = 2.0 if op.kind == "all-reduce" else 1.0
+                raw = m * factor * op.result_bytes
+                b = raw * _promotion_factor(op, comp)
+                coll_raw += raw
+                coll += b
+                per[op.kind] += b
+                cnt[op.kind] += m
+                continue
+            if in_fusion or op.kind in _SKIP_KINDS or \
+                    op.kind in ("while", "conditional", "call"):
+                continue
+            # kernel-level HBM traffic: result + operands — EXCEPT sliced
+            # access patterns, which only touch the slice, not the full
+            # operand (the layer scan dynamic-slices its stacked params:
+            # counting the whole (L, ...) array per iteration would inflate
+            # the term by ~L x).
+            if op.kind in ("dynamic-slice", "slice", "gather"):
+                hbm += m * 2 * op.result_bytes          # read slice + write
+                continue
+            if op.kind == "dynamic-update-slice":
+                upd = (dims_table.get(op.operands[1], (0, 0))[1]
+                       if len(op.operands) > 1 else op.result_bytes)
+                hbm += m * 2 * upd                      # rmw of the slice
+                continue
+            if op.kind == "scatter":
+                upd = (dims_table.get(op.operands[2], (0, 0))[1]
+                       if len(op.operands) > 2 else op.result_bytes)
+                hbm += m * 3 * upd                      # read+add+write
+                continue
+            rb = op.result_bytes
+            if op.kind == "fusion" and op.callees:
+                # an operand consumed only through dynamic-slice/gather
+                # inside the body is read slice-wise, not in full
+                ob = _fusion_operand_bytes(op, comps, dims_table)
+            else:
+                ob = sum(dims_table.get(o, (0, 0))[1] for o in op.operands)
+            hbm += m * (rb + ob)
+    return HloStats(flops, hbm, coll, per, cnt, collective_bytes_raw=coll_raw)

@@ -1,0 +1,47 @@
+"""Roofline terms from the dry-run artifacts (TPU v5e targets).
+
+    compute_s    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory_s     = HBM_bytes_per_chip / HBM_bw
+    collective_s = collective_bytes_per_chip / link_bw
+
+The HLO stats are per-device (the compiled module is the SPMD-partitioned
+per-device program) with while-loop trip counts applied by
+launch/hlo_analysis.py.  The dominant term is the bottleneck the §Perf loop
+iterates on; roofline fraction = compute_s / max(all terms) (how close the
+cell is to being compute-bound at peak).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from .hlo_analysis import HloStats
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float     # bf16 FLOP/s per chip
+    hbm_bw: float         # bytes/s per chip
+    link_bw: float        # bytes/s per ICI link
+    hbm_bytes: float      # capacity per chip
+
+
+V5E = Hardware("tpu_v5e", 197e12, 819e9, 50e9, 16 * 2**30)
+
+
+def roofline_terms(hlo: HloStats, n_chips: int,
+                   hw: Hardware = V5E) -> Dict[str, float]:
+    compute_s = hlo.flops / hw.peak_flops
+    memory_s = hlo.hbm_bytes / hw.hbm_bw
+    collective_s = hlo.collective_bytes / hw.link_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bound = max(terms, key=terms.get)
+    total = max(max(terms.values()), 1e-30)
+    return {
+        **terms,
+        "bound": bound.replace("_s", ""),
+        "roofline_fraction": compute_s / total,
+        "step_lower_bound_s": total,
+    }

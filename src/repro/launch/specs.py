@@ -1,0 +1,191 @@
+"""Abstract input specs + shardings for every (arch x shape x mesh) cell.
+
+Everything here is ``jax.ShapeDtypeStruct`` — the dry-run lowers and
+compiles without allocating a byte (the pattern the assignment calls the
+shannon/kernels pattern).  The same builders feed the real launchers
+(launch/train.py, launch/serve.py), which substitute concrete arrays.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import (ModelConfig, ParallelPlan, ShapeCell, SHAPES,
+                            get_config, get_plan)
+from ..models import lm as M
+from ..models import decode as D
+
+SDS = jax.ShapeDtypeStruct
+
+
+def dp_size(plan: ParallelPlan, mesh) -> int:
+    n = 1
+    for a in plan.rule("batch"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def effective_microbatches(plan: ParallelPlan, cell: ShapeCell,
+                           mesh) -> int:
+    """Largest mb <= plan.microbatches with (B/mb) % dp == 0."""
+    dp = dp_size(plan, mesh)
+    b = cell.global_batch
+    mb = min(plan.microbatches, max(b // dp, 1))
+    while mb > 1 and ((b % mb) or ((b // mb) % dp)):
+        mb -= 1
+    return max(mb, 1)
+
+
+def resolve_cell(arch: str, shape: str, mesh) -> Tuple[ModelConfig,
+                                                       ParallelPlan,
+                                                       ShapeCell]:
+    cfg = get_config(arch)
+    plan = get_plan(arch, shape)
+    cell = SHAPES[shape]
+    plan = replace(plan, microbatches=effective_microbatches(
+        plan, cell, mesh) if cell.kind == "train" else 1)
+    return cfg, plan, cell
+
+
+# -- batches ----------------------------------------------------------------
+
+
+def batch_struct(cfg: ModelConfig, cell: ShapeCell, plan: ParallelPlan,
+                 train: bool) -> Dict[str, SDS]:
+    b, s = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    lead: Tuple[int, ...]
+    if train and plan.microbatches > 1:
+        lead = (plan.microbatches, b // plan.microbatches)
+    else:
+        lead = (b,)
+    out = {"tokens": SDS(lead + (s,), jnp.int32)}
+    if train:
+        out["labels"] = SDS(lead + (s,), jnp.int32)
+        out["mask"] = SDS(lead + (s,), jnp.float32)
+    if cfg.enc_dec:
+        out["frames"] = SDS(lead + (cfg.enc_frames, cfg.d_model), dt)
+    if cfg.vision_patches:
+        out["patches"] = SDS(lead + (cfg.vision_patches, cfg.d_model), dt)
+    return out
+
+
+def batch_shardings(cfg, cell, plan, mesh, train: bool,
+                    res: Optional[M.Resolver] = None):
+    res = res or M.Resolver(plan, mesh)
+    bs = batch_struct(cfg, cell, plan, train)
+    out = {}
+    for k, v in bs.items():
+        nlead = 2 if (train and plan.microbatches > 1) else 1
+        axes = ((None,) * (nlead - 1) + ("batch",)
+                + (None,) * (len(v.shape) - nlead))
+        out[k] = NamedSharding(mesh, res.spec(axes, v.shape))
+    return out
+
+
+# -- optimizer state ----------------------------------------------------------
+
+
+def opt_struct(plan: ParallelPlan, params_abs: Dict[str, SDS]
+               ) -> Dict[str, Any]:
+    if plan.optimizer == "adafactor":
+        f = {}
+        for k, v in params_abs.items():
+            if len(v.shape) >= 2:
+                f[k] = (SDS(v.shape[:-1], jnp.float32),
+                        SDS(v.shape[:-2] + v.shape[-1:], jnp.float32))
+            else:
+                f[k] = (SDS(v.shape, jnp.float32), SDS((), jnp.float32))
+        st: Dict[str, Any] = {"step": SDS((), jnp.int32), "f": f}
+    else:
+        st = {"step": SDS((), jnp.int32),
+              "m": {k: SDS(v.shape, jnp.float32)
+                    for k, v in params_abs.items()},
+              "v": {k: SDS(v.shape, jnp.float32)
+                    for k, v in params_abs.items()}}
+    if plan.compress_grads:
+        st["compress_err"] = {k: SDS(v.shape, jnp.float32)
+                              for k, v in params_abs.items()}
+    return st
+
+
+def opt_shardings(cfg: ModelConfig, plan: ParallelPlan, mesh,
+                  res: Optional[M.Resolver] = None) -> Dict[str, Any]:
+    res = res or M.Resolver(plan, mesh)
+    specs = M.param_specs(cfg)
+    rep = NamedSharding(mesh, P())
+
+    def like_param(k):
+        shape, axes, _ = specs[k]
+        return NamedSharding(mesh, res.spec(axes, shape))
+
+    if plan.optimizer == "adafactor":
+        f = {}
+        for k, (shape, axes, _) in specs.items():
+            if len(shape) >= 2:
+                f[k] = (NamedSharding(mesh, res.spec(axes[:-1], shape[:-1])),
+                        NamedSharding(mesh, res.spec(
+                            axes[:-2] + axes[-1:], shape[:-2] + shape[-1:])))
+            else:
+                f[k] = (like_param(k), rep)
+        st: Dict[str, Any] = {"step": rep, "f": f}
+    else:
+        st = {"step": rep,
+              "m": {k: like_param(k) for k in specs},
+              "v": {k: like_param(k) for k in specs}}
+    if plan.compress_grads:
+        st["compress_err"] = {k: like_param(k) for k in specs}
+    return st
+
+
+# -- caches -------------------------------------------------------------------
+
+
+def decode_cache_struct(cfg, plan, cell: ShapeCell) -> Dict[str, SDS]:
+    max_len = cell.seq_len + (cfg.vision_patches or 0)
+    return D.cache_spec(cfg, plan, cell.global_batch, max_len,
+                        jnp.dtype(cfg.dtype))
+
+
+def cache_shardings(cfg, plan, mesh, cache_abs,
+                    res: Optional[M.Resolver] = None):
+    res = res or M.Resolver(plan, mesh)
+    axes = D.cache_axes(cfg, plan)
+    return {k: NamedSharding(mesh, res.spec(axes[k], v.shape))
+            for k, v in cache_abs.items()}
+
+
+# -- param shardings -----------------------------------------------------------
+
+
+def params_struct(cfg: ModelConfig) -> Dict[str, SDS]:
+    return M.abstract_params(cfg)
+
+
+def params_shardings(cfg: ModelConfig, plan: ParallelPlan, mesh,
+                     res: Optional[M.Resolver] = None):
+    res = res or M.Resolver(plan, mesh)
+    return M.param_shardings(cfg, res)
+
+
+# -- model-level FLOPs (6ND) ---------------------------------------------------
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS: 6*N*D for train, 2*N*D forward-only (per step/token)."""
+    counts = cfg.param_counts()
+    n = counts["active"]
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch

@@ -1,0 +1,389 @@
+"""Serving path: cache init, prefill, single-token decode for all families.
+
+Cache layouts (leading L so the layer scan consumes dim 0):
+  * attn / vlm:  k,v (L, B, Smax, KV, hd) + scalar pos.  KV cache sharding
+    is plan-selected: heads on `model` when KV %16 == 0, else the SEQUENCE
+    dim shards on `model` (decode softmax then reduces over the sharded seq
+    axis — a psum GSPMD inserts);
+  * enc-dec:     + cross k,v (L, B, F, KV, hd) precomputed from the encoder;
+  * hymba:       ring k,v (L, B, W, KV, hd) (sliding window W) + GLA state
+    (L, B, H, N, hd) — O(W + state) memory at any context length;
+  * mlstm:       GLA state (L, B, H, dk, dv) + normaliser (L, B, H, dk) —
+    O(1) in context length (why long_500k runs for this family).
+
+`decode_step` is one fused step: embed -> layer scan (cache read/update) ->
+unembed -> greedy next token.  This is the fn lowered for decode_32k /
+long_500k cells.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ParallelPlan
+from . import layers as L
+from .lm import (Resolver, _embed, _hymba_ssm_qkv, _layer_stack,
+                 _mlp_sublayer, _mlstm_qkv, _moe_apply, _norm,
+                 _project_qkv, _unembed, _attn_sublayer, _run_encoder,
+                 forward)
+from .moe import moe_ffn
+from .ssm import chunkwise_gla, gla_decode_step
+
+
+def _kv_axes(cfg: ModelConfig, plan: ParallelPlan) -> Tuple:
+    """Logical axes for the (B, S, KV, hd) cache dims."""
+    mode = plan.kv_shard
+    if mode == "auto":
+        mode = "heads" if cfg.n_kv % 16 == 0 else "seq"
+    if mode == "heads":
+        return ("batch", None, "kv_heads", None)
+    if mode == "seq":
+        return ("batch", "seq_kv", None, None)
+    return ("batch", None, None, None)
+
+
+KV_SEQ_RULE = ("seq_kv", ("model",))  # appended to plans at resolve time
+
+
+def cache_spec(cfg: ModelConfig, plan: ParallelPlan, batch: int,
+               max_len: int, dtype=jnp.bfloat16) -> Dict[str, object]:
+    """Abstract cache structure (ShapeDtypeStructs; no allocation)."""
+    nl, kv, hd, h = cfg.n_layers, cfg.n_kv, cfg.head_dim, cfg.n_heads
+    sds = jax.ShapeDtypeStruct
+    c: Dict[str, object] = {"pos": sds((), jnp.int32)}
+    if cfg.block == "attn":
+        c["k"] = sds((nl, batch, max_len, kv, hd), dtype)
+        c["v"] = sds((nl, batch, max_len, kv, hd), dtype)
+        if cfg.enc_dec:
+            c["ck"] = sds((nl, batch, cfg.enc_frames, kv, hd), dtype)
+            c["cv"] = sds((nl, batch, cfg.enc_frames, kv, hd), dtype)
+    elif cfg.block == "hymba":
+        w = min(cfg.window, max_len)
+        c["k"] = sds((nl, batch, w, kv, hd), dtype)
+        c["v"] = sds((nl, batch, w, kv, hd), dtype)
+        c["state"] = sds((nl, batch, h, cfg.ssm_state, hd), jnp.float32)
+    elif cfg.block == "mlstm":
+        dk = 2 * cfg.d_model // h
+        c["state"] = sds((nl, batch, h, dk, dk), jnp.float32)
+        c["norm"] = sds((nl, batch, h, dk), jnp.float32)
+    return c
+
+
+def init_cache(cfg, plan, batch, max_len, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, plan, batch, max_len, dtype))
+
+
+def cache_axes(cfg: ModelConfig, plan: ParallelPlan) -> Dict[str, Tuple]:
+    kva = _kv_axes(cfg, plan)
+    ax = {"pos": ()}
+    if cfg.block == "attn":
+        ax["k"] = (None,) + kva
+        ax["v"] = (None,) + kva
+        if cfg.enc_dec:
+            ax["ck"] = (None, "batch", None, "kv_heads", None)
+            ax["cv"] = (None, "batch", None, "kv_heads", None)
+    elif cfg.block == "hymba":
+        ax["k"] = (None, "batch", None, "kv_heads", None)
+        ax["v"] = (None, "batch", None, "kv_heads", None)
+        ax["state"] = (None, "batch", "heads", None, None)
+    elif cfg.block == "mlstm":
+        ax["state"] = (None, "batch", None, None, "head_dv")
+        ax["norm"] = (None, "batch", None, None)
+    return ax
+
+
+def _decode_gqa(cfg, q, k_cache, v_cache, length) -> jax.Array:
+    """Grouped decode attention without materialising repeated KV.
+
+    q (B, 1, H, hd); cache (B, S, KV, hd); returns (B, 1, H, hd).
+    """
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(hd)
+    s = k_cache.shape[1]
+    valid = jnp.arange(s) < length
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, 1, h, hd)
+
+
+def _rope_at(cfg, pos) -> Optional[Tuple[jax.Array, jax.Array]]:
+    if cfg.pos != "rope":
+        return None
+    return L.rope_tables(jnp.asarray(pos)[None], cfg.head_dim,
+                         cfg.rope_theta)
+
+
+def decode_step(cfg: ModelConfig, plan: ParallelPlan, res: Resolver,
+                params: Dict[str, jax.Array], cache: Dict[str, jax.Array],
+                token: jax.Array
+                ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """One token for the whole batch: (cache, token (B,1)) ->
+    (new_cache, logits (B, Vp), next_token (B, 1))."""
+    pos = cache["pos"]
+    x = _embed(cfg, params, token)                    # (B,1,D)
+    if cfg.pos == "sinusoidal":
+        x = x + L.sinusoidal_pos(1, cfg.d_model, offset=pos).astype(x.dtype)
+    rope = _rope_at(cfg, pos)
+    stack = _layer_stack(params, "layers/")
+
+    new_cache = dict(cache)
+    if cfg.block == "attn":
+        def body(x, xs):
+            if cfg.enc_dec:
+                p, kc, vc, cck, ccv = xs
+            else:
+                p, kc, vc = xs
+            h = _norm(cfg, p, "ln1", x)
+            q, k, v = _project_qkv(cfg, p, "attn", h)
+            if rope is not None:
+                q = L.apply_rope(q, *rope)
+                k = L.apply_rope(k, *rope)
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                              (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                              (0, pos, 0, 0))
+            o = _decode_gqa(cfg, q, kc, vc, pos + 1)
+            o = o.reshape(*o.shape[:2], -1)
+            x = x + jnp.einsum("bsh,hd->bsd", o, p["attn/wo"])
+            if cfg.enc_dec:
+                hcx = _norm(cfg, p, "ln_cross", x)
+                qc2 = jnp.einsum("bsd,dh->bsh", hcx, p["cross/wq"])
+                if cfg.qkv_bias:
+                    qc2 = qc2 + p["cross/bq"]
+                qc2 = qc2.reshape(*qc2.shape[:2], cfg.n_heads, cfg.head_dim)
+                o2 = _decode_gqa(cfg, qc2, cck, ccv, cck.shape[1])
+                o2 = o2.reshape(*o2.shape[:2], -1)
+                x = x + jnp.einsum("bsh,hd->bsd", o2, p["cross/wo"])
+            h2 = _norm(cfg, p, "ln2", x)
+            if cfg.is_moe:
+                y, _ = _moe_apply(cfg, plan, res, p, h2)
+            else:
+                y = _mlp_sublayer(cfg, p, h2)
+            x = x + y
+            return x, (kc, vc)
+
+        if cfg.enc_dec:
+            xs = (stack, cache["k"], cache["v"], cache["ck"], cache["cv"])
+        else:
+            xs = (stack, cache["k"], cache["v"])
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
+        new_cache["k"], new_cache["v"] = nk, nv
+
+    elif cfg.block == "hymba":
+        w = cache["k"].shape[2]
+        slot = pos % w
+
+        def body(x, xs):
+            p, kc, vc, st = xs
+            h = _norm(cfg, p, "ln1", x)
+            q, k, v = _project_qkv(cfg, p, "attn", h)
+            if rope is not None:
+                q = L.apply_rope(q, *rope)
+                k = L.apply_rope(k, *rope)
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                              (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                              (0, slot, 0, 0))
+            # ring buffer holds exactly the last min(pos+1, w) tokens
+            o = _decode_gqa(cfg, q, kc, vc, jnp.minimum(pos + 1, w))
+            heads_attn = o.reshape(*o.shape[:2], -1)
+            qs, ks, vs, log_a = _hymba_ssm_qkv(cfg, p, h)
+            y, st_new, _ = gla_decode_step(
+                st, jnp.zeros(st.shape[:-1], jnp.float32),
+                qs[:, 0], ks[:, 0], vs[:, 0], log_a[:, 0], normalize=False)
+            heads_ssm = y.reshape(y.shape[0], 1, -1)
+            fused = 0.5 * (L.rms_norm(heads_attn, p["norm_attn/scale"])
+                           + L.rms_norm(heads_ssm, p["norm_ssm/scale"]))
+            x = x + jnp.einsum("bse,ed->bsd", fused, p["fuse/wo"])
+            h2 = _norm(cfg, p, "ln2", x)
+            x = x + _mlp_sublayer(cfg, p, h2)
+            return x, (kc, vc, st_new)
+
+        x, (nk, nv, nst) = jax.lax.scan(
+            body, x, (stack, cache["k"], cache["v"], cache["state"]))
+        new_cache["k"], new_cache["v"], new_cache["state"] = nk, nv, nst
+
+    elif cfg.block == "mlstm":
+        def body(x, xs):
+            p, st, nm = xs
+            h = _norm(cfg, p, "ln1", x)
+            q, k, v, log_a, z = _mlstm_qkv(cfg, p, h)
+            y, st_new, nm_new = gla_decode_step(
+                st, nm, q[:, 0], k[:, 0], v[:, 0], log_a[:, 0])
+            y = y.reshape(y.shape[0], 1, -1) * jax.nn.silu(z)
+            x = x + jnp.einsum("bse,ed->bsd", y, p["mlstm/w_out"])
+            return x, (st_new, nm_new)
+
+        x, (nst, nnm) = jax.lax.scan(
+            body, x, (stack, cache["state"], cache["norm"]))
+        new_cache["state"], new_cache["norm"] = nst, nnm
+    else:
+        raise ValueError(cfg.block)
+
+    if cfg.norm == "layernorm":
+        x = L.layer_norm(x, params["final_norm/scale"],
+                         params["final_norm/bias"])
+    else:
+        x = L.rms_norm(x, params["final_norm/scale"])
+    logits = _unembed(cfg, params, x)[:, 0]           # (B, Vp)
+    logits = res.constrain(logits, ("batch", "vocab"))
+    new_cache["pos"] = pos + 1
+    next_tok = jnp.argmax(logits, axis=-1).astype(token.dtype)[:, None]
+    return new_cache, logits, next_tok
+
+
+def prefill(cfg: ModelConfig, plan: ParallelPlan, res: Resolver,
+            params: Dict[str, jax.Array], tokens: jax.Array,
+            max_len: int, frames: Optional[jax.Array] = None,
+            patches: Optional[jax.Array] = None
+            ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Run the full prompt, build the cache, return (cache, last logits).
+
+    Implemented as a second scan over layers that also emits per-layer K/V
+    (attn) or final GLA state (ssm/hybrid) as scan ys.
+    """
+    b, s = tokens.shape
+    x = _embed(cfg, params, tokens)
+    if cfg.vision_patches and patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    if cfg.pos == "sinusoidal":
+        x = x + L.sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+    seq = x.shape[1]
+    rope = None
+    if cfg.pos == "rope":
+        rope = L.rope_tables(jnp.arange(seq), cfg.head_dim, cfg.rope_theta)
+    if max_len < seq:
+        raise ValueError(f"cache max_len {max_len} < prompt length {seq} "
+                         f"(VLM prompts include {cfg.vision_patches} patches)")
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _run_encoder(cfg, plan, res, params, frames)
+    stack = _layer_stack(params, "layers/")
+    cache = init_cache(cfg, plan, b, max_len,
+                       jnp.dtype(cfg.dtype))
+
+    if cfg.block == "attn":
+        def body(x, p):
+            x = res.constrain(x, ("batch", "seq_act", None))
+            h = _norm(cfg, p, "ln1", x)
+            q, k, v = _project_qkv(cfg, p, "attn", h)
+            from .lm import _gqa
+            q = res.constrain(q, ("batch", "seq_attn", "heads", None))
+            k = res.constrain(k, ("batch", "seq_attn", "kv_heads", None))
+            v = res.constrain(v, ("batch", "seq_attn", "kv_heads", None))
+            o = _gqa(cfg, q, k, v, causal=True, rope=rope, res=res,
+                     chunk_q=plan.attn_chunk)
+            o = res.constrain(o, ("batch", "seq_attn", "heads", None))
+            if rope is not None:
+                k = L.apply_rope(k, rope[0][:k.shape[1]], rope[1][:k.shape[1]])
+            o = o.reshape(*o.shape[:2], -1)
+            x = x + jnp.einsum("bsh,hd->bsd", o, p["attn/wo"])
+            ck = cv = jnp.zeros((0,), x.dtype)
+            if cfg.enc_dec:
+                hc = _norm(cfg, p, "ln_cross", x)
+                o2, _ = _attn_sublayer(cfg, p, hc, None, causal=False,
+                                       prefix="cross", xkv=enc_out)
+                x = x + o2
+                ck = jnp.einsum("bsd,dh->bsh", enc_out, p["cross/wk"])
+                cv = jnp.einsum("bsd,dh->bsh", enc_out, p["cross/wv"])
+                if cfg.qkv_bias:
+                    ck = ck + p["cross/bk"]
+                    cv = cv + p["cross/bv"]
+                ck = ck.reshape(*ck.shape[:2], cfg.n_kv, cfg.head_dim)
+                cv = cv.reshape(*cv.shape[:2], cfg.n_kv, cfg.head_dim)
+            h2 = _norm(cfg, p, "ln2", x)
+            if cfg.is_moe:
+                y, _ = _moe_apply(cfg, plan, res, p, h2)
+            else:
+                y = _mlp_sublayer(cfg, p, h2)
+            x = x + y
+            return x, (k, v, ck, cv)
+
+        if plan.remat:
+            body = jax.checkpoint(body)
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, stack)
+        pad = max_len - seq
+        kc = jnp.pad(ks.astype(cache["k"].dtype),
+                     ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(vs.astype(cache["v"].dtype),
+                     ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["k"], cache["v"] = kc, vc
+        if cfg.enc_dec:
+            cache["ck"], cache["cv"] = (cks.astype(cache["ck"].dtype),
+                                        cvs.astype(cache["cv"].dtype))
+
+    elif cfg.block == "hymba":
+        w = cache["k"].shape[2]
+
+        def body(x, p):
+            from .lm import _gqa
+            h = _norm(cfg, p, "ln1", x)
+            q, k, v = _project_qkv(cfg, p, "attn", h)
+            o = _gqa(cfg, q, k, v, causal=True, window=cfg.window, rope=rope)
+            heads_attn = o.reshape(*o.shape[:2], -1)
+            qs, ks_, vs_, log_a = _hymba_ssm_qkv(cfg, p, h)
+            yss, (st, _) = chunkwise_gla(qs, ks_, vs_, log_a,
+                                         chunk=min(128, seq),
+                                         normalize=False)
+            heads_ssm = yss.reshape(*h.shape[:2], -1)
+            fused = 0.5 * (L.rms_norm(heads_attn, p["norm_attn/scale"])
+                           + L.rms_norm(heads_ssm, p["norm_ssm/scale"]))
+            x = x + jnp.einsum("bse,ed->bsd", fused, p["fuse/wo"])
+            h2 = _norm(cfg, p, "ln2", x)
+            x = x + _mlp_sublayer(cfg, p, h2)
+            if rope is not None:
+                k = L.apply_rope(k, rope[0][:k.shape[1]],
+                                 rope[1][:k.shape[1]])
+            # ring alignment: decode writes at slot pos % w, which must hold
+            # the OLDEST cached token when it gets overwritten.
+            if seq >= w:
+                k_c = jnp.roll(k[:, -w:], shift=seq % w, axis=1)
+                v_c = jnp.roll(v[:, -w:], shift=seq % w, axis=1)
+            else:
+                padw = ((0, 0), (0, w - seq), (0, 0), (0, 0))
+                k_c = jnp.pad(k, padw)
+                v_c = jnp.pad(v, padw)
+            return x, (k_c, v_c, st)
+
+        if plan.remat:
+            body = jax.checkpoint(body)
+        x, (ks, vs, sts) = jax.lax.scan(body, x, stack)
+        cache["k"] = ks.astype(cache["k"].dtype)
+        cache["v"] = vs.astype(cache["v"].dtype)
+        cache["state"] = sts
+
+    elif cfg.block == "mlstm":
+        def body(x, p):
+            h = _norm(cfg, p, "ln1", x)
+            q, k, v, log_a, z = _mlstm_qkv(cfg, p, h)
+            y, (st, nm) = chunkwise_gla(q, k, v, log_a,
+                                        chunk=min(128, seq))
+            y = y.reshape(*y.shape[:2], -1) * jax.nn.silu(z)
+            x = x + jnp.einsum("bse,ed->bsd", y, p["mlstm/w_out"])
+            return x, (st, nm)
+
+        if plan.remat:
+            body = jax.checkpoint(body)
+        x, (sts, nms) = jax.lax.scan(body, x, stack)
+        cache["state"], cache["norm"] = sts, nms
+    else:
+        raise ValueError(cfg.block)
+
+    if cfg.norm == "layernorm":
+        x = L.layer_norm(x, params["final_norm/scale"],
+                         params["final_norm/bias"])
+    else:
+        x = L.rms_norm(x, params["final_norm/scale"])
+    logits = _unembed(cfg, params, x[:, -1:])[:, 0]
+    cache["pos"] = jnp.asarray(seq, jnp.int32)
+    return cache, logits

@@ -1,0 +1,264 @@
+"""Shared neural-net layers for the LM stack (pure JAX, functional).
+
+Everything is a function over explicit param pytrees; no framework objects.
+Attention is implemented flash-style at the XLA level: a ``lax.scan`` over
+query chunks with an online-softmax carry, each chunk rematerialised
+(`jax.checkpoint`) so the S x S score matrix never outlives a chunk — this is
+what makes 32 k-token prefill lowerable at sane memory, and it is the same
+blocking discipline as the Pallas kernel (kernels/flash_attention.py), which
+replaces it on real TPU hot paths.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# norms / activations
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 internals and a custom VJP that hands back
+    cotangents in the PRIMAL dtype.  Without this, the fp32 segment inside
+    the default VJP becomes the spot where GSPMD places the model-axis
+    gradient psum — a full fp32 all-reduce of (B, S, D) per sublayer
+    (measured; see EXPERIMENTS.md §Perf)."""
+    return _rms_fwd(x, scale, eps)[0]
+
+
+def _rms_fwd(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    out = (x32 * r * scale.astype(jnp.float32)).astype(x.dtype)
+    return out, (x, scale, r)
+
+
+def _rms_bwd(eps, resid, g):
+    x, scale, r = resid
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    s32 = scale.astype(jnp.float32)
+    xhat = x32 * r
+    dscale = (g32 * xhat).sum(tuple(range(g32.ndim - 1)))
+    gx = g32 * s32
+    d = x32.shape[-1]
+    dx = r * (gx - xhat * (gx * xhat).mean(-1, keepdims=True))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+@jax.custom_vjp
+def grad_dtype_guard(x: jax.Array) -> jax.Array:
+    """Identity whose VJP casts the cotangent to the primal dtype.
+
+    Attention/softmax internals run in fp32, so their VJP emits fp32
+    cotangents; every einsum-VJP downstream then promotes to fp32, and all
+    backward collectives (model-axis dx psums, remat FSDP weight gathers)
+    travel at double width.  Placing this guard on q/k/v (and SSM inputs)
+    right after the projections confines fp32 to the op that needs it —
+    measured ~2x on backward collective bytes (EXPERIMENTS.md §Perf C4).
+    """
+    return x
+
+
+def _gdg_fwd(x):
+    # residuals must be jax types: carry the dtype via a zero-size array
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _gdg_bwd(token, g):
+    return (g.astype(token.dtype),)
+
+
+grad_dtype_guard.defvjp(_gdg_fwd, _gdg_bwd)
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "squared_relu":        # nemotron-4 (arXiv:2402.16819)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# --------------------------------------------------------------------------
+# positions
+# --------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, dim: int,
+                theta: float = 1e6) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin tables (..., dim/2), fp32."""
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D); cos/sin (S, D/2) or broadcastable."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:  # (S, D/2) -> broadcast over heads
+        cos = cos[:, None, :]
+        sin = sin[:, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, dim: int, offset=0) -> jax.Array:
+    """offset may be a traced scalar (decode position)."""
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    freqs = jnp.exp(
+        -math.log(10000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32)
+        / max(dim - 2, 1))
+    ang = pos[:, None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :dim]
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, chunked-flash at XLA level)
+# --------------------------------------------------------------------------
+
+
+def repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, KV*groups, D)."""
+    if groups == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, kv, groups, d)).reshape(b, s, kv * groups, d)
+
+
+NEG_INF_ATTN = -1e30
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              chunk_q: int = 1024, q_offset: int = 0) -> jax.Array:
+    """Multi-head attention, (B, S, H, D) layout, GQA-grouped k/v.
+
+    Flash schedule at the XLA level: an online-softmax ``lax.scan`` over KV
+    chunks with (m, l, acc) carries.  The query tensor is never reshaped or
+    chunked, so a sequence-sharded q (context parallelism) stays sharded —
+    each device computes attention for its own q slice against replicated
+    KV chunks — and peak memory is O(B*H*Sq_local*chunk) instead of
+    O(B*H*S^2).  k/v arrive with KV heads (pre-GQA-expansion); the grouped
+    einsum avoids materialising repeated KV.
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    chunk = min(chunk_q, sk)
+    qg = q.reshape(b, sq, kvh, g, d)
+    rows = q_offset + jax.lax.broadcasted_iota(jnp.int32, (sq, 1), 0)
+
+    def block_scores(kb, col0, ck):
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (sq, ck), 1)
+        mask = cols < sk                       # pad columns are invalid
+        if causal:
+            mask &= rows >= cols
+        if window and window > 0:
+            mask &= cols > rows - window
+        return jnp.where(mask[None, None, None], s, -1e30)
+
+    if sk <= chunk:
+        s = block_scores(k, 0, sk)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqc,bckd->bqkgd", p.astype(v.dtype), v)
+        return out.reshape(b, sq, h, d)
+
+    nc = -(-sk // chunk)
+    pad = nc * chunk - sk
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    ks = k.reshape(b, nc, chunk, kvh, d).swapaxes(0, 1)
+    vs = v.reshape(b, nc, chunk, kvh, d).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, kb, vb = xs
+        s = block_scores(kb, ci * chunk, chunk)     # (b,kv,g,sq,chunk)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq, 1), NEG_INF_ATTN, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nc), ks, vs))
+    out = acc / jnp.maximum(l, 1e-30)
+    # (b, kv, g, sq, d) -> (b, sq, h, d)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length) -> jax.Array:
+    """Single-token decode: q (B, 1, H, D) vs cache (B, S, H, D).
+
+    ``length`` masks the not-yet-written tail of the cache (int or (B,)
+    array of valid lengths).
+    """
+    b, s, h, d = k_cache.shape
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    if isinstance(length, int):
+        valid = pos < length
+        logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    else:
+        valid = pos[None, :] < length[:, None]
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p.astype(v_cache.dtype), v_cache)
+    return out
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def trunc_normal(key, shape, dtype, std: float = 0.02):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+def scaled_init_std(fan_in: int) -> float:
+    return 1.0 / math.sqrt(fan_in)

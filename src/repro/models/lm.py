@@ -1,0 +1,567 @@
+"""The LM stack: one configurable model covering all ten assigned archs.
+
+Params are a FLAT dict ``{"path/to/param": array}``; per-layer params are
+stacked on a leading L dim and applied with ``jax.lax.scan`` (+remat), so
+HLO size — and dry-run compile time — is O(1) in depth.
+
+Families (cfg.block / cfg flags):
+  * ``attn``   — pre-norm GQA attention + (MoE or gated/plain) MLP;
+  * ``mlstm``  — xLSTM matrix-memory block (chunkwise GLA engine);
+  * ``hymba``  — parallel sliding-window attention + mamba-style GLA heads;
+  * ``enc_dec``— whisper: encoder stack on stub frame embeddings + decoder
+                 with self+cross attention;
+  * ``vlm``    — stub patch embeddings prepended to the token sequence.
+
+Sharding: every param carries logical axis names; ``Resolver`` maps them to
+mesh axes per the ParallelPlan, dropping rules whose target doesn't divide
+the dim (e.g. 20 heads on a 16-way model axis).  Activations get
+``with_sharding_constraint`` at block boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ParallelPlan
+from . import layers as L
+from .moe import moe_ffn
+from .ssm import chunkwise_gla, gla_decode_step
+
+# ==========================================================================
+# sharding resolution
+# ==========================================================================
+
+
+class Resolver:
+    """logical axes -> PartitionSpec under (plan, mesh), with divisibility."""
+
+    def __init__(self, plan: ParallelPlan, mesh: Optional[Mesh] = None):
+        self.plan = plan
+        self.mesh = mesh
+        self.dropped: list = []
+
+    def _target(self, logical: Optional[str], dim: int) -> Tuple[str, ...]:
+        if logical is None or self.mesh is None:
+            return ()
+        want = [a for a in self.plan.rule(logical)
+                if a in self.mesh.shape]
+        out = []
+        size = 1
+        for a in want:
+            size *= self.mesh.shape[a]
+        if size > 1 and dim % size == 0:
+            out = want
+        elif want:
+            self.dropped.append((logical, dim, tuple(want)))
+        return tuple(out)
+
+    def spec(self, axes: Tuple[Optional[str], ...],
+             shape: Tuple[int, ...]) -> P:
+        assert len(axes) == len(shape), (axes, shape)
+        parts = []
+        for a, d in zip(axes, shape):
+            t = self._target(a, d)
+            parts.append(t if len(t) > 1 else (t[0] if t else None))
+        return P(*parts)
+
+    def sharding(self, axes, shape) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    def constrain(self, x: jax.Array,
+                  axes: Tuple[Optional[str], ...]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(axes, x.shape)))
+
+
+# ==========================================================================
+# parameter specs
+# ==========================================================================
+
+Spec = Tuple[Tuple[int, ...], Tuple[Optional[str], ...], str]  # shape, axes, init
+
+
+def _attn_specs(cfg: ModelConfig, nl: int, prefix: str,
+                cross: bool = False) -> Dict[str, Spec]:
+    d, hd, h, kv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv
+    s: Dict[str, Spec] = {
+        f"{prefix}/wq": ((nl, d, h * hd), (None, "embed", "heads"), "fan_in"),
+        f"{prefix}/wk": ((nl, d, kv * hd), (None, "embed", "kv_heads"), "fan_in"),
+        f"{prefix}/wv": ((nl, d, kv * hd), (None, "embed", "kv_heads"), "fan_in"),
+        f"{prefix}/wo": ((nl, h * hd, d), (None, "heads", "embed"), "fan_in"),
+    }
+    if cfg.qkv_bias:
+        s[f"{prefix}/bq"] = ((nl, h * hd), (None, "heads"), "zeros")
+        s[f"{prefix}/bk"] = ((nl, kv * hd), (None, "kv_heads"), "zeros")
+        s[f"{prefix}/bv"] = ((nl, kv * hd), (None, "kv_heads"), "zeros")
+    if cfg.qk_norm and not cross:
+        s[f"{prefix}/q_norm"] = ((nl, hd), (None, None), "ones")
+        s[f"{prefix}/k_norm"] = ((nl, hd), (None, None), "ones")
+    return s
+
+
+def _norm_specs(cfg: ModelConfig, nl: int, name: str) -> Dict[str, Spec]:
+    d = cfg.d_model
+    s = {f"{name}/scale": ((nl, d), (None, None), "ones")}
+    if cfg.norm == "layernorm":
+        s[f"{name}/bias"] = ((nl, d), (None, None), "zeros")
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, nl: int, prefix: str) -> Dict[str, Spec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    s = {
+        f"{prefix}/w1": ((nl, d, ff), (None, "embed", "ff"), "fan_in"),
+        f"{prefix}/w2": ((nl, ff, d), (None, "ff", "embed"), "fan_in"),
+    }
+    if cfg.act == "silu":   # gated
+        s[f"{prefix}/w3"] = ((nl, d, ff), (None, "embed", "ff"), "fan_in")
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, hd, h = cfg.d_model, cfg.head_dim, cfg.n_heads
+    nl = cfg.n_layers
+    vp = cfg.vocab_padded()
+    specs: Dict[str, Spec] = {
+        "embed/tokens": ((vp, d), ("vocab", "embed"), "embed"),
+        "final_norm/scale": ((d,), (None,), "ones"),
+    }
+    if cfg.norm == "layernorm":
+        specs["final_norm/bias"] = ((d,), (None,), "zeros")
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ((vp, d), ("vocab", "embed"), "embed")
+
+    lp = "layers"
+    specs.update(_norm_specs(cfg, nl, f"{lp}/ln1"))
+    if cfg.block == "attn":
+        specs.update(_attn_specs(cfg, nl, f"{lp}/attn"))
+        specs.update(_norm_specs(cfg, nl, f"{lp}/ln2"))
+        if cfg.is_moe:
+            e, ffe = cfg.n_experts, cfg.d_ff
+            specs.update({
+                f"{lp}/moe/router": ((nl, d, e), (None, "embed", "experts"),
+                                     "fan_in"),
+                f"{lp}/moe/w1": ((nl, e, d, ffe),
+                                 (None, "experts", "embed", "expert_ff"),
+                                 "fan_in"),
+                f"{lp}/moe/w3": ((nl, e, d, ffe),
+                                 (None, "experts", "embed", "expert_ff"),
+                                 "fan_in"),
+                f"{lp}/moe/w2": ((nl, e, ffe, d),
+                                 (None, "experts", "expert_ff", "embed"),
+                                 "fan_in"),
+            })
+        else:
+            specs.update(_mlp_specs(cfg, nl, f"{lp}/mlp"))
+    elif cfg.block == "mlstm":
+        di = 2 * d
+        dk = di // h
+        specs.update({
+            f"{lp}/mlstm/w_in": ((nl, d, 2 * di), (None, "embed", None),
+                                 "fan_in"),
+            f"{lp}/mlstm/wq": ((nl, h, dk, dk), (None, None, "embed", None),
+                               "fan_in"),
+            f"{lp}/mlstm/wk": ((nl, h, dk, dk), (None, None, "embed", None),
+                               "fan_in"),
+            f"{lp}/mlstm/wv": ((nl, h, dk, dk),
+                               (None, None, "embed", "head_dv"), "fan_in"),
+            f"{lp}/mlstm/w_gate": ((nl, d, 2 * h), (None, "embed", None),
+                                   "gate"),
+            f"{lp}/mlstm/w_out": ((nl, di, d), (None, "head_dv", "embed"),
+                                  "fan_in"),
+        })
+    elif cfg.block == "hymba":
+        n = cfg.ssm_state
+        specs.update(_attn_specs(cfg, nl, f"{lp}/attn"))
+        specs.update({
+            f"{lp}/ssm/w_v": ((nl, d, h * hd), (None, "embed", "heads"),
+                              "fan_in"),
+            f"{lp}/ssm/w_B": ((nl, d, h * n), (None, "embed", None),
+                              "fan_in"),
+            f"{lp}/ssm/w_C": ((nl, d, h * n), (None, "embed", None),
+                              "fan_in"),
+            f"{lp}/ssm/w_dt": ((nl, d, h), (None, "embed", None), "fan_in"),
+            f"{lp}/ssm/dt_bias": ((nl, h), (None, None), "zeros"),
+            f"{lp}/ssm/log_A": ((nl, h), (None, None), "ssm_a"),
+            f"{lp}/norm_attn/scale": ((nl, h * hd), (None, "heads"), "ones"),
+            f"{lp}/norm_ssm/scale": ((nl, h * hd), (None, "heads"), "ones"),
+            f"{lp}/fuse/wo": ((nl, h * hd, d), (None, "heads", "embed"),
+                              "fan_in"),
+        })
+        specs.update(_norm_specs(cfg, nl, f"{lp}/ln2"))
+        specs.update(_mlp_specs(cfg, nl, f"{lp}/mlp"))
+    else:
+        raise ValueError(cfg.block)
+
+    if cfg.enc_dec:
+        el = cfg.enc_layers
+        specs.update(_norm_specs(cfg, el, "enc/ln1"))
+        specs.update(_attn_specs(cfg, el, "enc/attn"))
+        specs.update(_norm_specs(cfg, el, "enc/ln2"))
+        specs.update(_mlp_specs(cfg, el, "enc/mlp"))
+        specs["enc/final_norm/scale"] = ((d,), (None,), "ones")
+        if cfg.norm == "layernorm":
+            specs["enc/final_norm/bias"] = ((d,), (None,), "zeros")
+        specs.update(_norm_specs(cfg, nl, f"{lp}/ln_cross"))
+        specs.update(_attn_specs(cfg, nl, f"{lp}/cross", cross=True))
+    return specs
+
+
+def abstract_params(cfg: ModelConfig, dtype=None) -> Dict[str, Any]:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {k: jax.ShapeDtypeStruct(shape, dt)
+            for k, (shape, _, _) in param_specs(cfg).items()}
+
+
+def param_shardings(cfg: ModelConfig, res: Resolver) -> Dict[str, Any]:
+    return {k: res.sharding(axes, shape)
+            for k, (shape, axes, _) in param_specs(cfg).items()}
+
+
+def init_params(cfg: ModelConfig, key, dtype=None) -> Dict[str, jax.Array]:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    out = {}
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    for (name, (shape, _, init)), k in zip(sorted(specs.items()), keys):
+        if init == "ones":
+            out[name] = jnp.ones(shape, dt)
+        elif init == "zeros":
+            out[name] = jnp.zeros(shape, dt)
+        elif init == "embed":
+            out[name] = L.trunc_normal(k, shape, dt, std=0.02)
+        elif init == "gate":
+            out[name] = L.trunc_normal(k, shape, dt, std=0.02)
+        elif init == "ssm_a":
+            # decay scale in softplus space: A ~ U[1, 8] -> log
+            u = jax.random.uniform(k, shape, jnp.float32, 1.0, 8.0)
+            out[name] = jnp.log(u).astype(dt)
+        else:  # fan_in
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            out[name] = L.trunc_normal(k, shape, dt,
+                                       std=1.0 / math.sqrt(fan_in))
+    return out
+
+
+def param_count(params) -> int:
+    return sum(int(v.size) for v in params.values())
+
+
+# ==========================================================================
+# block forwards (per-layer; applied under lax.scan)
+# ==========================================================================
+
+
+def _norm(cfg, p, name, x):
+    if cfg.norm == "layernorm":
+        return L.layer_norm(x, p[f"{name}/scale"], p[f"{name}/bias"])
+    return L.rms_norm(x, p[f"{name}/scale"])
+
+
+def _project_qkv(cfg, p, prefix, x, xkv=None):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,Skv,KV,hd)."""
+    hd, h, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    xkv = x if xkv is None else xkv
+    q = jnp.einsum("bsd,dh->bsh", x, p[f"{prefix}/wq"])
+    k = jnp.einsum("bsd,dh->bsh", xkv, p[f"{prefix}/wk"])
+    v = jnp.einsum("bsd,dh->bsh", xkv, p[f"{prefix}/wv"])
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}/bq"]
+        k = k + p[f"{prefix}/bk"]
+        v = v + p[f"{prefix}/bv"]
+    q = q.reshape(*q.shape[:2], h, hd)
+    k = k.reshape(*k.shape[:2], kv, hd)
+    v = v.reshape(*v.shape[:2], kv, hd)
+    if cfg.qk_norm and f"{prefix}/q_norm" in p:
+        q = L.rms_norm(q, p[f"{prefix}/q_norm"])
+        k = L.rms_norm(k, p[f"{prefix}/k_norm"])
+    # keep the fp32 attention internals' cotangents from leaking upstream
+    return (L.grad_dtype_guard(q), L.grad_dtype_guard(k),
+            L.grad_dtype_guard(v))
+
+
+def _gqa(cfg, q, k, v, *, causal, window=0, rope=None, q_offset=0,
+         chunk_q=1024, res=None):
+    """Grouped attention via kv-head broadcast; q (B,S,H,hd)."""
+    if rope is not None:
+        cos, sin = rope
+        q = L.apply_rope(q, cos[q_offset:q_offset + q.shape[1]], sin[q_offset:q_offset + q.shape[1]])
+        k = L.apply_rope(k, cos[:k.shape[1]], sin[:k.shape[1]])
+    if res is not None:
+        # context parallelism: k/v gathered (bf16, post-rope) across the
+        # model axis — each rank attends its own q-sequence slice
+        k = res.constrain(k, ("batch", None, "kv_heads", None))
+        v = res.constrain(v, ("batch", None, "kv_heads", None))
+    return L.attention(q, k, v, causal=causal, window=window,
+                       chunk_q=chunk_q, q_offset=q_offset)
+
+
+def _attn_sublayer(cfg, p, x, rope, window=0, causal=True, prefix="attn",
+                   xkv=None, q_offset=0, res=None, chunk_q=1024):
+    q, k, v = _project_qkv(cfg, p, prefix, x, xkv)
+    if res is not None:
+        # context parallelism (seq_attn rule): shard the q sequence over
+        # `model` when heads cannot shard.  k/v are projected on sequence
+        # SHARDS (cheap) and only gathered post-rope inside _gqa (bf16,
+        # kv-head-narrow) — not the d_model-wide x.
+        q = res.constrain(q, ("batch", "seq_attn", "heads", None))
+        k = res.constrain(k, ("batch", "seq_attn", "kv_heads", None))
+        v = res.constrain(v, ("batch", "seq_attn", "kv_heads", None))
+    o = _gqa(cfg, q, k, v, causal=causal, window=window, rope=rope,
+             q_offset=q_offset, res=res, chunk_q=chunk_q)
+    if res is not None:
+        o = res.constrain(o, ("batch", "seq_attn", "heads", None))
+    o = o.reshape(*o.shape[:2], cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", o, p[f"{prefix}/wo"]), o
+
+
+def _mlp_sublayer(cfg, p, x, prefix="mlp"):
+    act = L.act_fn(cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}/w1"])
+    if f"{prefix}/w3" in p:
+        h = act(h) * jnp.einsum("bsd,df->bsf", x, p[f"{prefix}/w3"])
+    else:
+        h = act(h)
+    return jnp.einsum("bsf,fd->bsd", h, p[f"{prefix}/w2"])
+
+
+def _mlstm_qkv(cfg, p, x):
+    """mLSTM projections: x (B,S,D) -> q,k (B,S,H,dk), v (B,S,H,dk),
+    gates log_a (B,S,H), z (B,S,di)."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    di = 2 * d
+    dk = di // h
+    inner = jnp.einsum("bsd,de->bse", x, p["mlstm/w_in"])
+    xi, z = jnp.split(inner, 2, axis=-1)                 # (B,S,di) each
+    xh = xi.reshape(*xi.shape[:2], h, dk)
+    q = jnp.einsum("bshk,hkl->bshl", xh, p["mlstm/wq"])
+    k = jnp.einsum("bshk,hkl->bshl", xh, p["mlstm/wk"]) / math.sqrt(dk)
+    v = jnp.einsum("bshk,hkl->bshl", xh, p["mlstm/wv"])
+    gates = jnp.einsum("bsd,dg->bsg", x, p["mlstm/w_gate"])
+    gi, gf = jnp.split(gates, 2, axis=-1)                # (B,S,H)
+    log_a = jax.nn.log_sigmoid(gf.astype(jnp.float32))
+    k = k * jax.nn.sigmoid(gi.astype(jnp.float32))[..., None].astype(k.dtype)
+    return (L.grad_dtype_guard(q), L.grad_dtype_guard(k),
+            L.grad_dtype_guard(v), log_a, z)
+
+
+def _hymba_ssm_qkv(cfg, p, x):
+    """Mamba-style heads as GLA: q=C, k=B*dt(normalised), decay from A,dt."""
+    h, n, hd = cfg.n_heads, cfg.ssm_state, cfg.head_dim
+    v = jnp.einsum("bsd,de->bse", x, p["ssm/w_v"]).reshape(
+        *x.shape[:2], h, hd)
+    B_ = jnp.einsum("bsd,de->bse", x, p["ssm/w_B"]).reshape(
+        *x.shape[:2], h, n)
+    C_ = jnp.einsum("bsd,de->bse", x, p["ssm/w_C"]).reshape(
+        *x.shape[:2], h, n)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["ssm/w_dt"]).astype(jnp.float32)
+        + p["ssm/dt_bias"].astype(jnp.float32))          # (B,S,H)
+    A = jnp.exp(p["ssm/log_A"].astype(jnp.float32))      # (H,)
+    log_a = -dt * A                                      # per-head log decay
+    k = B_ * dt[..., None].astype(B_.dtype)              # ZOH-ish input scale
+    return (L.grad_dtype_guard(C_), L.grad_dtype_guard(k),
+            L.grad_dtype_guard(v), log_a)
+
+
+# ==========================================================================
+# model forward (train / prefill)
+# ==========================================================================
+
+
+def _layer_stack(params: Dict[str, jax.Array], prefix: str):
+    pl = len(prefix)
+    return {k[pl:]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def _moe_apply(cfg: ModelConfig, plan: ParallelPlan, res: "Resolver",
+               p: Dict[str, jax.Array], h: jax.Array):
+    """Dispatch to the configured MoE implementation (see moe_ep.py)."""
+    mp = {k.split("/", 1)[1]: v for k, v in p.items()
+          if k.startswith("moe/")}
+    if plan.moe_impl == "expert_parallel" and res.mesh is not None and \
+            "model" in res.mesh.shape:
+        from .moe_ep import moe_ffn_ep
+        return moe_ffn_ep(h, mp, top_k=cfg.top_k,
+                          capacity_factor=cfg.moe_capacity,
+                          act=L.act_fn(cfg.act), mesh=res.mesh,
+                          batch_axes=plan.rule("batch"))
+    return moe_ffn(h, mp, top_k=cfg.top_k,
+                   capacity_factor=cfg.moe_capacity, act=L.act_fn(cfg.act),
+                   constrain=(res.constrain if plan.moe_constraints
+                              else None))
+
+
+def _rope_for(cfg, seq):
+    if cfg.pos != "rope":
+        return None
+    pos = jnp.arange(seq)
+    return L.rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+
+
+def _block_fn(cfg: ModelConfig, plan: ParallelPlan, res: Resolver,
+              rope, mode: str):
+    """Returns block(carry, layer_params) for lax.scan over layers."""
+    gla_chunk = 128 if mode != "train" else 256
+
+    def block(carry, p):
+        x, aux = carry
+        x = res.constrain(x, ("batch", "seq_act", None))
+        h = _norm(cfg, p, "ln1", x)
+        if cfg.block == "attn":
+            o, _ = _attn_sublayer(cfg, p, h, rope, res=res,
+                                  chunk_q=plan.attn_chunk)
+            # pin the sublayer output's layout HERE so the model-axis psum
+            # of the wo/w2 contraction happens on the bf16 einsum output —
+            # not after XLA fuses it past the next norm's fp32 upcast
+            o = res.constrain(o, ("batch", "seq_act", None))
+            x = x + o
+            h2 = _norm(cfg, p, "ln2", x)
+            if cfg.is_moe:
+                y, al = _moe_apply(cfg, plan, res, p, h2)
+                aux = aux + al
+            else:
+                y = _mlp_sublayer(cfg, p, h2)
+            y = res.constrain(y, ("batch", "seq_act", None))
+            x = x + y
+        elif cfg.block == "mlstm":
+            q, k, v, log_a, z = _mlstm_qkv(cfg, p, h)
+            y, _ = chunkwise_gla(q, k, v, log_a, chunk=min(
+                gla_chunk, q.shape[1]))
+            y = y.reshape(*y.shape[:2], -1) * jax.nn.silu(z)
+            x = x + jnp.einsum("bse,ed->bsd", y, p["mlstm/w_out"])
+        elif cfg.block == "hymba":
+            # parallel branches share the normed input; fusion is pre-wo
+            q, k, v = _project_qkv(cfg, p, "attn", h)
+            q = res.constrain(q, ("batch", "seq_attn", "heads", None))
+            heads_attn = _gqa(cfg, q, k, v, causal=True, window=cfg.window,
+                              rope=rope).reshape(*h.shape[:2], -1)
+            qs, ks, vs, log_a = _hymba_ssm_qkv(cfg, p, h)
+            heads_ssm, _ = chunkwise_gla(qs, ks, vs, log_a, chunk=min(
+                gla_chunk, qs.shape[1]), normalize=False)
+            heads_ssm = heads_ssm.reshape(*h.shape[:2], -1)
+            fused = 0.5 * (L.rms_norm(heads_attn, p["norm_attn/scale"])
+                           + L.rms_norm(heads_ssm, p["norm_ssm/scale"]))
+            x = x + jnp.einsum("bse,ed->bsd", fused, p["fuse/wo"])
+            h2 = _norm(cfg, p, "ln2", x)
+            x = x + _mlp_sublayer(cfg, p, h2)
+        else:
+            raise ValueError(cfg.block)
+        return (x, aux), None
+
+    return block
+
+
+def _run_decoder(cfg, plan, res, params, x, mode, enc_out=None):
+    """Scan the decoder stack over x (B,S,D); returns (x, aux_loss)."""
+    rope = _rope_for(cfg, x.shape[1])
+    stack = _layer_stack(params, "layers/")
+    block = _block_fn(cfg, plan, res, rope, mode)
+
+    if cfg.enc_dec:
+        # standard decoder order: self-attn -> cross-attn -> mlp
+        def block_ed(carry, p):
+            x, aux = carry
+            x = res.constrain(x, ("batch", "seq_act", None))
+            h = _norm(cfg, p, "ln1", x)
+            o, _ = _attn_sublayer(cfg, p, h, rope, res=res)
+            x = x + o
+            hc = _norm(cfg, p, "ln_cross", x)
+            o, _ = _attn_sublayer(cfg, p, hc, None, causal=False,
+                                  prefix="cross", xkv=enc_out, res=res)
+            x = x + o
+            h2 = _norm(cfg, p, "ln2", x)
+            x = x + _mlp_sublayer(cfg, p, h2)
+            return (x, aux), None
+        body = block_ed
+    else:
+        body = block
+    if plan.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stack)
+    return x, aux
+
+
+def _run_encoder(cfg, plan, res, params, frames):
+    """Whisper encoder on stub frame embeddings (B, F, D)."""
+    x = frames + L.sinusoidal_pos(frames.shape[1],
+                                  cfg.d_model).astype(frames.dtype)
+    stack = _layer_stack(params, "enc/")
+    stack = {k: v for k, v in stack.items() if not k.startswith("final_norm")}
+
+    def block(carry, p):
+        x, aux = carry
+        h = _norm(cfg, p, "ln1", x)
+        o, _ = _attn_sublayer(cfg, p, h, None, causal=False)
+        x = x + o
+        h2 = _norm(cfg, p, "ln2", x)
+        x = x + _mlp_sublayer(cfg, p, h2)
+        return (x, aux), None
+
+    body = jax.checkpoint(block) if plan.remat else block
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stack)
+    if cfg.norm == "layernorm":
+        x = L.layer_norm(x, params["enc/final_norm/scale"],
+                         params["enc/final_norm/bias"])
+    else:
+        x = L.rms_norm(x, params["enc/final_norm/scale"])
+    return x
+
+
+def _embed(cfg, params, tokens):
+    emb = params["embed/tokens"]
+    # keep the lookup result in the model dtype: the vocab-sharded table
+    # lookup lowers through a masked f32 reduction, and letting that f32
+    # escape doubles every downstream collective
+    return emb[tokens].astype(emb.dtype)
+
+
+def _unembed(cfg, params, x):
+    head = params.get("lm_head", params["embed/tokens"])
+    return jnp.einsum("bsd,vd->bsv", x, head)
+
+
+def forward(cfg: ModelConfig, plan: ParallelPlan, res: Resolver,
+            params: Dict[str, jax.Array], tokens: jax.Array,
+            frames: Optional[jax.Array] = None,
+            patches: Optional[jax.Array] = None,
+            mode: str = "train") -> Tuple[jax.Array, jax.Array, int]:
+    """tokens (B,S) -> (logits (B,S',Vp), aux_loss, prefix_len).
+
+    For VLM, patch embeddings are prepended: S' = n_patches + S (padded to a
+    multiple of 1024 when needed — the pad tail is loss-masked upstream).
+    """
+    x = _embed(cfg, params, tokens)
+    prefix = 0
+    if cfg.vision_patches and patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        prefix = patches.shape[1]
+        pad = (-x.shape[1]) % 1024 if x.shape[1] > 1024 else 0
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    if cfg.pos == "sinusoidal":
+        x = x + L.sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+    enc_out = None
+    if cfg.enc_dec:
+        assert frames is not None, "enc-dec needs frame embeddings"
+        enc_out = _run_encoder(cfg, plan, res, params, frames)
+    x, aux = _run_decoder(cfg, plan, res, params, x, mode, enc_out=enc_out)
+    if cfg.norm == "layernorm":
+        x = L.layer_norm(x, params["final_norm/scale"],
+                         params["final_norm/bias"])
+    else:
+        x = L.rms_norm(x, params["final_norm/scale"])
+    logits = _unembed(cfg, params, x)
+    logits = res.constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux, prefix

@@ -1,0 +1,93 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with capacity,
+einsum dispatch/combine (GSPMD-friendly — experts shard over the ``model``
+mesh axis, tokens over ``data``; the dispatch einsum lowers to an
+all-to-all on TPU).
+
+Capacity C = ceil(tokens * top_k * capacity_factor / E); overflow tokens are
+dropped (their gate mass is lost, standard Switch/GShard semantics).  An
+auxiliary load-balancing loss (Switch-style) is returned alongside.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def router_topk(logits: jax.Array, top_k: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """logits (T, E) -> gates (T, k) fp32 (softmax over chosen k, Qwen-MoE
+    style norm_topk_prob), indices (T, k)."""
+    gates_full = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(gates_full, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def load_balance_loss(logits: jax.Array, idx: jax.Array,
+                      n_experts: int) -> jax.Array:
+    """Switch aux loss: E * sum_e f_e * p_e (fp32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (T, E)
+    counts = jnp.zeros((n_experts,), jnp.float32)
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32)   # (T,k,E)
+    f = onehot.sum((0, 1)) / jnp.maximum(idx.shape[0] * idx.shape[1], 1)
+    p = probs.mean(0)
+    return n_experts * jnp.sum(f * p)
+
+
+def moe_ffn(x: jax.Array, params: dict, *, top_k: int,
+            capacity_factor: float = 1.25, act=jax.nn.silu,
+            constrain=None) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (y (B, S, D), aux_loss).
+
+    params: router (D, E), w1/w3 (E, D, F), w2 (E, F, D).
+    ``constrain(tensor, logical_axes)`` (optional) pins the expert buffers
+    to the `experts` mesh axis so the dispatch lowers to an all-to-all
+    instead of whatever GSPMD guesses for the scatter.
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf, params["router"],
+                        preferred_element_type=jnp.float32)
+    gates, idx = router_topk(logits, top_k)          # (T,k)
+    aux = load_balance_loss(logits, idx, e)
+
+    cap = int(max(top_k * t * capacity_factor / e, 4.0))
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)         # (T, k, E)
+    flat = onehot.reshape(t * top_k, e)
+    pos = jnp.cumsum(flat, axis=0) * flat - 1                # (T*k, E)
+    pos_in_e = pos.max(axis=-1).reshape(t, top_k)            # (T, k)
+    keep = (pos_in_e < cap) & (pos_in_e >= 0)
+    gates = gates * keep
+
+    # dispatch: (E, C, D) buffers built per routing choice (k is tiny)
+    disp = jnp.zeros((e, cap, d), x.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(t)[:, None], (t, top_k))
+    scat = (idx * cap + jnp.clip(pos_in_e, 0, cap - 1)).reshape(-1)
+    disp = disp.reshape(e * cap, d).at[scat].add(
+        (xf[tok_idx.reshape(-1)] * keep.reshape(-1, 1).astype(x.dtype)),
+        mode="drop").reshape(e, cap, d)
+    if constrain is not None:
+        disp = constrain(disp, ("experts", None, None))
+
+    h1 = jnp.einsum("ecd,edf->ecf", disp, params["w1"])
+    if "w3" in params and params["w3"] is not None:
+        h = act(h1) * jnp.einsum("ecd,edf->ecf", disp, params["w3"])
+    else:
+        h = act(h1)
+    if constrain is not None:
+        h = constrain(h, ("experts", None, "expert_ff"))
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["w2"])        # (E, C, D)
+    if constrain is not None:
+        y_e = constrain(y_e, ("experts", None, None))
+
+    # combine: gather each kept choice back and weight by its gate
+    y_flat = y_e.reshape(e * cap, d)[scat]                   # (T*k, D)
+    y = (y_flat.reshape(t, top_k, d)
+         * gates[..., None].astype(x.dtype)).sum(axis=1)
+    return y.reshape(b, s, d), aux

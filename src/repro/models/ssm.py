@@ -1,0 +1,162 @@
+"""SSM / linear-recurrence blocks: chunkwise GLA, mLSTM (xLSTM), Mamba-style
+heads (Hymba), and the sLSTM cell.
+
+One chunkwise gated-linear-attention engine serves both SSM families:
+
+    state S_t (dk x dv):  S_t = a_t * S_{t-1} + k_t^T v_t
+    output:               y_t = q_t S_t            (+ normaliser, optional)
+
+* xLSTM's mLSTM is GLA with dk = dv = head_dim, sigmoid forget gate a_t,
+  input-gated k, and a normaliser state n_t = a_t n_{t-1} + k_t.
+* Hymba's Mamba heads are GLA with dk = ssm_state (16), dv = head_dim,
+  decay a_t = exp(-softplus(dt_t) * A) (per-head, data dependent).
+
+The chunkwise-parallel form (chunk c): intra-chunk is a (c x c)-masked
+attention GEMM, inter-chunk is a dense (dk x dv) state GEMM — all MXU work,
+O(S/c) sequential steps, which is the TPU-native adaptation of these
+GPU-recurrent kernels (see DESIGN.md §2).  Training memory per chunk is
+O(B*H*c^2 + B*H*dk*dv), not O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunkwise_gla(q: jax.Array, k: jax.Array, v: jax.Array,
+                  log_a: jax.Array, chunk: int = 128,
+                  init_state: Optional[jax.Array] = None,
+                  normalize: bool = True
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Gated linear attention, chunkwise-parallel.
+
+    q, k: (B, S, H, dk); v: (B, S, H, dv); log_a: (B, S, H) per-step log
+    decay (<= 0).  Returns y (B, S, H, dv) and final state (B, H, dk, dv).
+    All state math in fp32.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+    f32 = jnp.float32
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lac = to_chunks(log_a.astype(f32))          # (nc, B, c, H)
+
+    state0 = (init_state.astype(f32) if init_state is not None
+              else jnp.zeros((b, h, dk, dv), f32))
+    norm0 = jnp.zeros((b, h, dk), f32)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        S_prev, n_prev = carry
+        qb, kb, vb, la = xs                     # (B,c,H,dk) etc.
+        qb32, kb32, vb32 = qb.astype(f32), kb.astype(f32), vb.astype(f32)
+        # cumulative decay within the chunk: F_i = sum_{j<=i} log a_j
+        F = jnp.cumsum(la, axis=1)              # (B, c, H)
+        total = F[:, -1]                        # (B, H)
+        # inter-chunk: y_i += (q_i * exp(F_i)) @ S_prev
+        q_dec = qb32 * jnp.exp(F)[..., None]
+        y_inter = jnp.einsum("bchk,bhkv->bchv", q_dec, S_prev)
+        n_inter = jnp.einsum("bchk,bhk->bch", q_dec, n_prev)
+        # intra-chunk: scores_ij = (q_i . k_j) * exp(F_i - F_j), for j <= i
+        qk = jnp.einsum("bchk,bdhk->bhcd", qb32, kb32)
+        scores = qk * _tril_decay(F, mask)       # (B, H, c, c)
+        y_intra = jnp.einsum("bhcd,bdhv->bchv", scores, vb32)
+        # normaliser: q_i . n_i = n_inter + row-sum of decayed scores
+        n_intra = scores.sum(-1).transpose(0, 2, 1)   # (B, c, H)
+        # state update: S_new = exp(total) S_prev + sum_j exp(total - F_j) k_j v_j
+        k_tail = kb32 * jnp.exp(total[:, None] - F)[..., None]
+        S_new = (jnp.exp(total)[..., None, None] * S_prev
+                 + jnp.einsum("bchk,bchv->bhkv", k_tail, vb32))
+        n_new = (jnp.exp(total)[..., None] * n_prev
+                 + jnp.sum(k_tail, axis=1))
+        y = y_inter + y_intra
+        if normalize:
+            qn = n_inter + n_intra
+            y = y / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+        return (S_new, n_new), y.astype(v.dtype)
+
+    (Sf, nf), ys = jax.lax.scan(body, (state0, norm0), (qc, kc, vc, lac))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dv)
+    return y, (Sf, nf)
+
+
+def _tril_decay(F: jax.Array, mask: jax.Array) -> jax.Array:
+    """exp(F_i - F_j) masked to j <= i; F (B, c, H) -> (B, H, c, c).
+
+    The exponent is masked BEFORE exp: above the diagonal F_i - F_j > 0 can
+    overflow, and ``where(mask, exp(d), 0)`` would still propagate inf/NaN
+    through the gradient of the untaken branch.
+    """
+    d = F[:, :, None, :] - F[:, None, :, :]      # (B, c_i, c_j, H)
+    d = d.transpose(0, 3, 1, 2)                  # (B, H, c_i, c_j)
+    d = jnp.where(mask[None, None], d, -1e30)
+    return jnp.exp(d)
+
+
+def gla_decode_step(state: jax.Array, norm: jax.Array, q: jax.Array,
+                    k: jax.Array, v: jax.Array, log_a: jax.Array,
+                    normalize: bool = True
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token recurrent step.
+
+    state (B, H, dk, dv); norm (B, H, dk); q/k (B, H, dk); v (B, H, dv);
+    log_a (B, H).  Returns (y (B, H, dv), new_state, new_norm).
+    """
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    state = a * state.astype(f32) + jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(f32), v.astype(f32))
+    norm = a[..., 0] * norm.astype(f32) + k.astype(f32)
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(f32), state)
+    if normalize:
+        qn = jnp.einsum("bhk,bhk->bh", q.astype(f32), norm)
+        y = y / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+    return y.astype(v.dtype), state, norm
+
+
+# --------------------------------------------------------------------------
+# sLSTM cell (xLSTM): scalar-memory LSTM with exponential gating
+# --------------------------------------------------------------------------
+
+
+def slstm_scan(x_gates: jax.Array) -> jax.Array:
+    """Sequence application of the sLSTM recurrence.
+
+    x_gates: (B, S, H, D, 4) pre-activations for (i, f, z, o) — the cell is
+    applied per (head, channel) with exponential gating and the max
+    stabiliser state m (xLSTM eq. 8-16, simplified: no recurrent R weights
+    inside the scan; they are folded into the pre-activations upstream).
+    Returns h (B, S, H, D).
+    """
+    b, s, h, d, _ = x_gates.shape
+    f32 = jnp.float32
+
+    def step(carry, g):
+        c, n, m = carry
+        gi, gf, gz, go = [g[..., j].astype(f32) for j in range(4)]
+        m_new = jnp.maximum(gf + m, gi)
+        i = jnp.exp(gi - m_new)
+        f = jnp.exp(gf + m - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c = f * c + i * z
+        n = f * n + i
+        hval = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, m_new), hval
+
+    zeros = jnp.zeros((b, h, d), f32)
+    (_, _, _), hs = jax.lax.scan(
+        step, (zeros, zeros, zeros), x_gates.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).astype(x_gates.dtype)

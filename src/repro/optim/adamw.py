@@ -1,0 +1,148 @@
+"""Optimizers: AdamW and AdaFactor (factored second moment), hand-rolled.
+
+AdamW keeps fp32 moments (sharded like the params).  AdaFactor stores row/
+column second-moment factors — ~1 extra byte/param instead of 8 — which is
+what lets nemotron-4-340b train on a single v5e pod (see EXPERIMENTS.md
+§Dry-run memory notes).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), tree), gn
+
+
+# -- AdamW -----------------------------------------------------------------
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(cfg: OptConfig, params, grads, state):
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (standard LM practice)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    new_params, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_params[k], new_m[k], new_v[k] = upd(
+            params[k], grads[k], state["m"][k], state["v"][k])
+    return new_params, {"step": step, "m": new_m, "v": new_v}, \
+        {"lr": lr, "grad_norm": gn}
+
+
+# -- AdaFactor --------------------------------------------------------------
+
+
+def adafactor_init(params) -> Dict[str, Any]:
+    def factors(p):
+        if p.ndim >= 2:
+            return (jnp.zeros(p.shape[:-1], jnp.float32),          # row
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return (jnp.zeros(p.shape, jnp.float32), jnp.zeros((), jnp.float32))
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "f": jax.tree.map(factors, params),
+    }
+
+
+def adafactor_update(cfg: OptConfig, params, grads, state):
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8          # Shazeer & Stern schedule
+
+    def upd(p, g, f):
+        r, c = f
+        g2 = jnp.square(g) + 1e-30
+        if p.ndim >= 2:
+            r = beta2 * r + (1 - beta2) * g2.mean(-1)
+            c = beta2 * c + (1 - beta2) * g2.mean(-2)
+            rc = r / jnp.maximum(r.mean(-1, keepdims=True), 1e-30)
+            v = rc[..., None] * c[..., None, :]
+        else:
+            r = beta2 * r + (1 - beta2) * g2
+            v = r
+            c = jnp.zeros((), jnp.float32)
+        delta = g / jnp.sqrt(v + cfg.eps)
+        # update clipping (RMS_delta <= 1), per the paper
+        rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+        delta = delta / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), (r, c)
+
+    new_params, new_f = {}, {}
+    for k in params:
+        new_params[k], new_f[k] = upd(params[k], grads[k], state["f"][k])
+    return new_params, {"step": step, "f": new_f}, \
+        {"lr": lr, "grad_norm": gn}
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.kind == "adamw":
+        return adamw_init, functools.partial(adamw_update, cfg)
+    if cfg.kind == "adafactor":
+        return adafactor_init, functools.partial(adafactor_update, cfg)
+    raise ValueError(cfg.kind)

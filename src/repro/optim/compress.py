@@ -1,0 +1,57 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 quantisation with error feedback: each replica quantises its local
+gradient to int8 (per-tensor scale), all-reduces the int8 payload (4x fewer
+bytes on the wire), dequantises, and carries the quantisation residual into
+the next step (error feedback keeps the method unbiased over time).
+
+On an SPMD mesh this is expressed as quantise -> psum -> dequantise inside
+the step function; XLA all-reduces the int32-accumulated payloads.  Enabled
+per-plan (`compress_grads=True`) — a beyond-paper distributed-optimisation
+trick recorded in §Perf.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x fp -> (int8 values, fp32 scale).  Symmetric per-tensor."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Dict[str, jax.Array],
+                  errors: Optional[Dict[str, jax.Array]] = None):
+    """Quantise a gradient tree with error feedback.
+
+    Returns (quantised {name: (int8, scale)}, new_errors).
+    """
+    qs, new_err = {}, {}
+    for k, g in grads.items():
+        g32 = g.astype(jnp.float32)
+        if errors is not None:
+            g32 = g32 + errors[k]
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        new_err[k] = g32 - deq
+        qs[k] = (q, s)
+    return qs, new_err
+
+
+def decompress_tree(qs) -> Dict[str, jax.Array]:
+    return {k: dequantize_int8(q, s) for k, (q, s) in qs.items()}
+
+
+def init_errors(grads_like: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    return {k: jnp.zeros(v.shape, jnp.float32)
+            for k, v in grads_like.items()}

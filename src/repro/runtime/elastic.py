@@ -1,0 +1,62 @@
+"""Elastic re-meshing: resume a job on a different device count.
+
+Because every param carries logical axes (models/lm.py param_specs) and
+checkpoints store unsharded leaves (checkpoint/store.py), scaling down is:
+
+    1. build the new mesh from the surviving pods/devices,
+    2. re-resolve logical axes -> NamedShardings on the new mesh
+       (divisibility re-checked; rules that no longer divide are dropped),
+    3. restore the checkpoint with the new shardings,
+    4. re-jit the step functions (shapes unchanged — global batch is kept
+       constant by raising grad-accumulation microbatches: batch math in
+       `rebalance_microbatches`).
+
+Step 4's invariant — same global batch, more microbatches — keeps training
+bitwise-comparable across re-meshes (the data stream is step-indexed).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Optional, Tuple
+
+import jax
+
+from ..configs.base import ParallelPlan
+
+
+def make_elastic_mesh(n_devices: int, model_parallel: int = 16,
+                      axis_names=("data", "model"),
+                      devices=None) -> "jax.sharding.Mesh":
+    """Largest (data, model) mesh that fits the surviving devices."""
+    devices = devices if devices is not None else jax.devices()
+    devices = devices[:n_devices]
+    mp = min(model_parallel, len(devices))
+    while len(devices) % mp:
+        mp -= 1
+    dp = len(devices) // mp
+    import numpy as np
+    arr = np.array(devices[:dp * mp]).reshape(dp, mp)
+    return jax.sharding.Mesh(arr, axis_names)
+
+
+def rebalance_microbatches(plan: ParallelPlan, global_batch: int,
+                           old_dp: int, new_dp: int) -> ParallelPlan:
+    """Keep the global batch constant when data-parallel width shrinks.
+
+    per-device batch = global / (dp * microbatches); when dp shrinks we
+    raise microbatches by the same factor (rounded up to divide the batch).
+    """
+    scale = old_dp / new_dp
+    mb = max(1, int(round(plan.microbatches * scale)))
+    per_dev = max(global_batch // new_dp, 1)
+    mb = min(mb, per_dev)
+    while per_dev % mb:          # decrease until it divides (terminates at 1)
+        mb -= 1
+    return replace(plan, microbatches=mb)
+
+
+def remesh_plan(plan: ParallelPlan, old_mesh, new_mesh,
+                global_batch: int) -> ParallelPlan:
+    old_dp = old_mesh.shape.get("data", 1) * old_mesh.shape.get("pod", 1)
+    new_dp = new_mesh.shape.get("data", 1) * new_mesh.shape.get("pod", 1)
+    return rebalance_microbatches(plan, global_batch, old_dp, new_dp)

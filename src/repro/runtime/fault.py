@@ -1,0 +1,122 @@
+"""Fault tolerance: failure detection, restart policy, straggler mitigation.
+
+On an SPMD TPU fleet the failure domain is a *slice/pod*, not a single task:
+a chip failure takes its slice out, and the job either restarts on the same
+topology or re-meshes onto the survivors.  This module implements the
+control-plane logic (pure Python — exercised in tests by injecting
+failures), wired to:
+
+  * checkpoint/manager.py   — durable state to restart from;
+  * runtime/elastic.py      — re-mesh + re-shard onto survivors;
+  * data/pipeline.py        — counter-based batches => exact replay.
+
+Straggler mitigation: at SPMD granularity a straggling slice delays every
+collective.  The watchdog tracks per-step wall time and flags slices whose
+EWMA exceeds `straggler_factor` x the fleet median; the policy response is
+checkpoint-and-re-mesh (drop the slice) after `patience` flagged steps —
+the CMM simulator's slowdown model (core/machine.py `slowdown`) is reused
+in tests to quantify when dropping a straggler beats keeping it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+
+@dataclass
+class FaultConfig:
+    heartbeat_timeout_s: float = 60.0
+    straggler_factor: float = 1.5
+    straggler_patience: int = 10
+    max_restarts: int = 100
+    min_pods: int = 1
+
+
+@dataclass
+class PodState:
+    pod_id: int
+    last_heartbeat: float = 0.0
+    step_ewma: float = 0.0
+    flagged: int = 0
+    alive: bool = True
+
+
+class FleetMonitor:
+    """Tracks heartbeats + per-step timings for every pod/slice."""
+
+    def __init__(self, n_pods: int, cfg: FaultConfig = FaultConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.pods = {i: PodState(i, clock()) for i in range(n_pods)}
+        self.restarts = 0
+
+    # -- signals --------------------------------------------------------------
+    def heartbeat(self, pod: int, step_seconds: Optional[float] = None):
+        st = self.pods[pod]
+        st.last_heartbeat = self.clock()
+        if step_seconds is not None:
+            a = 0.2
+            st.step_ewma = (step_seconds if st.step_ewma == 0
+                            else a * step_seconds + (1 - a) * st.step_ewma)
+
+    def mark_failed(self, pod: int):
+        self.pods[pod].alive = False
+
+    # -- detection ------------------------------------------------------------
+    def dead_pods(self) -> List[int]:
+        now = self.clock()
+        out = []
+        for st in self.pods.values():
+            if not st.alive or \
+                    now - st.last_heartbeat > self.cfg.heartbeat_timeout_s:
+                st.alive = False
+                out.append(st.pod_id)
+        return out
+
+    def stragglers(self) -> List[int]:
+        alive = [s for s in self.pods.values() if s.alive and s.step_ewma > 0]
+        if len(alive) < 2:
+            return []
+        times = sorted(s.step_ewma for s in alive)
+        median = times[len(times) // 2]
+        out = []
+        for st in alive:
+            if st.step_ewma > self.cfg.straggler_factor * median:
+                st.flagged += 1
+                if st.flagged >= self.cfg.straggler_patience:
+                    out.append(st.pod_id)
+            else:
+                st.flagged = 0
+        return out
+
+    def alive_pods(self) -> List[int]:
+        return [s.pod_id for s in self.pods.values() if s.alive]
+
+
+@dataclass
+class RestartDecision:
+    action: str                 # continue | restart_same | remesh | abort
+    pods: List[int] = field(default_factory=list)
+    reason: str = ""
+
+
+def decide(monitor: FleetMonitor) -> RestartDecision:
+    """The restart policy (pure, unit-testable)."""
+    dead = monitor.dead_pods()
+    alive = monitor.alive_pods()
+    if not dead:
+        lagging = monitor.stragglers()
+        if lagging and len(alive) - len(lagging) >= monitor.cfg.min_pods:
+            return RestartDecision(
+                "remesh", [p for p in alive if p not in lagging],
+                f"dropping stragglers {lagging}")
+        return RestartDecision("continue", alive, "healthy")
+    if monitor.restarts >= monitor.cfg.max_restarts:
+        return RestartDecision("abort", [], "restart budget exhausted")
+    if len(alive) >= monitor.cfg.min_pods:
+        monitor.restarts += 1
+        return RestartDecision("remesh", alive,
+                               f"pods {dead} failed; continuing on {alive}")
+    return RestartDecision("abort", [], "not enough survivors")

@@ -1,0 +1,223 @@
+"""Train and serve step functions — what the launcher jits and the dry-run
+lowers.
+
+``make_train_step``: loss -> grad -> optimizer, with
+
+* grad accumulation over microbatches (``lax.scan``; bounds live
+  activations — the global batch never exists in memory at once);
+* remat per layer (inside the model's layer scan);
+* fp32 grad accumulation, bf16 compute;
+* optional int8 error-feedback gradient compression of the accumulated
+  grads before the (implicit, GSPMD-inserted) data-parallel reduction;
+* z-loss and MoE aux-loss folded into the objective.
+
+``make_prefill_step`` / ``make_decode_step``: serving path per the shape
+cells (prefill_32k lowers prefill; decode_32k / long_500k lower one-token
+decode against a full cache).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ParallelPlan
+from ..models import decode as D
+from ..models import lm as M
+from ..optim.adamw import OptConfig, make_optimizer
+from ..optim import compress as C
+
+
+@dataclass(frozen=True)
+class TrainHParams:
+    opt: OptConfig = OptConfig()
+    z_loss: float = 1e-4
+    aux_loss: float = 1e-2
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array,
+                  vocab: int, z_loss: float = 0.0
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Masked mean xent over valid tokens, fp32; labels >= vocab are invalid
+    (padded vocab tail is never a target).  Returns (loss, denom)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom, denom
+
+
+def _loss_fn(cfg: ModelConfig, plan: ParallelPlan, res: M.Resolver,
+             hp: TrainHParams, params, batch) -> Tuple[jax.Array, Dict]:
+    logits, aux, prefix = M.forward(
+        cfg, plan, res, params, batch["tokens"],
+        frames=batch.get("frames"), patches=batch.get("patches"),
+        mode="train")
+    labels = batch["labels"]
+    mask = batch["mask"]
+    if prefix:  # vlm: patch positions (and any pad tail) are loss-masked
+        pad = logits.shape[1] - prefix - labels.shape[1]
+        labels = jnp.pad(labels, ((0, 0), (prefix, pad)))
+        mask = jnp.pad(mask, ((0, 0), (prefix, pad)))
+    loss, denom = cross_entropy(logits, labels, mask, cfg.vocab_padded(),
+                                hp.z_loss)
+    loss = loss + hp.aux_loss * aux / max(cfg.n_layers, 1)
+    return loss, {"loss": loss, "aux": aux, "tokens": denom}
+
+
+def make_train_step(cfg: ModelConfig, plan: ParallelPlan,
+                    mesh=None, hp: TrainHParams = TrainHParams()):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  batch arrays have a leading microbatch dim when
+    plan.microbatches > 1: tokens (MB, B/MB, S)."""
+    res = M.Resolver(plan, mesh)
+    opt_cfg = OptConfig(kind=plan.optimizer, **{
+        k: v for k, v in vars(hp.opt).items() if k != "kind"})
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    # grad-sharding constraints (perf knob): pin each accumulated grad to
+    # its param's sharding so cross-replica reduction lowers to
+    # reduce-scatter into the FSDP shard instead of all-reduce + slice.
+    gspecs = None
+    if plan.grad_constraint and mesh is not None:
+        from jax.sharding import NamedSharding
+        gspecs = {k: NamedSharding(mesh, res.spec(axes, shape))
+                  for k, (shape, axes, _) in M.param_specs(cfg).items()}
+
+    def _pin_grads(grads):
+        if gspecs is None:
+            return grads
+        return {k: jax.lax.with_sharding_constraint(g, gspecs[k])
+                for k, g in grads.items()}
+
+    # gather-once (CMM cache insight): re-shard FSDP-stored weights to
+    # their model-sharded-only layout ONCE per step, outside the microbatch
+    # scan (XLA hoists the loop-invariant all-gather; the scan transpose
+    # accumulates the cotangent so the reduce-scatter also fires once).
+    gather_specs = None
+    if plan.gather_once and mesh is not None:
+        from jax.sharding import NamedSharding
+        drop = set(plan.rule("embed")) | {"pod"}
+        gather_specs = {}
+        for k, (shape, axes, _) in M.param_specs(cfg).items():
+            spec = res.spec(axes, shape)
+            parts = tuple(
+                (None if p in drop else
+                 (tuple(q for q in p if q not in drop) or None)
+                 if isinstance(p, tuple) else p)
+                for p in spec)
+            gather_specs[k] = NamedSharding(mesh, jax.sharding.PartitionSpec(
+                *parts))
+
+    def _gather(params):
+        if gather_specs is None:
+            return params
+        return {k: jax.lax.with_sharding_constraint(v, gather_specs[k])
+                for k, v in params.items()}
+
+    def train_step(params, opt_state, batch):
+        loss_grad = jax.value_and_grad(
+            functools.partial(_loss_fn, cfg, plan, res, hp),
+            has_aux=True)
+
+        nmb = plan.microbatches
+        if gather_specs is not None and nmb > 1:
+            # gather-once: the FSDP gather sits INSIDE grad but OUTSIDE the
+            # microbatch scan; the scan transpose accumulates the weight
+            # cotangent across microbatches (bf16) and the constraint's VJP
+            # reduce-scatters it ONCE per step.
+            def total_loss(p, batch):
+                pu = _gather(p)
+                macc0 = {"loss": jnp.zeros((), jnp.float32),
+                         "aux": jnp.zeros((), jnp.float32),
+                         "tokens": jnp.zeros((), jnp.float32)}
+
+                def micro(carry, mb):
+                    tot, macc = carry
+                    loss, metrics = _loss_fn(cfg, plan, res, hp, pu, mb)
+                    macc = {k: macc[k] + metrics[k] for k in macc}
+                    return (tot + loss, macc), None
+
+                (tot, macc), _ = jax.lax.scan(
+                    micro, (jnp.zeros((), jnp.float32), macc0), batch)
+                return tot / nmb, {k: v / nmb for k, v in macc.items()}
+
+            (loss, metrics), grads = jax.value_and_grad(
+                total_loss, has_aux=True)(params, batch)
+            grads = _pin_grads(grads)
+            grads = {k: g.astype(jnp.float32) for k, g in grads.items()}
+        elif nmb > 1:
+            def micro(carry, mb):
+                gacc, macc = carry
+                (loss, metrics), grads = loss_grad(params, mb)
+                grads = _pin_grads(grads)
+                gacc = {k: gacc[k] + grads[k].astype(jnp.float32)
+                        for k in gacc}
+                macc = {k: macc[k] + metrics[k] for k in macc}
+                return (gacc, macc), None
+
+            gacc0 = {k: jnp.zeros(v.shape, jnp.float32)
+                     for k, v in params.items()}
+            macc0 = {"loss": jnp.zeros((), jnp.float32),
+                     "aux": jnp.zeros((), jnp.float32),
+                     "tokens": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(
+                micro, (gacc0, macc0), batch)
+            grads = {k: g / nmb for k, g in grads.items()}
+            metrics = {k: v / nmb for k, v in metrics.items()}
+        else:
+            (loss, metrics), grads = loss_grad(params, batch)
+            grads = _pin_grads(grads)
+            grads = {k: g.astype(jnp.float32) for k, g in grads.items()}
+
+        if plan.compress_grads:
+            # int8 on the DP wire; error feedback folded into opt_state
+            qs, new_err = C.compress_tree(
+                grads, opt_state.get("compress_err"))
+            grads = C.decompress_tree(qs)
+        new_params, new_opt, opt_metrics = opt_update(
+            params, grads, {k: v for k, v in opt_state.items()
+                            if k != "compress_err"})
+        if plan.compress_grads:
+            new_opt["compress_err"] = new_err
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    def init_opt(params):
+        st = opt_init(params)
+        if plan.compress_grads:
+            st["compress_err"] = C.init_errors(params)
+        return st
+
+    return train_step, init_opt
+
+
+def make_prefill_step(cfg: ModelConfig, plan: ParallelPlan, mesh=None,
+                      max_len: Optional[int] = None):
+    res = M.Resolver(plan, mesh)
+
+    def prefill_step(params, batch):
+        ml = max_len or batch["tokens"].shape[1]
+        cache, logits = D.prefill(cfg, plan, res, params, batch["tokens"],
+                                  ml, frames=batch.get("frames"),
+                                  patches=batch.get("patches"))
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return cache, logits, next_tok
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, plan: ParallelPlan, mesh=None):
+    res = M.Resolver(plan, mesh)
+
+    def decode_step(params, cache, token):
+        return D.decode_step(cfg, plan, res, params, cache, token)
+
+    return decode_step

@@ -1,0 +1,103 @@
+"""Fault tolerance: monitor, restart policy, elastic re-mesh math,
+straggler economics via the CMM simulator."""
+import numpy as np
+
+from repro.configs.base import ParallelPlan
+from repro.runtime.elastic import make_elastic_mesh, rebalance_microbatches
+from repro.runtime.fault import (FaultConfig, FleetMonitor, RestartDecision,
+                                 decide)
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_healthy_fleet_continues():
+    clk = Clock()
+    m = FleetMonitor(4, FaultConfig(), clock=clk)
+    for p in range(4):
+        m.heartbeat(p, 1.0)
+    d = decide(m)
+    assert d.action == "continue" and len(d.pods) == 4
+
+
+def test_heartbeat_timeout_triggers_remesh():
+    clk = Clock()
+    m = FleetMonitor(4, FaultConfig(heartbeat_timeout_s=10), clock=clk)
+    clk.t = 5
+    for p in (0, 1, 2):
+        m.heartbeat(p)
+    clk.t = 20
+    for p in (0, 1, 2):
+        m.heartbeat(p)
+    d = decide(m)
+    assert d.action == "remesh"
+    assert d.pods == [0, 1, 2]
+
+
+def test_explicit_failure():
+    m = FleetMonitor(2, FaultConfig(min_pods=1))
+    m.mark_failed(1)
+    d = decide(m)
+    assert d.action == "remesh" and d.pods == [0]
+
+
+def test_abort_when_too_few_survivors():
+    m = FleetMonitor(2, FaultConfig(min_pods=2))
+    m.mark_failed(0)
+    assert decide(m).action == "abort"
+
+
+def test_straggler_detection_and_drop():
+    cfg = FaultConfig(straggler_factor=1.5, straggler_patience=3)
+    m = FleetMonitor(4, cfg)
+    d = None
+    for step in range(5):   # patience accrues across decision rounds
+        for p in range(4):
+            m.heartbeat(p, 1.0 if p else 4.0)   # pod 0 is 4x slower
+        d = decide(m)
+    assert d.action == "remesh"
+    assert 0 not in d.pods
+
+
+def test_straggler_economics_via_simulator():
+    """Dropping a 4x straggler from 4 nodes should beat keeping it
+    (quantified with the CMM machine-model simulator)."""
+    from repro.core import (ClusteredMatrix as CM, CMMEngine,
+                            analytic_time_model)
+    from repro.core.machine import ClusterSpec
+    n = 256
+    expr = (CM.rand(n, n, seed=0) @ CM.rand(n, n, seed=1)) + \
+        (CM.rand(n, n, seed=2) @ CM.rand(n, n, seed=3))
+    tm = analytic_time_model()
+    with_straggler = CMMEngine(
+        ClusterSpec(n_nodes=4, slowdown=(4.0, 1.0, 1.0, 1.0)), tm,
+        tile=n // 4).plan(expr).predicted_makespan
+    without = CMMEngine(ClusterSpec(n_nodes=3), tm,
+                        tile=n // 4).plan(expr).predicted_makespan
+    assert without < with_straggler * 1.2
+
+
+def test_elastic_mesh_shapes():
+    mesh = make_elastic_mesh(1, model_parallel=1)
+    assert mesh.shape["data"] == 1 and mesh.shape["model"] == 1
+
+
+def test_rebalance_microbatches_preserves_global_batch():
+    plan = ParallelPlan(microbatches=4)
+    out = rebalance_microbatches(plan, global_batch=256, old_dp=32,
+                                 new_dp=16)
+    assert out.microbatches == 8
+    assert (256 // 16) % out.microbatches == 0
+
+
+def test_restart_budget():
+    m = FleetMonitor(3, FaultConfig(max_restarts=1, min_pods=1))
+    m.mark_failed(2)
+    assert decide(m).action == "remesh"
+    m.mark_failed(1)
+    assert decide(m).action == "abort"

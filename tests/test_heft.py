@@ -1,0 +1,137 @@
+"""HEFT scheduler: validity invariants + the paper's modifications."""
+import numpy as np
+import pytest
+
+from repro.core import (ClusteredMatrix as CM, CMMEngine, NodeCache,
+                        analytic_time_model, c5_9xlarge, heft_schedule,
+                        tile_expression)
+from repro.core.graph import TaskKind
+from repro.core.heft import edge_bytes, register_fill_origin, upward_rank
+from repro.core.lazy import Op, topo_order
+
+
+def _plan(n_nodes=4, n=64, tile=16, expr=None):
+    expr = expr or ((CM.rand(n, n, seed=0) @ CM.rand(n, n, seed=1))
+                    @ CM.rand(n, 1, seed=2))
+    eng = CMMEngine(c5_9xlarge(n_nodes), analytic_time_model(), tile=tile)
+    return eng.plan(expr)
+
+
+def _validate_schedule(g, sched, spec):
+    # every task placed exactly once on a valid node
+    assert set(sched.placements) == set(g.tasks)
+    for tid, p in sched.placements.items():
+        assert 0 <= p.node < spec.n_nodes
+        assert p.finish >= p.start >= 0
+    # dependencies respected (start after every pred's finish)
+    for t in g:
+        for pr in t.preds:
+            assert sched.placements[pr].finish <= \
+                sched.placements[t.tid].start + 1e-9, (t, pr)
+    # no overlapping intervals on the same (node, slot)
+    lanes = {}
+    for tid, p in sched.placements.items():
+        if g.tasks[tid].kind is TaskKind.CALLOC:
+            continue
+        lanes.setdefault((p.node, p.slot), []).append((p.start, p.finish))
+    for lane in lanes.values():
+        lane.sort()
+        for (s1, e1), (s2, e2) in zip(lane, lane[1:]):
+            assert e1 <= s2 + 1e-9
+
+
+def test_schedule_valid_multi_node():
+    plan = _plan(4)
+    spec = c5_9xlarge(4)
+    _validate_schedule(plan.program.graph, plan.schedule, spec)
+
+
+def test_takecopy_on_master():
+    plan = _plan(4)
+    g = plan.program.graph
+    for t in g:
+        if t.kind is TaskKind.TAKECOPY:
+            assert plan.schedule.placements[t.tid].node == 0
+
+
+def test_input_fill_pinned_to_master():
+    a = np.ones((32, 32))
+    expr = CM.from_array(a) @ CM.from_array(a)
+    plan = _plan(4, expr=expr, tile=16)
+    g = plan.program.graph
+    leaves = plan.program.leaf_nodes
+    for t in g:
+        if t.kind is TaskKind.FILL and leaves[t.payload].op is Op.INPUT:
+            assert plan.schedule.placements[t.tid].node == 0
+
+
+def test_cache_reduces_comm():
+    """Node-level cache (§3.5): with the cache, repeated cross-node use of
+    the same tile version must not be re-sent."""
+    n = 64
+    A = CM.rand(n, n, seed=0)
+    # A reused by several consumers -> cache hits expected at >1 node
+    expr = (A @ A) + (A @ A.T)
+    eng = CMMEngine(c5_9xlarge(4), analytic_time_model(), tile=16)
+    plan = eng.plan(expr)
+    sent = [(c.src_task, c.dst) for c in plan.schedule.comms if not c.cached]
+    assert len(sent) == len(set(sent)), "same tile version sent twice to a node"
+
+
+def test_cache_aware_not_worse():
+    n, tile = 96, 24
+    expr = (CM.rand(n, n, seed=0) @ CM.rand(n, n, seed=1)) @ \
+        CM.rand(n, n, seed=2)
+    prog = tile_expression(expr, tile)
+    register_fill_origin({k: "local" for k in prog.leaf_nodes})
+    tm = analytic_time_model()
+    spec = c5_9xlarge(4)
+    s_on = heft_schedule(prog.graph, spec, tm, cache_aware=True)
+    prog2 = tile_expression(expr, tile)
+    register_fill_origin({k: "local" for k in prog2.leaf_nodes})
+    s_off = heft_schedule(prog2.graph, spec, tm, cache_aware=False)
+    assert s_on.makespan <= s_off.makespan * 1.05
+
+
+def test_upward_rank_monotone_on_chains():
+    expr = (CM.rand(32, 32, seed=0) @ CM.rand(32, 32, seed=1))
+    prog = tile_expression(expr, 16)
+    g = prog.graph
+    rank = upward_rank(g, c5_9xlarge(2), analytic_time_model())
+    for t in g:
+        for s in t.succs:
+            assert rank[t.tid] > rank[s], "rank must decrease along edges"
+
+
+def test_edge_bytes_accumulation_edges():
+    expr = CM.rand(8, 8, seed=0) @ CM.rand(8, 8, seed=1)
+    g = tile_expression(expr, 4).graph
+    for t in g:
+        if t.kind is TaskKind.ADDMUL:
+            for p in t.preds:
+                pt = g.tasks[p]
+                b = edge_bytes(g, pt, t)
+                assert b > 0, "addmul inputs and C-tile edges carry data"
+
+
+def test_single_node_no_comm():
+    plan = _plan(1)
+    assert not [c for c in plan.schedule.comms if not c.cached]
+
+
+def test_more_nodes_not_slower_on_parallel_graph():
+    """C1: speedup grows with node count (parallel-friendly benchmark)."""
+    n = 512
+    def build():
+        A = CM.rand(n, n, seed=0)
+        B = CM.rand(n, n, seed=1)
+        C = CM.rand(n, n, seed=2)
+        D = CM.rand(n, n, seed=3)
+        return (A @ B) + (C @ D)
+    tm = analytic_time_model()
+    mk = {}
+    for nodes in (1, 2, 4):
+        eng = CMMEngine(c5_9xlarge(nodes), tm, tile=n // 4)
+        mk[nodes] = eng.plan(build()).predicted_makespan
+    assert mk[2] < mk[1]
+    assert mk[4] <= mk[2] * 1.05

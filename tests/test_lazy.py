@@ -1,0 +1,62 @@
+"""ClusteredMatrix expression semantics vs NumPy."""
+import numpy as np
+import pytest
+
+from repro.core import ClusteredMatrix as CM
+from repro.core.lazy import Op, eager_eval, topo_order
+
+
+def test_operators_build_dag():
+    P = CM.rand(8, 8, seed=0)
+    u = CM.rand(8, 1, seed=1)
+    e = (P @ P @ P) @ u
+    assert e.shape == (8, 1)
+    assert e.op is Op.MATMUL
+    order = topo_order(e)
+    assert order[-1] is e
+    assert len([n for n in order if n.op is Op.MATMUL]) == 3
+
+
+def test_eager_matches_numpy():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((6, 4))
+    b = rng.standard_normal((4, 5))
+    A, B = CM.from_array(a), CM.from_array(b)
+    np.testing.assert_allclose((A @ B).eager(), a @ b)
+    np.testing.assert_allclose((A + A).eager(), a + a)
+    np.testing.assert_allclose((A - A).eager(), a * 0)
+    np.testing.assert_allclose((A * 2.5).eager(), a * 2.5)
+    np.testing.assert_allclose((A / 2.0).eager(), a / 2)
+    np.testing.assert_allclose(A.T.eager(), a.T)
+    np.testing.assert_allclose(A.sin().eager(), np.sin(a))
+    np.testing.assert_allclose(A.hadamard(A).eager(), a * a)
+
+
+def test_star_is_matmul_between_matrices():
+    """Paper semantics: x between matrices is matrix multiplication."""
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((4, 4))
+    A = CM.from_array(a)
+    np.testing.assert_allclose((A * A).eager(), a @ a)
+
+
+def test_shape_errors():
+    A = CM.rand(4, 5)
+    B = CM.rand(4, 5)
+    with pytest.raises(ValueError):
+        _ = A @ B
+    with pytest.raises(ValueError):
+        _ = A + CM.rand(5, 4)
+
+
+def test_vector_promotion():
+    v = CM.from_array(np.arange(5.0))
+    assert v.shape == (5, 1)
+
+
+def test_compute_via_engine_matches_eager():
+    P = CM.rand(32, 32, seed=3)
+    u = CM.rand(32, 1, seed=4)
+    e = (P @ P) @ u
+    out = e.compute(tile=16)
+    np.testing.assert_allclose(out, e.eager(), rtol=1e-10, atol=1e-10)

@@ -1,0 +1,128 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + no NaNs.  The FULL configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from dataclasses import replace
+
+from repro.configs.base import (ARCH_IDS, SHAPES, cells, get_config,
+                                get_plan, get_reduced)
+from repro.models import lm as M
+from repro.train.steps import make_train_step
+
+
+def _batch(cfg, mb, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    lead = (mb, b) if mb > 1 else (b,)
+    out = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, lead + (s,)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, lead + (s,)),
+                              jnp.int32),
+        "mask": jnp.ones(lead + (s,), jnp.float32),
+    }
+    if cfg.enc_dec:
+        out["frames"] = jnp.asarray(
+            rng.standard_normal(lead + (cfg.enc_frames, cfg.d_model)),
+            jnp.float32)
+    if cfg.vision_patches:
+        out["patches"] = jnp.asarray(
+            rng.standard_normal(lead + (cfg.vision_patches, cfg.d_model)),
+            jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_reduced(arch)
+    plan = replace(get_plan(arch, "default"), microbatches=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    step, init_opt = make_train_step(cfg, plan)
+    opt = init_opt(params)
+    batch = _batch(cfg, 2, 2, 32)
+    p2, o2, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    for k, v in p2.items():
+        assert v.shape == params[k].shape
+        assert np.isfinite(np.asarray(v, np.float32)).all(), k
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_shapes(arch):
+    cfg = get_reduced(arch)
+    plan = get_plan(arch, "default")
+    res = M.Resolver(plan, None)
+    params = M.init_params(cfg, jax.random.PRNGKey(1), jnp.float32)
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    kw = {}
+    if cfg.enc_dec:
+        kw["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_frames, cfg.d_model)),
+            jnp.float32)
+    if cfg.vision_patches:
+        kw["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_patches, cfg.d_model)),
+            jnp.float32)
+    logits, aux, prefix = M.forward(cfg, plan, res, params, toks, **kw)
+    want_s = S + prefix if not cfg.vision_patches else logits.shape[1]
+    assert logits.shape[0] == B
+    assert logits.shape[-1] == cfg.vocab_padded()
+    assert np.isfinite(np.asarray(logits)).all()
+    if cfg.is_moe:
+        assert float(aux) > 0  # load-balance loss present
+
+
+def test_param_counts_match_instantiated():
+    """param_counts() (used for 6ND) ~ matches actual param tree size."""
+    for arch in ["qwen3-8b", "olmoe-1b-7b", "xlstm-1.3b", "hymba-1.5b"]:
+        cfg = get_reduced(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        actual = M.param_count(params)
+        est = cfg.param_counts()["total"]
+        # estimate ignores padding/norm minutiae; must be within 25 %
+        assert abs(actual - est) / actual < 0.25, (arch, actual, est)
+
+
+def test_full_config_param_counts():
+    """Full configs land near their nameplate sizes."""
+    checks = {
+        "qwen3-8b": (8e9, 0.25),
+        "qwen2.5-32b": (32e9, 0.25),
+        "nemotron-4-340b": (340e9, 0.15),
+        "qwen3-moe-235b-a22b": (235e9, 0.15),
+    }
+    for arch, (want, tol) in checks.items():
+        n = get_config(arch).param_counts()["total"]
+        assert abs(n - want) / want < tol, (arch, n)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    c = cfg.param_counts()
+    assert c["active"] < 0.2 * c["total"]
+
+
+def test_long_context_gating():
+    assert "long_500k" in cells("xlstm-1.3b")
+    assert "long_500k" in cells("hymba-1.5b")
+    assert "long_500k" not in cells("qwen3-8b")
+    assert "long_500k" not in cells("whisper-large-v3")
+    for arch in ARCH_IDS:
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(cells(arch))
+
+
+def test_resolver_divisibility_rule():
+    plan = get_plan("qwen3-8b", "train_4k")
+    devs = np.array(jax.devices() * 16)[:16].reshape(2, 8)
+    mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    res = M.Resolver(plan, mesh)
+    # 20 not divisible by 8 -> dropped
+    assert res.spec(("heads",), (20,))[0] is None
+    # 64 divisible by 8 -> sharded
+    assert res.spec(("heads",), (64,))[0] == "model"
+    assert ("heads", 20, ("model",)) in res.dropped

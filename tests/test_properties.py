@@ -1,0 +1,135 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusteredMatrix as CM, CMMEngine,
+                        analytic_time_model, c5_9xlarge, simulate,
+                        tile_expression)
+from repro.core.graph import TaskKind
+from repro.core.heft import heft_schedule, register_fill_origin
+from repro.core.tiling import assemble, tile_slices
+from repro.core.graph import TileRef
+
+TM = analytic_time_model()
+
+
+@given(m=st.integers(1, 40), n=st.integers(1, 40),
+       tm_=st.integers(1, 40), tn=st.integers(1, 40))
+@settings(max_examples=40, deadline=None)
+def test_tile_slices_partition(m, n, tm_, tn):
+    """Tiling covers every index exactly once (Listing 1)."""
+    rows = tile_slices(m, tm_)
+    assert rows[0][0] == 0 and rows[-1][1] == m
+    for (a, b), (c, d) in zip(rows, rows[1:]):
+        assert b == c and a < b
+    cols = tile_slices(n, tn)
+    assert cols[-1][1] == n
+
+
+@given(m=st.integers(2, 24), k=st.integers(2, 24), n=st.integers(2, 24),
+       tile=st.integers(1, 25), seed=st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_tiled_matmul_matches_numpy(m, k, n, tile, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k))
+    b = rng.standard_normal((k, n))
+    expr = CM.from_array(a) @ CM.from_array(b)
+    out = expr.compute(tile=tile)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-9, atol=1e-9)
+
+
+def _random_expr(draw, depth, m, n, seed):
+    """Recursively build a random well-shaped expression."""
+    if depth == 0:
+        return CM.rand(m, n, seed=draw(st.integers(0, 100)))
+    kind = draw(st.sampled_from(["add", "sub", "matmul", "scale", "ewise",
+                                 "transpose"]))
+    if kind == "matmul":
+        k = draw(st.integers(1, 12))
+        a = _random_expr(draw, depth - 1, m, k, seed)
+        b = _random_expr(draw, depth - 1, k, n, seed)
+        return a @ b
+    if kind in ("add", "sub"):
+        a = _random_expr(draw, depth - 1, m, n, seed)
+        b = _random_expr(draw, depth - 1, m, n, seed)
+        return a + b if kind == "add" else a - b
+    if kind == "scale":
+        return _random_expr(draw, depth - 1, m, n, seed) * 1.5
+    if kind == "transpose":
+        return _random_expr(draw, depth - 1, n, m, seed).T
+    return _random_expr(draw, depth - 1, m, n, seed).ewise("tanh")
+
+
+@given(st.data())
+@settings(max_examples=20, deadline=None)
+def test_random_expression_tiled_equals_eager(data):
+    m = data.draw(st.integers(2, 10))
+    n = data.draw(st.integers(2, 10))
+    depth = data.draw(st.integers(1, 3))
+    tile = data.draw(st.integers(1, 12))
+    expr = _random_expr(data.draw, depth, m, n, 0)
+    out = expr.compute(tile=tile)
+    np.testing.assert_allclose(out, expr.eager(), rtol=1e-8, atol=1e-8)
+
+
+@given(nodes=st.integers(1, 6), tile=st.integers(4, 32),
+       n=st.integers(8, 48))
+@settings(max_examples=20, deadline=None)
+def test_heft_schedule_always_valid(nodes, tile, n):
+    expr = (CM.rand(n, n, seed=0) @ CM.rand(n, n, seed=1)) + \
+        CM.rand(n, n, seed=2)
+    prog = tile_expression(expr, tile)
+    register_fill_origin({k: "local" for k in prog.leaf_nodes})
+    spec = c5_9xlarge(nodes)
+    sched = heft_schedule(prog.graph, spec, TM)
+    g = prog.graph
+    assert set(sched.placements) == set(g.tasks)
+    for t in g:
+        for p in t.preds:
+            assert sched.placements[p].finish <= \
+                sched.placements[t.tid].start + 1e-9
+    # simulation agrees the schedule is executable
+    r = simulate(g, sched, spec, TM)
+    assert len(r.intervals) == len(g)
+    zc = simulate(g, sched, spec, TM, zero_comm=True)
+    assert zc.makespan <= r.makespan + 1e-12
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_gla_equals_recurrence(seed):
+    import jax.numpy as jnp
+    from repro.models.ssm import chunkwise_gla, gla_decode_step
+    rng = np.random.default_rng(seed)
+    B, S, H, dk, dv = 1, 32, 2, 4, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, dv)), jnp.float32)
+    la = jnp.asarray(-np.abs(rng.standard_normal((B, S, H))) * 0.2,
+                     jnp.float32)
+    y, (Sf, nf) = chunkwise_gla(q, k, v, la, chunk=8)
+    st_ = jnp.zeros((B, H, dk, dv))
+    nm = jnp.zeros((B, H, dk))
+    ys = []
+    for t in range(S):
+        yt, st_, nm = gla_decode_step(st_, nm, q[:, t], k[:, t], v[:, t],
+                                      la[:, t])
+        ys.append(yt)
+    ydec = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ydec),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(Sf), np.asarray(st_),
+                               rtol=5e-4, atol=5e-4)
+
+
+@given(b=st.integers(1, 64), mb=st.integers(1, 8), old=st.integers(1, 32),
+       new=st.integers(1, 32))
+@settings(max_examples=50, deadline=None)
+def test_rebalance_keeps_global_batch(b, mb, old, new):
+    from repro.configs.base import ParallelPlan
+    from repro.runtime.elastic import rebalance_microbatches
+    b = b * new * old  # ensure divisibility space
+    plan = ParallelPlan(microbatches=mb)
+    out = rebalance_microbatches(plan, b, old, new)
+    per_dev = b // new
+    assert per_dev % out.microbatches == 0

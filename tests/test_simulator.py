@@ -1,0 +1,105 @@
+"""Discrete-event simulator: resource limits, cache, zero-comm bound."""
+import numpy as np
+
+from repro.core import (ClusteredMatrix as CM, CMMEngine,
+                        analytic_time_model, c5_9xlarge, simulate)
+from repro.core.graph import TaskKind
+
+
+def _plan(nodes=4, n=96, tile=24):
+    A = CM.rand(n, n, seed=0)
+    B = CM.rand(n, n, seed=1)
+    expr = (A @ B) + (B @ A)
+    eng = CMMEngine(c5_9xlarge(nodes), analytic_time_model(), tile=tile)
+    return eng, eng.plan(expr)
+
+
+def test_sim_deterministic():
+    eng, plan = _plan()
+    r1 = simulate(plan.program.graph, plan.schedule, eng.spec, eng.timemodel)
+    r2 = simulate(plan.program.graph, plan.schedule, eng.spec, eng.timemodel)
+    assert r1.makespan == r2.makespan
+    assert len(r1.intervals) == len(r2.intervals)
+
+
+def test_all_tasks_simulated_once():
+    eng, plan = _plan()
+    r = simulate(plan.program.graph, plan.schedule, eng.spec, eng.timemodel)
+    assert len(r.intervals) == len(plan.program.graph)
+
+
+def test_worker_capacity_respected():
+    eng, plan = _plan()
+    r = simulate(plan.program.graph, plan.schedule, eng.spec, eng.timemodel)
+    events = []
+    for iv in r.intervals:
+        if iv.slot < 0:   # calloc is async (not a worker occupant)
+            continue
+        events.append((iv.start, 1, iv.node))
+        events.append((iv.end, -1, iv.node))
+    # ends release their slot before coincident starts claim it
+    events.sort(key=lambda e: (e[0], e[1]))
+    load = {}
+    for t, d, node in events:
+        load[node] = load.get(node, 0) + d
+        assert load[node] <= eng.spec.worker_procs + 1e-9
+
+
+def test_comm_capacity_respected():
+    eng, plan = _plan(nodes=4)
+    r = simulate(plan.program.graph, plan.schedule, eng.spec, eng.timemodel)
+    events = []
+    for tr in r.transfers:
+        if tr.end <= tr.start:
+            continue
+        events.append((tr.start, 1, tr.src))
+        events.append((tr.end, -1, tr.src))
+        events.append((tr.start, 1, tr.dst))
+        events.append((tr.end, -1, tr.dst))
+    events.sort(key=lambda e: (e[0], e[1]))
+    load = {}
+    for t, d, node in events:
+        load[node] = load.get(node, 0) + d
+        assert load[node] <= eng.spec.comm_procs(node)
+
+
+def test_zero_comm_is_lower_bound():
+    eng, plan = _plan(nodes=4)
+    with_comm = simulate(plan.program.graph, plan.schedule, eng.spec,
+                         eng.timemodel)
+    zero = simulate(plan.program.graph, plan.schedule, eng.spec,
+                    eng.timemodel, zero_comm=True)
+    assert zero.makespan <= with_comm.makespan + 1e-12
+
+
+def test_deps_respected_in_sim():
+    eng, plan = _plan()
+    g = plan.program.graph
+    r = simulate(g, plan.schedule, eng.spec, eng.timemodel)
+    start = {iv.tid: iv.start for iv in r.intervals}
+    end = {iv.tid: iv.end for iv in r.intervals}
+    for t in g:
+        for p in t.preds:
+            assert end[p] <= start[t.tid] + 1e-9
+
+
+def test_cache_absorbs_repeat_transfers():
+    eng, plan = _plan(nodes=4)
+    r = simulate(plan.program.graph, plan.schedule, eng.spec, eng.timemodel)
+    seen = set()
+    for tr in r.transfers:
+        key = (tr.key, tr.dst)
+        assert key not in seen, "same tile version transferred twice"
+        seen.add(key)
+
+
+def test_gantt_renders():
+    eng, plan = _plan(nodes=2)
+    txt = plan.sim.gantt(60)
+    assert "n0.w0" in txt and "|" in txt
+
+
+def test_stats_by_kind():
+    eng, plan = _plan()
+    stats = plan.sim.stats_by_kind()
+    assert "addmul" in stats and stats["addmul"][0] > 0

@@ -1,0 +1,120 @@
+"""End-to-end behaviour tests: the paper's claims, reproduced.
+
+C1  speedup grows with node count (§5, Fig. 4);
+C2  larger tiles help up to n/2, then 7n/10 collapses (§5 tile trend);
+C3  simulation tracks real execution on one node (§4.2, Table 3);
+C4  observed speedup is a large fraction of zero-comm theoretical
+    speedup (§5.1, Table 4);
+C5  the full pipeline (tile -> HEFT -> simulate -> execute) is exact on
+    every benchmark program.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from benchmarks.cmm_suite import BENCHMARKS
+from repro.core import (CMMEngine, analytic_time_model, c5_9xlarge,
+                        profile_machine, simulate, tune_tile)
+
+TM = analytic_time_model()
+
+
+@pytest.mark.parametrize("name", list(BENCHMARKS))
+def test_c5_every_benchmark_exact(name):
+    expr = BENCHMARKS[name](64)
+    eng = CMMEngine(c5_9xlarge(3), TM, tile=24)
+    out = eng.run(expr, validate=False)
+    np.testing.assert_allclose(out, expr.eager(), rtol=1e-8, atol=1e-8)
+
+
+def test_c1_speedup_grows_with_nodes():
+    n = 1024
+    build = BENCHMARKS["Synth"]
+    mk = {}
+    for nodes in (1, 2, 4, 8):
+        eng = CMMEngine(c5_9xlarge(nodes), TM, tile=3 * n // 10)
+        mk[nodes] = eng.plan(build(n)).predicted_makespan
+    assert mk[2] < mk[1] and mk[4] < mk[2] and mk[8] <= mk[4] * 1.02
+    assert mk[1] / mk[8] > 2.0
+
+
+def test_c2_tile_trend():
+    """Under comm-dominant conditions bigger tiles win up to n/2, then
+    7n/10 collapses (less parallelism) — the paper's tile trend, whose
+    mechanism is the comm/parallelism trade-off (§3.3, §5)."""
+    from dataclasses import replace
+    n = 1024
+    build = BENCHMARKS["Markov"]
+    slow_net = replace(c5_9xlarge(8), link_bw=1e9 / 8, latency=1e-3)
+    eng = CMMEngine(slow_net, TM)
+    mk = {}
+    for tile in (n // 10, 3 * n // 10, n // 2, 7 * n // 10):
+        mk[tile] = eng.plan(build(n), tile=tile).predicted_makespan
+    assert mk[n // 2] < mk[n // 10]          # bigger tiles amortise comm
+    assert mk[7 * n // 10] > mk[n // 2]      # but 7n/10 starves parallelism
+
+
+def test_c3_sim_tracks_execution():
+    """Offline-profiled sim within ~2.5x of real 1-node wall time (the
+    paper reports 5-30 % on dedicated hardware; this container is a shared
+    single-core VM, so we assert the order of magnitude)."""
+    from repro.core.machine import local_spec
+    tm = profile_machine(sizes=(64, 128, 256), reps=2)
+    n, tile = 768, 384
+    expr = BENCHMARKS["Markov"](n)
+    eng = CMMEngine(local_spec(1), tm, tile=tile)
+    plan = eng.plan(expr)
+    t0 = time.perf_counter()
+    eng.run(expr, plan=plan, workers=eng.spec.worker_procs)
+    wall = time.perf_counter() - t0
+    acc = wall / plan.predicted_makespan
+    assert 0.4 < acc < 2.5, f"sim accuracy off: {acc:.2f}"
+
+
+def test_c4_observed_vs_theoretical():
+    n = 1024
+    build = BENCHMARKS["Synth"]
+    tile = 3 * n // 10
+    eng1 = CMMEngine(c5_9xlarge(1), TM, tile=tile)
+    base = eng1.plan(build(n)).predicted_makespan
+    eng8 = CMMEngine(c5_9xlarge(8), TM, tile=tile)
+    plan8 = eng8.plan(build(n))
+    obs = base / plan8.predicted_makespan
+    zc = simulate(plan8.program.graph, plan8.schedule, eng8.spec, TM,
+                  zero_comm=True)
+    theo = base / zc.makespan
+    assert theo >= obs > 0.4 * theo
+
+
+def test_autotune_picks_reasonable_tile():
+    n = 256
+    expr = BENCHMARKS["Markov"](n)
+    eng = CMMEngine(c5_9xlarge(4), TM)
+    result = tune_tile(eng, expr)
+    assert result.best in {max(1, n * f // 10) for f in (1, 3, 5, 7)} | {n}
+    # the chosen tile is at least as good as every candidate
+    best_cost = result.scores[0][1]
+    assert all(best_cost <= c + 1e-12 for _, c in result.scores)
+
+
+def test_plan_overhead_is_small():
+    """§4.2: simulation overhead is marginal (sub-seconds per plan)."""
+    expr = BENCHMARKS["Markov"](512)
+    eng = CMMEngine(c5_9xlarge(8), TM, tile=256)
+    plan = eng.plan(expr)
+    assert plan.plan_seconds < 2.0
+
+
+def test_dryrun_results_if_present():
+    """Sanity over the committed dry-run artifacts (if generated)."""
+    from benchmarks.roofline_table import load_cells
+    cells = load_cells("single_pod_16x16")
+    if not cells:
+        pytest.skip("dry-run results not generated")
+    assert len(cells) >= 30
+    for c in cells:
+        assert c["chips"] == 256
+        t = c["roofline"]
+        assert t["compute_s"] >= 0 and t["memory_s"] > 0
+        assert c["memory"]["peak_bytes"] > 0

@@ -1,0 +1,78 @@
+"""Tiling: Listing-1 semantics and task-graph structure."""
+import numpy as np
+import pytest
+
+from repro.core import ClusteredMatrix as CM, TaskKind, tile_expression
+from repro.core.tiling import assemble, cld, grid_of, tile_slices
+
+
+def test_cld_and_slices():
+    assert cld(10, 5) == 2 and cld(10, 3) == 4
+    assert tile_slices(10, 3) == [(0, 3), (3, 6), (6, 9), (9, 10)]
+
+
+def test_markov_task_counts():
+    """Fig. 2: 10k matrix at 5k tiles -> 2x2 grid of P, 2 tiles of u."""
+    P = CM.rand(10, 10, seed=0)
+    u = CM.rand(10, 1, seed=1)
+    prog = tile_expression((P @ P @ P) @ u, 5)
+    c = prog.graph.counts()
+    # P: 4 fill tiles, u: 2 fill tiles
+    assert c["fill"] == 6
+    # two PxP matmuls: 4 out tiles x 2-chain each; final @u: 2 out x 2-chain
+    assert c["addmul"] == 2 * 4 * 2 + 2 * 2
+    assert c["calloc"] == 2 * 4 + 2
+    assert c["takecopy"] == 2
+    prog.graph.validate()
+
+
+def test_accumulation_chain_is_sequential():
+    A = CM.rand(8, 8, seed=0)
+    prog = tile_expression(A @ A, 4)
+    g = prog.graph
+    # each output tile's addmuls form a dependency chain on the same tile
+    addmuls = [t for t in g if t.kind is TaskKind.ADDMUL]
+    by_out = {}
+    for t in addmuls:
+        by_out.setdefault(t.out, []).append(t)
+    for out, chain in by_out.items():
+        assert len(chain) == 2
+        ids = sorted(t.tid for t in chain)
+        assert ids[0] in g.tasks[ids[1]].preds
+
+
+def test_ragged_tiles_execute_correctly():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((11, 7))
+    b = rng.standard_normal((7, 13))
+    A, B = CM.from_array(a), CM.from_array(b)
+    out = (A @ B).compute(tile=4)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-10, atol=1e-10)
+
+
+def test_assemble_roundtrip():
+    from repro.core.graph import TileRef
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((9, 5))
+    tile = (4, 2)
+    vals = {}
+    for i, (r0, r1) in enumerate(tile_slices(9, 4)):
+        for j, (c0, c1) in enumerate(tile_slices(5, 2)):
+            vals[TileRef(7, i, j, (r1 - r0, c1 - c0))] = x[r0:r1, c0:c1]
+    np.testing.assert_array_equal(assemble(vals, (9, 5), tile, 7), x)
+
+
+@pytest.mark.parametrize("expr_fn", [
+    lambda A, B: A @ B,
+    lambda A, B: (A @ B) + A,
+    lambda A, B: (A @ B).T,
+    lambda A, B: (A - B) @ (A + B),
+    lambda A, B: (A @ B).relu() @ A.T,
+])
+def test_tiled_execution_matches_eager(expr_fn):
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((12, 12))
+    b = rng.standard_normal((12, 12))
+    e = expr_fn(CM.from_array(a), CM.from_array(b))
+    np.testing.assert_allclose(e.compute(tile=5), e.eager(),
+                               rtol=1e-10, atol=1e-10)

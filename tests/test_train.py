@@ -1,0 +1,119 @@
+"""Training semantics: loss decreases, microbatch equivalence, optimizers,
+gradient compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from dataclasses import replace
+
+from repro.configs.base import ParallelPlan, get_plan, get_reduced
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import lm as M
+from repro.optim.adamw import OptConfig
+from repro.optim import compress as C
+from repro.train.steps import TrainHParams, make_train_step
+
+
+def _setup(arch="qwen3-8b", mb=1, **plan_kw):
+    cfg = get_reduced(arch)
+    plan = replace(get_plan(arch, "default"), microbatches=mb, **plan_kw)
+    hp = TrainHParams(opt=OptConfig(lr=5e-3, warmup=5, decay_steps=100))
+    step, init_opt = make_train_step(cfg, plan, hp=hp)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, plan, jax.jit(step), init_opt, params
+
+
+def test_loss_decreases_over_steps():
+    cfg, plan, step, init_opt, params = _setup()
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=1)
+    opt = init_opt(params)
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in make_batch(dcfg, i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_microbatch_equivalence():
+    """mb=2 grad accumulation ~ mb=1 on the same global batch."""
+    cfg, plan1, step1, init1, params = _setup(mb=1)
+    _, plan2, step2, init2, _ = _setup(mb=2)
+    dcfg1 = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8, seed=3)
+    dcfg2 = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8, seed=3,
+                       microbatches=2)
+    b1 = {k: jnp.asarray(v) for k, v in make_batch(dcfg1, 0).items()}
+    b2 = {k: jnp.asarray(v) for k, v in make_batch(dcfg2, 0).items()}
+    p1, _, m1 = step1(params, init1(params), b1)
+    p2, _, m2 = step2(params, init2(params), b2)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    for k in p1:
+        np.testing.assert_allclose(np.asarray(p1[k]), np.asarray(p2[k]),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_adafactor_runs_and_learns():
+    cfg, plan, step, init_opt, params = _setup(optimizer="adafactor")
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=2)
+    opt = init_opt(params)
+    losses = []
+    for i in range(20):
+        batch = {k: jnp.asarray(v) for k, v in make_batch(dcfg, i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_adafactor_state_is_factored():
+    cfg, plan, step, init_opt, params = _setup(optimizer="adafactor")
+    opt = init_opt(params)
+    p_bytes = sum(v.size * 4 for v in params.values())
+    f_bytes = sum(np.prod(x.shape) * 4
+                  for r_c in opt["f"].values() for x in r_c)
+    assert f_bytes < 0.25 * p_bytes  # factored: far below one moment
+
+
+def test_grad_compression_roundtrip():
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal((16,)), jnp.float32)}
+    qs, err = C.compress_tree(g, C.init_errors(g))
+    deq = C.decompress_tree(qs)
+    for k in g:
+        rel = np.abs(np.asarray(deq[k]) - np.asarray(g[k])).max() / \
+            np.abs(np.asarray(g[k])).max()
+        assert rel < 0.02  # int8 quantisation error bound
+        np.testing.assert_allclose(
+            np.asarray(g[k]), np.asarray(deq[k]) + np.asarray(err[k]),
+            rtol=1e-5, atol=1e-6)  # error feedback is exact
+
+
+def test_compressed_training_still_learns():
+    cfg, plan, step, init_opt, params = _setup(compress_grads=True)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=4)
+    opt = init_opt(params)
+    losses = []
+    for i in range(20):
+        batch = {k: jnp.asarray(v) for k, v in make_batch(dcfg, i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_grad_clip_bounds_update():
+    cfg, plan, step, init_opt, params = _setup()
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4, seed=5)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(dcfg, 0).items()}
+    _, _, m = step(params, init_opt(params), batch)
+    assert float(m["grad_norm"]) > 0
+
+
+def test_lr_schedule():
+    from repro.optim.adamw import lr_at
+    cfg = OptConfig(lr=1e-3, warmup=10, decay_steps=100, min_lr_frac=0.1)
+    assert float(lr_at(cfg, jnp.asarray(1))) < 1e-3 * 0.2
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1e-3)
+    assert float(lr_at(cfg, jnp.asarray(1000))) == pytest.approx(1e-4,
+                                                                 rel=1e-2)
