@@ -1,0 +1,166 @@
+"""Fusion + zero-copy runtime benchmark -> BENCH_fusion.json.
+
+Measures, before/after the expression-graph optimizer:
+
+* task count (by kind) of the tiled program,
+* planning seconds (and the structural plan-cache hit on a second,
+  structurally identical ``compute()``),
+* end-to-end execution wall-clock,
+* peak live tile-buffer bytes (reference-counted runtime),
+* max |err| vs the ``eager()`` NumPy oracle.
+
+Two programs:
+
+* ``acceptance`` — the issue's elementwise-on-matmul program
+  ``(A @ B).relu() * 2.0 + C`` (GEMM-dominant; fusion trims the tail);
+* ``ewchain``    — a deep elementwise chain (30 ops) + external mix-in,
+  the fusion-optimizer target workload: one FUSED task per tile replaces
+  the whole chain.
+
+    PYTHONPATH=src python benchmarks/fusion_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CMMEngine, ClusteredMatrix as CM, analytic_time_model
+from repro.core.machine import local_spec
+from repro.exec.local import LocalExecutor
+
+
+def build_acceptance(n: int, seed: int = 0) -> CM:
+    A = CM.rand(n, n, seed=seed, name="A")
+    B = CM.rand(n, n, seed=seed + 1, name="B")
+    C = CM.rand(n, n, seed=seed + 2, name="C")
+    return (A @ B).relu() * 2.0 + C
+
+
+def build_ewchain(n: int, seed: int = 0) -> CM:
+    A = CM.rand(n, n, seed=seed, name="A")
+    C = CM.rand(n, n, seed=seed + 1, name="C")
+    e = A
+    for i in range(10):                   # 30 elementwise ops
+        e = (e * (1.0 + 0.01 * (i + 1)) + 0.02).relu()
+    return e.hadamard(C)
+
+
+BUILDERS = {"acceptance": build_acceptance, "ewchain": build_ewchain}
+
+
+def _stats(plan, ex: LocalExecutor, best: float):
+    return {
+        "tasks": len(plan.program.graph),
+        "counts": plan.program.graph.counts(),
+        "plan_seconds": round(plan.plan_seconds, 6),
+        "exec_seconds": round(best, 6),
+        "peak_buffer_bytes": ex.stats["peak_buffer_bytes"],
+        "buffers_freed": ex.stats["buffers_freed"],
+        "workers": ex.stats["workers"],
+        "fusion_report": plan.fusion.as_dict() if plan.fusion else None,
+    }
+
+
+def bench_case(name: str, n: int, tile: int, reps: int) -> dict:
+    build = BUILDERS[name]
+    spec = local_spec(1)
+    tm = analytic_time_model()
+
+    eng_un = CMMEngine(spec, tm, fuse=False, plan_cache=False)
+    eng_fu = CMMEngine(spec, tm, fuse=True, plan_cache=True)
+
+    plan_un = eng_un.plan(build(n, seed=0), tile=tile)
+    plan_fu = eng_fu.plan(build(n, seed=0), tile=tile)
+    ex_un, ex_fu = LocalExecutor(), LocalExecutor()
+    best_un = best_fu = float("inf")
+    out_un = out_fu = None
+    for _ in range(reps):                 # interleave: fair under load noise
+        t0 = time.perf_counter()
+        out_un = ex_un.execute(plan_un)
+        best_un = min(best_un, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out_fu = ex_fu.execute(plan_fu)
+        best_fu = min(best_fu, time.perf_counter() - t0)
+    un = _stats(plan_un, ex_un, best_un)
+    fu = _stats(plan_fu, ex_fu, best_fu)
+
+    # second, structurally identical compute: must hit the plan cache
+    t0 = time.perf_counter()
+    plan2 = eng_fu.plan(build(n, seed=77), tile=tile)
+    cached_plan_seconds = time.perf_counter() - t0
+
+    ref = build(n, seed=0).eager()
+    err = float(max(np.abs(out_un - ref).max(), np.abs(out_fu - ref).max()))
+
+    case = {
+        "n": n, "tile": tile,
+        "unfused": un, "fused": fu,
+        "task_reduction": round(un["tasks"] / fu["tasks"], 3),
+        "exec_speedup": round(un["exec_seconds"] / fu["exec_seconds"], 3),
+        "peak_buffer_reduction": round(
+            un["peak_buffer_bytes"] / max(fu["peak_buffer_bytes"], 1), 3),
+        "plan_cache": {
+            "hit": plan2.cache_hit,
+            "first_plan_seconds": fu["plan_seconds"],
+            "cached_plan_seconds": round(cached_plan_seconds, 6),
+        },
+        "max_abs_err_vs_eager": err,
+    }
+    return case
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI sanity (n=256, tile=128)")
+    ap.add_argument("-n", type=int, default=None)
+    ap.add_argument("--tile", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_fusion.json")
+    args = ap.parse_args(argv)
+
+    n = args.n or (256 if args.smoke else 2048)
+    tile = args.tile or (128 if args.smoke else 512)
+    reps = args.reps or (1 if args.smoke else 3)
+
+    result = {
+        "bench": "fusion",
+        "config": {"n": n, "tile": tile, "reps": reps, "smoke": args.smoke,
+                   "cpu_count": os.cpu_count()},
+        "cases": {},
+    }
+    ok = True
+    for name in BUILDERS:
+        case = bench_case(name, n, tile, reps)
+        result["cases"][name] = case
+        print(f"[{name}] tasks {case['unfused']['tasks']} -> "
+              f"{case['fused']['tasks']} ({case['task_reduction']}x)  "
+              f"exec {case['unfused']['exec_seconds']:.3f}s -> "
+              f"{case['fused']['exec_seconds']:.3f}s "
+              f"({case['exec_speedup']}x)  "
+              f"peak-buf {case['peak_buffer_reduction']}x  "
+              f"cache-hit={case['plan_cache']['hit']} "
+              f"(plan {case['plan_cache']['first_plan_seconds']:.3f}s -> "
+              f"{case['plan_cache']['cached_plan_seconds']:.4f}s)  "
+              f"err={case['max_abs_err_vs_eager']:.2e}")
+        if case["max_abs_err_vs_eager"] > 1e-8:
+            print(f"[{name}] VALIDATION FAILED vs eager", file=sys.stderr)
+            ok = False
+        if not case["plan_cache"]["hit"]:
+            print(f"[{name}] plan cache MISSED on identical structure",
+                  file=sys.stderr)
+            ok = False
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,4 +9,6 @@ from .cache import NodeCache                                   # noqa: F401
 from .heft import heft_schedule, Schedule                      # noqa: F401
 from .simulator import simulate, SimResult                     # noqa: F401
 from .engine import CMMEngine, Plan                            # noqa: F401
+from .fusion import (FusionReport, eval_fused, optimize,       # noqa: F401
+                     structural_signature)
 from .autotune import tune_tile, argmin_search, tile_candidates  # noqa: F401

@@ -1,14 +1,22 @@
-"""CMM engine: expression -> tiled DAG -> HEFT schedule -> simulation -> run.
+"""CMM engine: expression -> optimize -> tiled DAG -> HEFT -> sim -> run.
 
 This is the user-facing orchestration layer (Fig. 1 of the paper): a
 ``ClusteredMatrix.compute()`` lands here.  The engine
 
-1. tiles the expression (``tiling.tile_expression``) at the configured or
-   auto-selected tile size (§3.3),
-2. schedules with cache-aware HEFT under the offline-profiled time model,
-3. simulates the schedule (the ~0.1 s check the paper runs before execution),
-4. executes with the selected executor (local threaded / Pallas-kernel /
+1. optimizes the expression DAG (``fusion.optimize``: CSE, identity folding,
+   transpose-into-matmul folding, elementwise-chain fusion — the paper's
+   "optimize matrix operations on the fly" step),
+2. tiles the optimized expression (``tiling.tile_expression``) at the
+   configured or auto-selected tile size (§3.3),
+3. schedules with cache-aware HEFT under the offline-profiled time model,
+4. simulates the schedule (the ~0.1 s check the paper runs before execution),
+5. executes with the selected executor (local threaded / Pallas-kernel /
    sharded SUMMA) and returns the materialised ndarray.
+
+Repeated ``compute()`` calls with the same *structure* (iterative workloads:
+power iteration, the Markov example) hit a structural **plan cache** — the
+tiled program + HEFT schedule are reused with the leaves rebound to the new
+data, so planning is paid once per structure.
 """
 from __future__ import annotations
 
@@ -18,6 +26,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .fusion import (FusionReport, leaves_in_order, optimize,
+                     structural_signature)
 from .graph import TaskGraph
 from .heft import Schedule, heft_schedule, register_fill_origin
 from .lazy import ClusteredMatrix, Op, topo_order
@@ -34,6 +44,9 @@ class Plan:
     sim: SimResult
     tile: Tuple[int, int]
     plan_seconds: float
+    spec: Optional[ClusterSpec] = None
+    fusion: Optional[FusionReport] = None
+    cache_hit: bool = False
 
     @property
     def predicted_makespan(self) -> float:
@@ -46,11 +59,19 @@ class CMMEngine:
     def __init__(self, spec: Optional[ClusterSpec] = None,
                  timemodel: Optional[TimeModel] = None,
                  tile: Optional[int] = None,
-                 cache_aware: bool = True):
+                 cache_aware: bool = True,
+                 fuse: bool = True,
+                 plan_cache: bool = True):
         self.spec = spec or c5_9xlarge(1)
         self.timemodel = timemodel or analytic_time_model()
         self.tile = tile
         self.cache_aware = cache_aware
+        self.fuse = fuse
+        self.plan_cache = plan_cache
+        #: structural signature + tile -> (Plan, leaf uid order)
+        self._plans: Dict[tuple, Plan] = {}
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
 
     @classmethod
     def default(cls) -> "CMMEngine":
@@ -68,15 +89,59 @@ class CMMEngine:
                 out[node.uid] = "local"      # generated in place (§3.3)
         return out
 
-    def plan(self, root: ClusteredMatrix, tile=None) -> Plan:
+    def plan(self, root: ClusteredMatrix, tile=None,
+             fuse: Optional[bool] = None) -> Plan:
         t0 = time.perf_counter()
         tile = normalize_tile(tile or self.tile or self._default_tile(root))
+        fuse = self.fuse if fuse is None else fuse
+        report = None
+        if fuse:
+            # transposed-operand tile indexing needs a square tile on
+            # ragged grids; keep explicit TRANSPOSE nodes otherwise
+            root, report = optimize(root, fold_transpose=tile[0] == tile[1])
+
+        key = None
+        if self.plan_cache:
+            key = (structural_signature(root), tile, self.spec,
+                   self.cache_aware, fuse)
+            hit = self._plans.get(key)
+            if hit is not None:
+                self.plan_cache_hits += 1
+                prog = hit.program.rebound(leaves_in_order(root))
+                return Plan(prog, hit.schedule, hit.sim, hit.tile,
+                            time.perf_counter() - t0, spec=self.spec,
+                            fusion=report, cache_hit=True)
+            self.plan_cache_misses += 1
+
         prog = tile_expression(root, tile)
         register_fill_origin(self._fill_origins(root))
         sched = heft_schedule(prog.graph, self.spec, self.timemodel,
                               cache_aware=self.cache_aware)
         sim = simulate(prog.graph, sched, self.spec, self.timemodel)
-        return Plan(prog, sched, sim, tile, time.perf_counter() - t0)
+        plan = Plan(prog, sched, sim, tile, time.perf_counter() - t0,
+                    spec=self.spec, fusion=report)
+        if key is not None:
+            if len(self._plans) >= 128:      # bound cache growth (FIFO)
+                self._plans.pop(next(iter(self._plans)))
+            self._plans[key] = self._cache_copy(plan)
+        return plan
+
+    @staticmethod
+    def _cache_copy(plan: Plan) -> Plan:
+        """The cached entry must not pin user data: INPUT leaf payloads (and
+        the expression root) are dropped — a hit rebinds fresh leaves."""
+        prog = plan.program
+        stripped = []
+        for uid in prog.leaf_order:
+            n = prog.leaf_nodes[uid]
+            if n.op is Op.INPUT:
+                n = ClusteredMatrix(n.op, n.shape, n.dtype, payload=None,
+                                    name=n.name)
+            stripped.append(n)
+        p = prog.rebound(stripped)
+        p.root = None
+        return Plan(p, plan.schedule, plan.sim, plan.tile, plan.plan_seconds,
+                    spec=plan.spec)
 
     def _default_tile(self, root: ClusteredMatrix) -> int:
         # paper finding: tile ~ n/2 is best for n=10k on 8 nodes (§3.3);
@@ -107,6 +172,7 @@ class CMMEngine:
         else:
             raise ValueError(f"unknown executor {executor!r}")
         out = ex.execute(plan)
+        self.last_exec_stats = dict(ex.stats)
         if validate:
             ref = root.eager()
             np.testing.assert_allclose(out, ref, rtol=1e-8, atol=1e-8)

@@ -1,0 +1,450 @@
+"""Expression-graph optimizer (CMM §3.1: "optimize matrix operations on the
+fly" before tiling and scheduling).
+
+The engine runs these rewrite passes over the lazy expression DAG *before*
+``tile_expression``, so tiling / HEFT / simulation all see the reduced graph:
+
+* **identity folding** — ``A + zeros``, ``A - zeros``, ``A @ eye``,
+  ``eye @ A``, ``A * 1.0``, ``A / 1.0``, ``(A.T).T`` collapse to ``A``
+  (only when the fold preserves the result dtype);
+* **transpose folding** — a ``TRANSPOSE`` operand of a ``MATMUL`` becomes a
+  transposed-operand flag ``(ta, tb)`` on the MATMUL node, so no transposed
+  intermediate is ever materialised (BLAS consumes the transposed view
+  directly);
+* **CSE** — structurally identical subexpressions (same op, canonicalised
+  parents and value-relevant payload) are merged, so a shared subexpression
+  is computed once;
+* **elementwise fusion** — maximal connected regions of
+  EWISE/SCALE/ADD/SUB/EWMUL nodes whose interior nodes have a single
+  consumer collapse into one FUSED node.  A FUSED node executes as *one*
+  task per tile, eliminating every interior tile buffer of the chain.
+  Multi-consumer nodes are never inlined (their value is needed elsewhere);
+  they can still root their own region.
+
+The FUSED payload is a small hashable tile program — a tuple of
+instructions in topological order::
+
+    ("in", k)                   # tile of the k-th parent
+    ("ewise", fn, i)            # EWISE_FNS[fn](vals[i])
+    ("scale", kind, s, i)       # apply_scale(kind, vals[i], s)
+    ("add"|"sub"|"ewmul", i, j) # binary elementwise
+
+The last instruction is the output.  ``eval_fused`` interprets it over full
+tiles, reusing dead interior buffers in place (``out=``) so a fused chain of
+N ops allocates O(1) scratch instead of N intermediates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .lazy import ClusteredMatrix, EWISE_FNS, Op, apply_scale, topo_order
+
+#: expression ops that are elementwise over same-shaped operands
+ELEMENTWISE_OPS = {Op.ADD, Op.SUB, Op.EWMUL, Op.SCALE, Op.EWISE}
+
+LEAF_OPS = {Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE}
+
+
+@dataclass
+class FusionReport:
+    """What the optimizer did — surfaced on the Plan for benchmarks/tests."""
+
+    nodes_before: int = 0
+    nodes_after: int = 0
+    cse_merged: int = 0
+    identities_folded: int = 0
+    transposes_folded: int = 0
+    fused_regions: int = 0
+    fused_ops: int = 0          # elementwise nodes swallowed by FUSED regions
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+
+# ---------------------------------------------------------------------------
+# pass 1: identity + transpose folding (single bottom-up rebuild)
+# ---------------------------------------------------------------------------
+
+def _is_zeros(n: ClusteredMatrix) -> bool:
+    return n.op is Op.ZEROS
+
+
+def _is_eye(n: ClusteredMatrix) -> bool:
+    return n.op is Op.EYE
+
+
+def fold_identities(root: ClusteredMatrix, report: FusionReport,
+                    fold_transpose: bool = True) -> ClusteredMatrix:
+    """Algebraic identity folding + transpose-into-matmul flag folding."""
+    new: Dict[int, ClusteredMatrix] = {}
+
+    def rewritten(node: ClusteredMatrix) -> ClusteredMatrix:
+        return new[node.uid]
+
+    for node in topo_order(root):
+        parents = tuple(rewritten(p) for p in node.parents)
+        out: Optional[ClusteredMatrix] = None
+
+        if node.op is Op.ADD:
+            a, b = parents
+            if _is_zeros(b) and a.dtype == node.dtype:
+                out = a
+            elif _is_zeros(a) and b.dtype == node.dtype:
+                out = b
+        elif node.op is Op.SUB:
+            a, b = parents
+            if _is_zeros(b) and a.dtype == node.dtype:
+                out = a
+        elif node.op is Op.SCALE:
+            kind, s = node.payload
+            a = parents[0]
+            if a.dtype == node.dtype and (
+                    (kind in ("scale", "mul", "ewmul", "div") and s == 1.0)
+                    or (kind in ("add", "sub") and s == 0.0)):
+                out = a
+        elif node.op is Op.TRANSPOSE:
+            a = parents[0]
+            if a.op is Op.TRANSPOSE:          # (A.T).T -> A
+                out = a.parents[0]
+        elif node.op is Op.MATMUL:
+            a, b = parents
+            if _is_eye(b) and a.dtype == node.dtype:
+                out = a
+            elif _is_eye(a) and b.dtype == node.dtype:
+                out = b
+            else:
+                ta, tb = node.payload or (False, False)
+                while fold_transpose and a.op is Op.TRANSPOSE:
+                    a, ta = a.parents[0], not ta
+                    report.transposes_folded += 1
+                while fold_transpose and b.op is Op.TRANSPOSE:
+                    b, tb = b.parents[0], not tb
+                    report.transposes_folded += 1
+                if (a, b) != parents or (ta, tb) != (node.payload or
+                                                    (False, False)):
+                    out = ClusteredMatrix(Op.MATMUL, node.shape, node.dtype,
+                                          parents=(a, b),
+                                          payload=((ta, tb) if ta or tb
+                                                   else None),
+                                          name=node.name)
+
+        if out is not None and out.op is not Op.MATMUL:
+            report.identities_folded += 1
+        if out is None:
+            out = node if parents == node.parents else \
+                ClusteredMatrix(node.op, node.shape, node.dtype,
+                                parents=parents, payload=node.payload,
+                                name=node.name)
+        new[node.uid] = out
+    return new[root.uid]
+
+
+# ---------------------------------------------------------------------------
+# pass 2: common-subexpression elimination
+# ---------------------------------------------------------------------------
+
+def _value_payload_key(node: ClusteredMatrix):
+    """Payload component of the CSE key — must distinguish different VALUES.
+
+    INPUT data is keyed by array object identity; RANDOM by its seed.
+    """
+    if node.op is Op.INPUT:
+        return ("input", id(node.payload))
+    if node.op is Op.RANDOM:
+        return ("seed", node.payload)
+    if node.op is Op.FUSED:
+        return node.payload
+    if isinstance(node.payload, (str, int, float, tuple, type(None))):
+        return node.payload
+    return id(node.payload)
+
+
+def cse(root: ClusteredMatrix, report: FusionReport) -> ClusteredMatrix:
+    """Merge structurally identical subexpressions (structural hashing of
+    ``(op, parents, payload)``)."""
+    canon: Dict[tuple, ClusteredMatrix] = {}
+    new: Dict[int, ClusteredMatrix] = {}
+
+    for node in topo_order(root):
+        parents = tuple(new[p.uid] for p in node.parents)
+        key = (node.op, node.shape, str(node.dtype),
+               _value_payload_key(node), tuple(p.uid for p in parents))
+        hit = canon.get(key)
+        if hit is not None:
+            report.cse_merged += 1
+            new[node.uid] = hit
+            continue
+        out = node if parents == node.parents else \
+            ClusteredMatrix(node.op, node.shape, node.dtype, parents=parents,
+                            payload=node.payload, name=node.name)
+        canon[key] = out
+        new[node.uid] = out
+    return new[root.uid]
+
+
+# ---------------------------------------------------------------------------
+# pass 3: elementwise-chain fusion
+# ---------------------------------------------------------------------------
+
+def _consumers(root: ClusteredMatrix) -> Dict[int, Set[int]]:
+    cons: Dict[int, Set[int]] = {root.uid: set()}
+    for node in topo_order(root):
+        cons.setdefault(node.uid, set())
+        for p in node.parents:
+            cons.setdefault(p.uid, set()).add(node.uid)
+    return cons
+
+
+def fuse_elementwise(root: ClusteredMatrix,
+                     report: FusionReport) -> ClusteredMatrix:
+    """Collapse single-consumer elementwise chains into FUSED nodes."""
+    order = topo_order(root)
+    by_uid = {n.uid: n for n in order}
+    cons = _consumers(root)
+
+    # region_of[uid] = uid of the region root this node is inlined into
+    region_of: Dict[int, int] = {}
+    for node in reversed(order):            # root first
+        if node.op not in ELEMENTWISE_OPS:
+            continue
+        cs = cons[node.uid]
+        if len(cs) == 1:
+            (c,) = cs
+            if by_uid[c].op in ELEMENTWISE_OPS:
+                # inline into the consumer's region
+                region_of[node.uid] = region_of.get(c, c)
+                continue
+        region_of[node.uid] = node.uid      # roots its own region
+
+    members: Dict[int, List[ClusteredMatrix]] = {}
+    for node in order:                      # topological member order
+        r = region_of.get(node.uid)
+        if r is not None:
+            members.setdefault(r, []).append(node)
+
+    new: Dict[int, ClusteredMatrix] = {}
+    for node in order:
+        r = region_of.get(node.uid)
+        if r is not None and r != node.uid:
+            continue                        # interior node: no standalone copy
+        if r is None or len(members[r]) == 1:
+            parents = tuple(new[p.uid] for p in node.parents)
+            new[node.uid] = node if parents == node.parents else \
+                ClusteredMatrix(node.op, node.shape, node.dtype,
+                                parents=parents, payload=node.payload,
+                                name=node.name)
+            continue
+
+        # build the FUSED node for this region
+        region = members[r]
+        region_uids = {m.uid for m in region}
+        externals: List[ClusteredMatrix] = []
+        ext_slot: Dict[int, int] = {}       # resolved-external uid -> slot
+        instrs: List[tuple] = []
+        instr_of: Dict[int, int] = {}       # member/external uid -> instr idx
+
+        def operand(p: ClusteredMatrix) -> int:
+            if p.uid in region_uids:
+                return instr_of[p.uid]
+            q = new[p.uid]
+            if q.uid not in ext_slot:
+                ext_slot[q.uid] = len(externals)
+                externals.append(q)
+                instrs.append(("in", ext_slot[q.uid]))
+                instr_of[q.uid] = len(instrs) - 1
+            return instr_of[q.uid]
+
+        for m in region:
+            if m.op is Op.EWISE:
+                ins = ("ewise", m.payload, operand(m.parents[0]))
+            elif m.op is Op.SCALE:
+                kind, s = m.payload
+                ins = ("scale", kind, s, operand(m.parents[0]))
+            else:
+                opname = {Op.ADD: "add", Op.SUB: "sub",
+                          Op.EWMUL: "ewmul"}[m.op]
+                ins = (opname, operand(m.parents[0]), operand(m.parents[1]))
+            instrs.append(ins)
+            instr_of[m.uid] = len(instrs) - 1
+
+        fused = ClusteredMatrix(Op.FUSED, node.shape, node.dtype,
+                                parents=tuple(externals),
+                                payload=tuple(instrs), name=node.name)
+        report.fused_regions += 1
+        report.fused_ops += len(region)
+        new[node.uid] = fused
+
+    return new[root.uid]
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def optimize(root: ClusteredMatrix, fold_transpose: bool = True,
+             fuse: bool = True) -> Tuple[ClusteredMatrix, FusionReport]:
+    """Run all rewrite passes; returns (optimized root, report).
+
+    ``fold_transpose=False`` keeps explicit TRANSPOSE nodes (needed when the
+    tile is non-square, where transposed tile indexing is ill-defined on
+    ragged grids).
+    """
+    report = FusionReport(nodes_before=len(topo_order(root)))
+    root = fold_identities(root, report, fold_transpose=fold_transpose)
+    root = cse(root, report)
+    if fuse:
+        root = fuse_elementwise(root, report)
+    report.nodes_after = len(topo_order(root))
+    return root, report
+
+
+# ---------------------------------------------------------------------------
+# FUSED program interpreter (shared by executor + eager oracle)
+# ---------------------------------------------------------------------------
+
+_UNARY_OUT = {
+    "sin": np.sin, "cos": np.cos, "exp": np.exp, "tanh": np.tanh,
+    "abs": np.abs, "sqrt": np.sqrt, "sign": np.sign,
+}
+_BIN_OUT = {"add": np.add, "sub": np.subtract, "ewmul": np.multiply}
+_SCALE_OUT = {"add": np.add, "sub": np.subtract, "scale": np.multiply,
+              "mul": np.multiply, "ewmul": np.multiply,
+              "div": np.true_divide}
+
+
+def fused_op_count(prog: Sequence[tuple]) -> int:
+    """Number of arithmetic instructions in a FUSED program."""
+    return sum(1 for ins in prog if ins[0] != "in")
+
+
+def fused_flops(prog: Sequence[tuple], m: int, n: int) -> int:
+    """Flop estimate matching the unfused per-kind accounting."""
+    f = 0
+    for ins in prog:
+        if ins[0] == "in":
+            continue
+        f += (4 if ins[0] == "ewise" else 1) * m * n
+    return f
+
+
+def eval_fused(prog: Sequence[tuple], inputs: Sequence[np.ndarray]
+               ) -> np.ndarray:
+    """Interpret a FUSED tile program.
+
+    Interior temporaries whose last use has passed are recycled as ``out=``
+    buffers, so the chain runs with O(1) scratch regardless of length.
+    Input buffers are never written.
+    """
+    n = len(prog)
+    last_use = [0] * n
+    is_input = [ins[0] == "in" for ins in prog]
+    for idx, ins in enumerate(prog):
+        for ref in ins[2:] if ins[0] == "scale" else ins[1:]:
+            if isinstance(ref, int):
+                last_use[ref] = idx
+
+    vals: List[Optional[np.ndarray]] = [None] * n
+    free: List[np.ndarray] = []
+    # buffer recycling is only safe when ufunc output dtype == operand dtype,
+    # which holds for floating inputs (ints would promote under sin/div/...)
+    reuse = all(np.asarray(x).dtype.kind == "f" for x in inputs)
+
+    def take_out(shape, dtype) -> Optional[np.ndarray]:
+        if not reuse:
+            return None
+        for i, buf in enumerate(free):
+            if buf.shape == shape and buf.dtype == dtype:
+                return free.pop(i)
+        return None
+
+    def release(idx: int, at: int):
+        if not is_input[idx] and last_use[idx] <= at:
+            buf = vals[idx]
+            if buf is not None:
+                free.append(buf)
+            vals[idx] = None
+
+    for idx, ins in enumerate(prog):
+        kind = ins[0]
+        if kind == "in":
+            vals[idx] = np.asarray(inputs[ins[1]])
+            continue
+        if kind == "ewise":
+            fn, i = ins[1], ins[2]
+            x = vals[i]
+            if fn == "relu":
+                rd = np.result_type(x.dtype)
+                out = take_out(x.shape, rd)
+                vals[idx] = np.maximum(x, 0.0, out=out) if out is not None \
+                    else np.maximum(x, 0.0)
+            else:
+                uf = _UNARY_OUT.get(fn)
+                if uf is None:              # EWISE_FNS entry without a ufunc
+                    vals[idx] = EWISE_FNS[fn](x)
+                else:
+                    out = take_out(x.shape, np.result_type(x.dtype))
+                    vals[idx] = uf(x, out=out) if out is not None else uf(x)
+            release(i, idx)
+        elif kind == "scale":
+            sk, s, i = ins[1], ins[2], ins[3]
+            x = vals[i]
+            out = take_out(x.shape, x.dtype)
+            uf = _SCALE_OUT.get(sk)
+            if uf is not None and out is not None and \
+                    np.result_type(x.dtype) == out.dtype:
+                vals[idx] = uf(x, x.dtype.type(s), out=out)
+            else:
+                if out is not None:
+                    free.append(out)
+                vals[idx] = apply_scale(sk, x, s)
+            release(i, idx)
+        else:
+            i, j = ins[1], ins[2]
+            a, b = vals[i], vals[j]
+            rd = np.result_type(a.dtype, b.dtype)
+            out = take_out(a.shape, rd)
+            uf = _BIN_OUT[kind]
+            vals[idx] = uf(a, b, out=out) if out is not None else uf(a, b)
+            release(i, idx)
+            release(j, idx)
+
+    return vals[n - 1]
+
+
+# ---------------------------------------------------------------------------
+# structural signature (plan-cache key)
+# ---------------------------------------------------------------------------
+
+def _structure_payload_key(node: ClusteredMatrix):
+    """Payload component of the *structural* signature.
+
+    Unlike the CSE key this deliberately ignores leaf VALUES (input array
+    identity, random seed): the tiled program and schedule depend only on
+    structure and shapes, and a cache hit rebinds the leaves.
+    """
+    if node.op in (Op.INPUT, Op.RANDOM):
+        return None
+    if isinstance(node.payload, (str, int, float, tuple, type(None))):
+        return node.payload
+    return str(node.payload)
+
+
+def structural_signature(root: ClusteredMatrix) -> tuple:
+    """Canonical hashable description of the DAG's structure + shapes."""
+    index: Dict[int, int] = {}
+    sig: List[tuple] = []
+    for i, node in enumerate(topo_order(root)):
+        index[node.uid] = i
+        sig.append((node.op.value, node.shape, str(node.dtype),
+                    _structure_payload_key(node),
+                    tuple(index[p.uid] for p in node.parents)))
+    return tuple(sig)
+
+
+def leaves_in_order(root: ClusteredMatrix) -> List[ClusteredMatrix]:
+    """Leaves in canonical topo order — the rebinding contract between two
+    DAGs with equal structural signatures."""
+    return [n for n in topo_order(root) if n.op in LEAF_OPS]

@@ -31,6 +31,7 @@ class TaskKind(enum.Enum):
     SCALE = "scale"
     EWISE = "ewise"
     TRANSPOSE = "transpose"
+    FUSED = "fused"        # fused elementwise region: one task per tile
     TAKECOPY = "takecopy"
     SEND = "send"
     RECV = "recv"
@@ -40,7 +41,17 @@ class TaskKind(enum.Enum):
 COMPUTE_KINDS = {
     TaskKind.ADDMUL, TaskKind.MATMUL, TaskKind.ADD, TaskKind.SUB,
     TaskKind.EWMUL, TaskKind.SCALE, TaskKind.EWISE, TaskKind.TRANSPOSE,
+    TaskKind.FUSED,
 }
+
+
+def matmul_flags(payload) -> Tuple[bool, bool]:
+    """Transposed-operand flags carried by ADDMUL/MATMUL tasks (the fusion
+    optimizer folds ``A.T @ B`` into flags instead of a TRANSPOSE pass)."""
+    if (isinstance(payload, tuple) and len(payload) == 2
+            and all(isinstance(x, bool) for x in payload)):
+        return payload
+    return (False, False)
 
 
 @dataclass(frozen=True)
@@ -83,8 +94,10 @@ class Task:
     def dims(self) -> Tuple[int, ...]:
         """Operand dims fed to the Table-1 interpolation equations."""
         if self.kind in (TaskKind.ADDMUL, TaskKind.MATMUL):
-            (m, n) = self.ins[0].shape
-            k = self.ins[1].shape[1]
+            ta, tb = matmul_flags(self.payload)
+            sa, sb = self.ins[0].shape, self.ins[1].shape
+            m, n = (sa[1], sa[0]) if ta else sa
+            k = sb[0] if tb else sb[1]
             return (m, n, k)
         shp = (self.out.shape if self.out is not None else self.ins[0].shape)
         return shp
@@ -165,10 +178,12 @@ class TaskGraph:
             for s in t.succs:
                 assert t.tid in self.tasks[s].preds, "edge asymmetry"
             if t.kind in (TaskKind.ADDMUL, TaskKind.MATMUL):
-                (m, n) = t.ins[0].shape
-                (n2, k) = t.ins[1].shape
-                assert n == n2, f"inner dim mismatch in {t}"
-                assert t.out.shape == (m, k), f"out shape mismatch in {t}"
+                ta, tb = matmul_flags(t.payload)
+                sa = t.ins[0].shape[::-1] if ta else t.ins[0].shape
+                sb = t.ins[1].shape[::-1] if tb else t.ins[1].shape
+                assert sa[1] == sb[0], f"inner dim mismatch in {t}"
+                assert t.out.shape == (sa[0], sb[1]), \
+                    f"out shape mismatch in {t}"
         self.topo()  # raises on cycle
 
     def counts(self) -> Dict[str, int]:

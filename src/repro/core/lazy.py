@@ -34,6 +34,8 @@ class Op(enum.Enum):
     SCALE = "scale"          # matrix (+,-,x,/) scalar — Table 1 row 4
     EWISE = "ewise"          # unary sin/cos/... — Table 1 row 3
     TRANSPOSE = "transpose"
+    FUSED = "fused"          # optimizer-generated elementwise region
+                             # (payload: instruction tuple, see core.fusion)
 
 
 #: unary elementwise functions supported by Op.EWISE (Table 1 row 3)
@@ -215,13 +217,68 @@ def topo_order(root: ClusteredMatrix) -> Sequence[ClusteredMatrix]:
     return order
 
 
+#: canonical RNG block edge for RANDOM leaves.  Random data is DEFINED as a
+#: grid of RNG_BLOCK x RNG_BLOCK blocks, block (bi, bj) drawn from
+#: ``default_rng((seed, bi, bj))`` — a counter-based scheme, so any slice of
+#: the matrix can be generated standalone (per-tile FILL in the executor)
+#: and is bit-identical to the full materialisation used by ``eager()``,
+#: whatever the execution tile size.  128 divides the common tile sizes
+#: (256/384/512/...), so aligned tiles generate no excess numbers.
+RNG_BLOCK = 128
+
+
+def random_slice(seed: int, shape: Tuple[int, int], dtype,
+                 r0: int, r1: int, c0: int, c1: int) -> np.ndarray:
+    """Generate rows ``r0:r1`` x cols ``c0:c1`` of the canonical random
+    matrix ``(seed, shape)`` without materialising the rest of it."""
+    out = np.empty((r1 - r0, c1 - c0), dtype=dtype)
+    m, n = shape
+    B = RNG_BLOCK
+    for bi in range(r0 // B, -(-r1 // B)):
+        br0, br1 = bi * B, min((bi + 1) * B, m)
+        for bj in range(c0 // B, -(-c1 // B)):
+            bc0, bc1 = bj * B, min((bj + 1) * B, n)
+            rng = np.random.default_rng((seed, bi, bj))
+            blk = rng.standard_normal((br1 - br0, bc1 - bc0))
+            ir0, ir1 = max(r0, br0), min(r1, br1)
+            ic0, ic1 = max(c0, bc0), min(c1, bc1)
+            out[ir0 - r0:ir1 - r0, ic0 - c0:ic1 - c0] = \
+                blk[ir0 - br0:ir1 - br0, ic0 - bc0:ic1 - bc0]
+    return out
+
+
+def leaf_slice(node: ClusteredMatrix, r0: int, r1: int,
+               c0: int, c1: int) -> np.ndarray:
+    """One tile of a leaf, generated/sliced without touching other tiles.
+
+    INPUT returns a *view* into the user array (zero-copy); RANDOM generates
+    only the covering canonical blocks; ZEROS/EYE build just the tile.
+    """
+    if node.op is Op.INPUT:
+        a = np.asarray(node.payload)
+        if a.dtype != node.dtype:
+            a = a.astype(node.dtype)
+        return a[r0:r1, c0:c1]
+    if node.op is Op.RANDOM:
+        return random_slice(node.payload, node.shape, node.dtype,
+                            r0, r1, c0, c1)
+    if node.op is Op.ZEROS:
+        return np.zeros((r1 - r0, c1 - c0), node.dtype)
+    if node.op is Op.EYE:
+        t = np.zeros((r1 - r0, c1 - c0), node.dtype)
+        for k in range(max(r0, c0), min(r1, c1)):
+            t[k - r0, k - c0] = 1
+        return t
+    raise ValueError(f"{node.op} is not a leaf")
+
+
 def materialize_leaf(node: ClusteredMatrix) -> np.ndarray:
     """Produce the full ndarray for a leaf node (INPUT/RANDOM/ZEROS/EYE)."""
     if node.op is Op.INPUT:
         return np.asarray(node.payload, dtype=node.dtype)
     if node.op is Op.RANDOM:
-        rng = np.random.default_rng(node.payload)
-        return rng.standard_normal(node.shape).astype(node.dtype)
+        return random_slice(node.payload, node.shape, node.dtype,
+                            0, node.shape[0], 0, node.shape[1])
     if node.op is Op.ZEROS:
         return np.zeros(node.shape, node.dtype)
     if node.op is Op.EYE:
@@ -254,7 +311,17 @@ def eager_eval(root: ClusteredMatrix) -> np.ndarray:
         elif node.op is Op.EWMUL:
             vals[node.uid] = vals[node.parents[0].uid] * vals[node.parents[1].uid]
         elif node.op is Op.MATMUL:
-            vals[node.uid] = vals[node.parents[0].uid] @ vals[node.parents[1].uid]
+            a = vals[node.parents[0].uid]
+            b = vals[node.parents[1].uid]
+            if node.payload:                 # folded-transpose flags (ta, tb)
+                ta, tb = node.payload
+                a = a.T if ta else a
+                b = b.T if tb else b
+            vals[node.uid] = a @ b
+        elif node.op is Op.FUSED:
+            from .fusion import eval_fused   # local import (cycle)
+            vals[node.uid] = eval_fused(
+                node.payload, [vals[p.uid] for p in node.parents])
         elif node.op is Op.SCALE:
             kind, s = node.payload
             vals[node.uid] = apply_scale(kind, vals[node.parents[0].uid], s)

@@ -63,14 +63,18 @@ def profile_ewise(sizes: Sequence[int], reps: int = 3,
 
 def profile_fill(sizes: Sequence[int], reps: int = 3
                  ) -> Tuple[List[Tuple[int, int]], List[float]]:
-    """Data-generation (fill) cost: RNG-bound, much slower than memcpy."""
+    """Data-generation (fill) cost: RNG-bound, much slower than memcpy.
+
+    Times the executor's actual per-tile path (``lazy.random_slice``, the
+    canonical block RNG) so the model prices what FILL tasks really do.
+    """
+    from .lazy import random_slice
     dims_list, times = [], []
     for m in sizes:
         for n in sizes:
-            rng = np.random.default_rng(m * n)
 
-            def run(rng=rng, m=m, n=n):
-                rng.standard_normal((m, n))
+            def run(m=m, n=n):
+                random_slice(m * n, (m, n), np.float64, 0, m, 0, n)
 
             times.append(_time_call(run, reps))
             dims_list.append((m, n))
@@ -87,8 +91,39 @@ def profile_machine(sizes: Sequence[int] = (64, 128, 256, 384, 512),
     tm.models["ewise"] = PolyModel.fit("ewise", dims_e, times_e)
     dims_f, times_f = profile_fill(sizes, reps)
     tm.models["fill"] = PolyModel.fit("ewise", dims_f, times_f)
+    calibrate_contention(tm)
     calibrate_dispatch(tm)
     return tm
+
+
+def calibrate_contention(tm: TimeModel, n: int = 768, tile: int = 384,
+                         reps: int = 2) -> float:
+    """Fit the concurrent-worker throughput scale (§3.4 observed-time fit).
+
+    The family models are profiled one call at a time, but the executor runs
+    ``worker_procs`` tasks concurrently, each inside multi-threaded BLAS —
+    on an oversubscribed or shared host the effective per-task throughput is
+    lower.  Run a GEMM-bound tiled program for real and scale the model by
+    the observed wall / simulated makespan (clamped to [1, 8])."""
+    import time as _time
+
+    from .engine import CMMEngine
+    from .lazy import ClusteredMatrix as CM
+    from .machine import local_spec
+
+    tm.contention = 1.0          # fit against the uncalibrated model
+    eng = CMMEngine(local_spec(1), tm, tile=tile)
+    P = CM.rand(n, n, seed=0)
+    expr = P @ P
+    plan = eng.plan(expr)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        eng.run(expr, plan=plan, workers=eng.spec.worker_procs)
+        best = min(best, _time.perf_counter() - t0)
+    scale = best / max(plan.predicted_makespan, 1e-12)
+    tm.contention = min(max(scale, 1.0), 8.0)
+    return tm.contention
 
 
 def calibrate_dispatch(tm: TimeModel, n: int = 256, tile: int = 64,

@@ -86,6 +86,7 @@ class SimResult:
             lanes[(iv.node, iv.slot)].append(iv)
         sym = {"addmul": "#", "matmul": "#", "add": "+", "sub": "-",
                "ewmul": "*", "scale": "*", "ewise": "~", "transpose": "t",
+               "fused": "F",
                "fill": "f", "calloc": ".", "takecopy": "c"}
         out = []
         for (node, slot) in sorted(lanes):

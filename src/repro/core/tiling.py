@@ -50,12 +50,30 @@ class TiledProgram:
 
     def __init__(self, graph: TaskGraph, tile: Tuple[int, int],
                  root: ClusteredMatrix,
-                 leaf_nodes: Dict[int, ClusteredMatrix]):
+                 leaf_nodes: Dict[int, ClusteredMatrix],
+                 dtypes: Optional[Dict[int, "object"]] = None):
         self.graph = graph
         self.tile = tile
         self.root = root
         #: expr-node uid -> leaf ClusteredMatrix (for FILL materialisation)
         self.leaf_nodes = leaf_nodes
+        #: expr-node uid -> np.dtype (CALLOC must allocate in the expression
+        #: dtype, not float64)
+        self.dtypes = dtypes or {}
+        #: canonical leaf-uid order (plan-cache leaf rebinding contract)
+        self.leaf_order = list(leaf_nodes)
+
+    def rebound(self, new_leaves) -> "TiledProgram":
+        """A shallow copy with FILL leaves rebound to ``new_leaves`` (same
+        canonical order) — how a plan-cache hit serves a structurally equal
+        DAG holding different data."""
+        if len(new_leaves) != len(self.leaf_order):
+            raise ValueError("leaf count mismatch on plan-cache rebind")
+        leaf_nodes = dict(zip(self.leaf_order, new_leaves))
+        p = TiledProgram(self.graph, self.tile, self.root, leaf_nodes,
+                         self.dtypes)
+        p.leaf_order = list(self.leaf_order)
+        return p
 
 
 def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
@@ -70,6 +88,7 @@ def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
     # node uid -> {(i,j): (TileRef, producer_tid)}
     tiles: Dict[int, Dict[Tuple[int, int], Tuple[TileRef, int]]] = {}
     leaf_nodes: Dict[int, ClusteredMatrix] = {}
+    dtypes: Dict[int, "object"] = {}
 
     def ref(node: ClusteredMatrix, i: int, j: int) -> TileRef:
         return TileRef(node.uid, i, j, tile_shape(node.shape, t, i, j))
@@ -77,6 +96,7 @@ def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
     for node in topo_order(root):
         gm, gn = grid_of(node.shape, t)
         entry: Dict[Tuple[int, int], Tuple[TileRef, int]] = {}
+        dtypes[node.uid] = node.dtype
 
         if node.op in (Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE):
             leaf_nodes[node.uid] = node
@@ -93,18 +113,37 @@ def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
             a, b = node.parents
             ga = tiles[a.uid]
             gb = tiles[b.uid]
-            kt = grid_of(a.shape, t)[1]  # inner tile count
+            # transposed-operand flags folded in by the fusion optimizer:
+            # operand tiles are indexed through the transpose instead of a
+            # materialised TRANSPOSE pass (requires a square tile for ragged
+            # grids to line up; the engine guarantees that)
+            ta, tb = node.payload or (False, False)
+            if (ta or tb) and t[0] != t[1]:
+                raise ValueError("transposed matmul needs a square tile")
+            # the inner dimension is tiled by tn on A but by tm on B; a
+            # non-square tile misaligns the k-chains (silent wrong results)
+            # unless the inner dim fits in a single tile both ways
+            n_inner = a.shape[0] if ta else a.shape[1]
+            if t[0] != t[1] and max(cld(n_inner, t[0]),
+                                    cld(n_inner, t[1])) > 1:
+                raise ValueError(
+                    f"MATMUL inner dim {n_inner} needs a square tile, "
+                    f"got {t}; use an int tile size")
+            kt = grid_of(a.shape, t)[0 if ta else 1]  # inner tile count
+            flags = (ta, tb) if ta or tb else None
             for i in range(gm):
                 for j in range(gn):
                     r = ref(node, i, j)
                     calloc = g.add(TaskKind.CALLOC, (), r, payload=node.uid)
                     prev = calloc.tid
                     for k in range(kt):
-                        ra, pa = ga[(i, k)]
-                        rb, pb = gb[(k, j)]
-                        m_, n_ = ra.shape
-                        k_ = rb.shape[1]
+                        ra, pa = ga[(k, i) if ta else (i, k)]
+                        rb, pb = gb[(j, k) if tb else (k, j)]
+                        m_ = ra.shape[1] if ta else ra.shape[0]
+                        n_ = ra.shape[0] if ta else ra.shape[1]
+                        k_ = rb.shape[0] if tb else rb.shape[1]
                         task = g.add(TaskKind.ADDMUL, (ra, rb), r,
+                                     payload=flags,
                                      flops=2 * m_ * n_ * k_,
                                      deps=(prev, pa, pb))
                         prev = task.tid
@@ -146,7 +185,31 @@ def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
                                  flops=4 * r.shape[0] * r.shape[1], deps=(pa,))
                     entry[(i, j)] = (r, task.tid)
 
+        elif node.op is Op.FUSED:
+            # one task per tile for the whole elementwise region: inputs are
+            # the (i, j) tiles of every external parent
+            from .fusion import fused_flops
+            for i in range(gm):
+                for j in range(gn):
+                    ins, deps = [], []
+                    for p in node.parents:
+                        rp, pp = tiles[p.uid][(i, j)]
+                        ins.append(rp)
+                        deps.append(pp)
+                    r = ref(node, i, j)
+                    task = g.add(TaskKind.FUSED, ins, r, payload=node.payload,
+                                 flops=fused_flops(node.payload, *r.shape),
+                                 deps=deps)
+                    entry[(i, j)] = (r, task.tid)
+
         elif node.op is Op.TRANSPOSE:
+            # tile (i, j) of the transpose is the transpose of parent tile
+            # (j, i) — which only lines up when the tile is square (the
+            # single-tile-size design; ragged edges break otherwise)
+            if t[0] != t[1]:
+                raise ValueError(
+                    f"TRANSPOSE needs a square tile, got {t}; "
+                    f"use an int tile size")
             a = node.parents[0]
             for i in range(gm):
                 for j in range(gn):
@@ -172,7 +235,7 @@ def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
             g.result_tiles.append(r)
     g.result_grid = (gm, gn)
     g.result_shape = root.shape
-    return TiledProgram(g, t, root, leaf_nodes)
+    return TiledProgram(g, t, root, leaf_nodes, dtypes)
 
 
 def assemble(tile_values: Dict[TileRef, "object"],

@@ -51,6 +51,7 @@ KIND_FAMILY = {
     TaskKind.SCALE: "ewise",
     TaskKind.EWISE: "ewise",
     TaskKind.TRANSPOSE: "ewise",
+    TaskKind.FUSED: "ewise",
     TaskKind.CALLOC: "ewise",
     TaskKind.FILL: "ewise",
     TaskKind.TAKECOPY: "ewise",
@@ -92,6 +93,10 @@ class TimeModel:
     models: Dict[str, PolyModel] = field(default_factory=dict)
     #: overhead multiplier for scheduling/dispatch (fitted or 1.0)
     dispatch_overhead: float = 0.0
+    #: throughput scale observed under concurrent workers (profiling times
+    #: one call at a time; real execution oversubscribes BLAS threads on a
+    #: shared host — fitted by ``profiler.calibrate_contention``)
+    contention: float = 1.0
 
     def compute_time(self, task: Task, spec: Optional[ClusterSpec] = None,
                      node: int = 0) -> float:
@@ -107,7 +112,13 @@ class TimeModel:
             t = flops / 1e9
         else:
             t = model.predict(task.dims())
-        t += self.dispatch_overhead
+            if kind is TaskKind.FUSED:
+                # a fused region does N elementwise passes' arithmetic in
+                # one task (with better locality; the single-pass model
+                # per op is a conservative upper bound)
+                from .fusion import fused_op_count
+                t *= max(1, fused_op_count(task.payload))
+        t = t * self.contention + self.dispatch_overhead
         if spec is not None:
             t *= spec.node_slowdown(node)
         return t
@@ -120,6 +131,7 @@ class TimeModel:
     def to_json(self) -> str:
         return json.dumps({
             "dispatch_overhead": self.dispatch_overhead,
+            "contention": self.contention,
             "models": {k: {"family": m.family, "coef": m.coef.tolist()}
                        for k, m in self.models.items()},
         })
@@ -131,6 +143,7 @@ class TimeModel:
             models={k: PolyModel(v["family"], np.asarray(v["coef"]))
                     for k, v in d["models"].items()},
             dispatch_overhead=d.get("dispatch_overhead", 0.0),
+            contention=d.get("contention", 1.0),
         )
 
     def save(self, path: str):

@@ -1,71 +1,104 @@
 """Local executor: runs a planned tiled task graph and materialises the result.
 
-Executes tasks in HEFT-priority order with a worker pool sized like the
-machine model (``worker_procs`` threads — NumPy/BLAS releases the GIL inside
-GEMM, so tiles genuinely overlap).  This is both the single-node execution
-path of the framework and the correctness oracle for the scheduler: whatever
-HEFT decided, the data dependencies enforced here must reproduce
+Executes tasks in HEFT-priority order with a worker pool sized from the
+plan's machine model (``ClusterSpec.worker_procs`` x nodes, falling back to
+``os.cpu_count()`` — NumPy/BLAS releases the GIL inside GEMM, so tiles
+genuinely overlap).  This is both the single-node execution path of the
+framework and the correctness oracle for the scheduler: whatever HEFT
+decided, the data dependencies enforced here must reproduce
 ``ClusteredMatrix.eager()`` exactly.
+
+Zero-copy tile runtime:
+
+* FILL generates **only its own tile** — INPUT tiles are views into the user
+  array, RANDOM tiles come from the counter-based canonical block RNG
+  (``lazy.random_slice``), ZEROS/EYE build just the tile.  No full leaf is
+  ever materialised.
+* CALLOC allocates in the expression dtype (``TiledProgram.dtypes``).
+* Buffers are reference-counted: a tile is freed as soon as its last reader
+  finishes, so peak memory is bounded by *live* tiles, not all tiles.
+  ``self.stats`` records the observed peak.
+* No global buffer lock: each buffer has exactly one writer at a time (the
+  dependency edges guarantee it), so writes go straight into the dict;
+  only the tiny refcount/scheduler bookkeeping is serialised.
 
 ``use_pallas=True`` routes ``addmul`` tiles through the Pallas blocked-GEMM
 kernel (interpret mode on CPU, compiled on TPU).
 """
 from __future__ import annotations
 
+import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Optional
 
 import numpy as np
 
-from ..core.graph import Task, TaskGraph, TaskKind, TileRef
-from ..core.lazy import EWISE_FNS, apply_scale, materialize_leaf
+from ..core.fusion import eval_fused
+from ..core.graph import Task, TaskGraph, TaskKind, TileRef, matmul_flags
+from ..core.lazy import EWISE_FNS, apply_scale, leaf_slice
 from ..core.tiling import assemble, tile_slices
 
 
 class LocalExecutor:
-    def __init__(self, workers: Optional[int] = None, use_pallas: bool = False):
+    def __init__(self, workers: Optional[int] = None, use_pallas: bool = False,
+                 free_buffers: bool = True):
         self.workers = workers
         self.use_pallas = use_pallas
+        self.free_buffers = free_buffers
+        #: filled by execute(): peak_buffer_bytes, tasks_run, buffers_freed
+        self.stats: Dict[str, int] = {}
+
+    def _nworkers(self, plan) -> int:
+        if self.workers:
+            return self.workers
+        spec = getattr(plan, "spec", None)
+        if spec is not None:
+            return max(1, spec.n_nodes * spec.worker_procs)
+        return os.cpu_count() or 4
 
     def execute(self, plan) -> np.ndarray:
         g: TaskGraph = plan.program.graph
         tile = plan.tile
         leaf_nodes = plan.program.leaf_nodes
-        # materialised full leaves (generated once, sliced per FILL task)
-        leaf_data: Dict[int, np.ndarray] = {}
-        leaf_lock = threading.Lock()
+        dtypes = plan.program.dtypes
         buffers: Dict[TileRef, np.ndarray] = {}
-        buf_lock = threading.Lock()
+
+        # readers per tile buffer (+1 keeps every result tile alive for
+        # final assembly); freed at zero by the last reader
+        refcnt: Dict[TileRef, int] = {}
+        for t in g:
+            for r in t.ins:
+                refcnt[r] = refcnt.get(r, 0) + 1
+        for r in g.result_tiles:
+            refcnt[r] = refcnt.get(r, 0) + 1
+        mem = {"cur": 0, "peak": 0, "freed": 0}
 
         if self.use_pallas:
             from ..kernels import ops as kops
 
-        def leaf(uid: int) -> np.ndarray:
-            with leaf_lock:
-                if uid not in leaf_data:
-                    leaf_data[uid] = materialize_leaf(leaf_nodes[uid])
-                return leaf_data[uid]
-
         def run_task(t: Task):
             if t.kind is TaskKind.CALLOC:
-                with buf_lock:
-                    buffers[t.out] = np.zeros(t.out.shape)
+                dt = dtypes.get(t.payload, np.float64)
+                buffers[t.out] = np.zeros(t.out.shape, dtype=dt)
                 return
             if t.kind is TaskKind.FILL:
-                full = leaf(t.payload)
-                rs = tile_slices(full.shape[0], tile[0])[t.out.i]
-                cs = tile_slices(full.shape[1], tile[1])[t.out.j]
-                val = np.ascontiguousarray(full[rs[0]:rs[1], cs[0]:cs[1]])
-                with buf_lock:
-                    buffers[t.out] = val
+                node = leaf_nodes[t.payload]
+                rs = tile_slices(node.shape[0], tile[0])[t.out.i]
+                cs = tile_slices(node.shape[1], tile[1])[t.out.j]
+                buffers[t.out] = leaf_slice(node, rs[0], rs[1], cs[0], cs[1])
                 return
             if t.kind is TaskKind.ADDMUL:
+                ta, tb = matmul_flags(t.payload)
                 a = buffers[t.ins[0]]
                 b = buffers[t.ins[1]]
+                a = a.T if ta else a
+                b = b.T if tb else b
                 c = buffers[t.out]
                 if self.use_pallas:
-                    buffers[t.out] = np.asarray(kops.addmul(c, a, b))
+                    buffers[t.out] = np.asarray(
+                        kops.addmul(c, np.ascontiguousarray(a),
+                                    np.ascontiguousarray(b)))
                 else:
                     c += a @ b
                 return
@@ -85,6 +118,10 @@ class LocalExecutor:
             if t.kind is TaskKind.EWISE:
                 buffers[t.out] = EWISE_FNS[t.payload](buffers[t.ins[0]])
                 return
+            if t.kind is TaskKind.FUSED:
+                buffers[t.out] = eval_fused(
+                    t.payload, [buffers[r] for r in t.ins])
+                return
             if t.kind is TaskKind.TRANSPOSE:
                 buffers[t.out] = np.ascontiguousarray(buffers[t.ins[0]].T)
                 return
@@ -103,10 +140,35 @@ class LocalExecutor:
         cv = threading.Condition(done_lock)
         inflight = [0]
 
-        nworkers = self.workers or 4
+        nworkers = self._nworkers(plan)
+
+        def account(t: Task):
+            """Memory bookkeeping after a task ran (under cv)."""
+            if t.out is not None and t.kind is not TaskKind.TAKECOPY:
+                buf = buffers.get(t.out)
+                if buf is not None and buf.base is None and \
+                        t.kind in (TaskKind.CALLOC, TaskKind.FILL,
+                                   TaskKind.ADD, TaskKind.SUB,
+                                   TaskKind.EWMUL, TaskKind.SCALE,
+                                   TaskKind.EWISE, TaskKind.FUSED,
+                                   TaskKind.TRANSPOSE):
+                    # views (zero-copy INPUT slices) own no memory
+                    mem["cur"] += buf.nbytes
+                    mem["peak"] = max(mem["peak"], mem["cur"])
+            if not self.free_buffers:
+                return
+            for r in t.ins:
+                refcnt[r] -= 1
+                if refcnt[r] == 0:
+                    buf = buffers.pop(r, None)
+                    if buf is not None:
+                        if buf.base is None:
+                            mem["cur"] -= buf.nbytes
+                        mem["freed"] += 1
 
         def worker_done(tid: int):
             with cv:
+                account(g.tasks[tid])
                 for s in g.tasks[tid].succs:
                     deps_left[s] -= 1
                     if deps_left[s] == 0:
@@ -114,13 +176,16 @@ class LocalExecutor:
                 inflight[0] -= 1
                 cv.notify_all()
 
+        errors: list = []
         with ThreadPoolExecutor(max_workers=nworkers) as pool:
             submitted = 0
             total = len(g)
             with cv:
-                while submitted < total:
-                    while not ready:
+                while submitted < total and not errors:
+                    while not ready and not errors:
                         cv.wait()
+                    if errors:
+                        break
                     _, tid = heapq.heappop(ready)
                     inflight[0] += 1
                     submitted += 1
@@ -128,13 +193,21 @@ class LocalExecutor:
                     def job(tid=tid):
                         try:
                             run_task(g.tasks[tid])
+                        except BaseException as e:  # surface task failures
+                            errors.append(e)
                         finally:
                             worker_done(tid)
 
                     pool.submit(job)
                 while inflight[0] > 0:
                     cv.wait()
+        if errors:
+            raise errors[0]
 
+        self.stats = {"peak_buffer_bytes": mem["peak"],
+                      "buffers_freed": mem["freed"],
+                      "tasks_run": len(g),
+                      "workers": nworkers}
         vals = {r: buffers[r] for r in g.result_tiles}
         return assemble(vals, g.result_shape, tile,
                         g.result_tiles[0].tensor)

@@ -1,0 +1,296 @@
+"""Fusion optimizer + plan cache + zero-copy runtime.
+
+Every rewrite pass is validated against ``eager()`` on mixed-op DAGs with
+ragged tiles; CSE must not fuse multi-consumer nodes; the plan cache must
+hit on structure and still compute with the *new* leaf data.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ClusteredMatrix as CM, CMMEngine,
+                        analytic_time_model, c5_9xlarge)
+from repro.core.fusion import (eval_fused, fuse_elementwise, optimize,
+                               structural_signature, FusionReport)
+from repro.core.graph import TaskKind
+from repro.core.lazy import Op, leaf_slice, materialize_leaf, random_slice
+from repro.exec.local import LocalExecutor
+
+TM = analytic_time_model()
+
+
+def _engine(nodes=2, tile=None, **kw):
+    return CMMEngine(c5_9xlarge(nodes), TM, tile=tile, **kw)
+
+
+def _check(expr, tile, nodes=2, **kw):
+    eng = _engine(nodes, **kw)
+    out = eng.run(expr, tile=tile)
+    np.testing.assert_allclose(out, expr.eager(), rtol=1e-8, atol=1e-8)
+    return eng
+
+
+# -- elementwise fusion -------------------------------------------------------
+
+def test_chain_fuses_to_one_task_per_tile():
+    A = CM.rand(12, 12, seed=0)
+    B = CM.rand(12, 12, seed=1)
+    C = CM.rand(12, 12, seed=2)
+    expr = ((A @ B).relu() * 2.0 + C).ewise("tanh")
+    opt, rep = optimize(expr)
+    assert opt.op is Op.FUSED
+    assert rep.fused_regions == 1 and rep.fused_ops == 4
+    eng = _engine()
+    plan = eng.plan(expr, tile=5)          # ragged 12/5 grid
+    counts = plan.program.graph.counts()
+    assert counts.get("fused") == 9        # 3x3 tiles, one task each
+    assert "ewise" not in counts and "scale" not in counts \
+        and "add" not in counts
+    _check(expr, tile=5)
+
+
+def test_fusion_reduces_task_count_2x_on_ewise_chain():
+    A = CM.rand(16, 16, seed=0)
+    C = CM.rand(16, 16, seed=1)
+    e = A
+    for _ in range(6):
+        e = (e * 1.01 + 0.5).relu().hadamard(C)
+    eng_f = _engine(fuse=True)
+    eng_n = _engine(fuse=False)
+    nf = len(eng_f.plan(e, tile=8).program.graph)
+    nn = len(eng_n.plan(e, tile=8).program.graph)
+    assert nn >= 2 * nf
+    _check(e, tile=8)
+
+
+def test_multi_consumer_node_not_inlined():
+    """CSE/fusion must keep a shared subexpression as a real buffer."""
+    A = CM.rand(10, 10, seed=0)
+    S = (A * 3.0).relu()                  # used twice below
+    expr = S.hadamard(S) + (S * 0.5)
+    opt, rep = optimize(expr)
+    # S's region is separate from the consumer region: S appears as an
+    # external input (an Op node), not inlined into the root FUSED program
+    assert opt.op is Op.FUSED
+    shared = [p for p in opt.parents if p.op in (Op.FUSED, Op.EWISE)]
+    assert len(shared) == 1
+    _check(expr, tile=4)
+
+
+def test_fused_ragged_and_mixed_dags():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((11, 7))
+    b = rng.standard_normal((7, 13))
+    c = rng.standard_normal((11, 13))
+    A, B, C = CM.from_array(a), CM.from_array(b), CM.from_array(c)
+    expr = (((A @ B) - C) * 0.25).ewise("sin") + (C * 2.0)
+    for tile in (3, 4, 5, 11):
+        _check(expr, tile=tile)
+
+
+def test_fused_float32_dtype():
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((9, 9)).astype(np.float32)
+    A = CM.from_array(a)
+    expr = (A @ A).relu() * 2.0
+    eng = _engine()
+    out = eng.run(expr, tile=4)
+    assert out.dtype == np.float32        # CALLOC in expression dtype
+    np.testing.assert_allclose(out, expr.eager(), rtol=1e-5, atol=1e-5)
+
+
+def test_eval_fused_matches_naive():
+    prog = (("in", 0), ("in", 1),
+            ("add", 0, 1), ("scale", "mul", 2.0, 2),
+            ("ewise", "tanh", 3), ("sub", 4, 0), ("ewmul", 5, 5))
+    rng = np.random.default_rng(1)
+    x, y = rng.standard_normal((6, 4)), rng.standard_normal((6, 4))
+    got = eval_fused(prog, [x, y])
+    want = (np.tanh((x + y) * 2.0) - x) ** 2
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+    # inputs must not be clobbered by buffer reuse
+    np.testing.assert_array_equal(x, rng.__class__(np.random.PCG64(1))
+                                  .standard_normal((6, 4)))
+
+
+# -- CSE / identity / transpose folds ----------------------------------------
+
+def test_cse_merges_shared_structure():
+    A = CM.rand(8, 8, seed=0)
+    B = CM.rand(8, 8, seed=1)
+    expr = (A @ B) + (A @ B)              # two distinct MATMUL nodes
+    opt, rep = optimize(expr)
+    assert rep.cse_merged >= 1
+    assert opt.parents[0] is opt.parents[1] or opt.op is Op.SCALE \
+        or len({id(p) for p in opt.parents}) == 1
+    _check(expr, tile=3)
+
+
+def test_cse_distinguishes_different_seeds():
+    A = CM.rand(8, 8, seed=0)
+    B = CM.rand(8, 8, seed=1)             # same structure, different data
+    expr = (A @ A) + (B @ B)
+    opt, rep = optimize(expr)
+    assert rep.cse_merged == 0
+    _check(expr, tile=4)
+
+
+@pytest.mark.parametrize("build", [
+    lambda A: A + CM.zeros(10, 6),
+    lambda A: CM.zeros(10, 6) + A,
+    lambda A: A - CM.zeros(10, 6),
+    lambda A: A @ CM.eye(6),
+    lambda A: CM.eye(10) @ A,
+    lambda A: A * 1.0,
+    lambda A: A / 1.0,
+    lambda A: A.T.T,
+])
+def test_identity_folds(build):
+    A = CM.rand(10, 6, seed=5)
+    expr = build(A)
+    opt, rep = optimize(expr)
+    assert opt is A
+    _check(expr, tile=4)
+
+
+def test_identity_fold_keeps_dtype_promotion():
+    """float32 + float64 zeros promotes — folding must NOT change dtype."""
+    a32 = CM.from_array(np.ones((4, 4), np.float32))
+    expr = a32 + CM.zeros(4, 4)           # float64 zeros
+    opt, _ = optimize(expr)
+    assert opt.dtype == np.float64        # fold suppressed
+    _check(expr, tile=2)
+
+
+def test_transpose_folds_into_matmul():
+    A = CM.rand(11, 7, seed=0)
+    B = CM.rand(11, 13, seed=1)
+    expr = A.T @ B
+    eng = _engine()
+    plan = eng.plan(expr, tile=4)
+    counts = plan.program.graph.counts()
+    assert "transpose" not in counts
+    _check(expr, tile=4)
+    # both flags + ragged tiles
+    expr2 = (A.T @ B).T @ (A.T @ B)
+    _check(expr2, tile=5)
+
+
+def test_transpose_flag_costing_dims():
+    A = CM.rand(8, 4, seed=0)
+    B = CM.rand(8, 6, seed=1)
+    eng = _engine()
+    plan = eng.plan(A.T @ B, tile=4)
+    for t in plan.program.graph:
+        if t.kind is TaskKind.ADDMUL:
+            m, n, k = t.dims()
+            assert (m, k) == t.out.shape
+            plan.program.graph.validate()
+
+
+# -- canonical per-tile RNG ---------------------------------------------------
+
+def test_random_slice_bit_identical_to_full():
+    full = materialize_leaf(CM.rand(300, 150, seed=9))
+    got = random_slice(9, (300, 150), np.float64, 17, 203, 40, 150)
+    np.testing.assert_array_equal(got, full[17:203, 40:150])
+
+
+def test_leaf_slice_eye_and_input_views():
+    I = CM.eye(7)
+    np.testing.assert_array_equal(leaf_slice(I, 2, 6, 0, 5),
+                                  np.eye(7)[2:6, 0:5])
+    a = np.arange(12.0).reshape(3, 4)
+    v = leaf_slice(CM.from_array(a), 1, 3, 1, 4)
+    assert v.base is not None and np.shares_memory(v, a)  # zero-copy view
+    np.testing.assert_array_equal(v, a[1:3, 1:4])
+
+
+def test_compute_matches_eager_across_tile_sizes():
+    R = CM.rand(33, 21, seed=7)
+    expr = (R @ R.T) * 0.5 + R @ R.T
+    for tile in (4, 7, 16, 33):
+        _check(expr, tile=tile)
+
+
+# -- plan cache ---------------------------------------------------------------
+
+def _iter_expr(seed):
+    X = CM.rand(24, 24, seed=seed)
+    v = CM.rand(24, 1, seed=seed + 1)
+    return (X @ X) @ v + v
+
+
+def test_plan_cache_hits_on_same_structure():
+    eng = _engine(tile=8)
+    p1 = eng.plan(_iter_expr(0))
+    p2 = eng.plan(_iter_expr(100))        # new nodes, same structure
+    assert not p1.cache_hit and p2.cache_hit
+    assert eng.plan_cache_hits == 1 and eng.plan_cache_misses == 1
+    assert p2.schedule is p1.schedule     # reused plan artefacts
+
+
+def test_plan_cache_miss_on_different_structure():
+    eng = _engine(tile=8)
+    eng.plan(_iter_expr(0))
+    X = CM.rand(24, 24, seed=0)
+    p = eng.plan((X @ X) @ X)             # different shape structure
+    assert not p.cache_hit
+
+
+def test_plan_cache_miss_on_different_tile():
+    eng = _engine()
+    eng.plan(_iter_expr(0), tile=8)
+    p = eng.plan(_iter_expr(0), tile=12)
+    assert not p.cache_hit
+
+
+def test_plan_cache_hit_computes_new_data():
+    """The rebound plan must produce the NEW expression's values."""
+    eng = _engine(tile=8)
+    e1, e2 = _iter_expr(0), _iter_expr(42)
+    out1 = eng.run(e1, plan=eng.plan(e1))
+    p2 = eng.plan(e2)
+    assert p2.cache_hit
+    out2 = eng.run(e2, plan=p2)
+    np.testing.assert_allclose(out1, e1.eager(), rtol=1e-8, atol=1e-8)
+    np.testing.assert_allclose(out2, e2.eager(), rtol=1e-8, atol=1e-8)
+    assert not np.allclose(out1, out2)    # genuinely different data
+
+
+def test_structural_signature_ignores_input_values():
+    a = CM.from_array(np.ones((5, 5)))
+    b = CM.from_array(np.full((5, 5), 3.0))
+    assert structural_signature(a @ a) == structural_signature(b @ b)
+    c = CM.from_array(np.ones((5, 6)))
+    assert structural_signature(a @ a) != structural_signature(c @ c.T)
+
+
+# -- zero-copy runtime --------------------------------------------------------
+
+def test_refcounted_buffers_bound_peak_memory():
+    A = CM.rand(64, 64, seed=0)
+    e = A
+    for _ in range(8):
+        e = (e * 1.001 + 0.1).relu()
+    eng = _engine(1, fuse=False)          # unfused: many intermediates
+    plan = eng.plan(e, tile=16)
+    ex_free = LocalExecutor(workers=2)
+    out_free = ex_free.execute(plan)
+    ex_keep = LocalExecutor(workers=2, free_buffers=False)
+    out_keep = ex_keep.execute(plan)
+    np.testing.assert_allclose(out_free, out_keep, rtol=0, atol=0)
+    np.testing.assert_allclose(out_free, e.eager(), rtol=1e-8, atol=1e-8)
+    assert ex_free.stats["buffers_freed"] > 0
+    assert ex_free.stats["peak_buffer_bytes"] < \
+        ex_keep.stats["peak_buffer_bytes"]
+
+
+def test_workers_default_from_plan_spec():
+    eng = CMMEngine(c5_9xlarge(2), TM, tile=8)
+    plan = eng.plan(_iter_expr(0))
+    ex = LocalExecutor()
+    ex.execute(plan)
+    assert ex.stats["workers"] == 2 * eng.spec.worker_procs
+    ex2 = LocalExecutor(workers=3)
+    ex2.execute(plan)
+    assert ex2.stats["workers"] == 3

@@ -1,6 +1,9 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (ClusteredMatrix as CM, CMMEngine,
                         analytic_time_model, c5_9xlarge, simulate,
