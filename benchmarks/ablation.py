@@ -14,7 +14,7 @@ from dataclasses import dataclass
 from typing import Dict, List
 
 from repro.core import (CMMEngine, c5_9xlarge, simulate, tile_expression)
-from repro.core.heft import heft_schedule, register_fill_origin
+from repro.core.heft import heft_schedule
 
 from .cmm_suite import BENCHMARKS
 from .table3_scaling import time_model
@@ -44,8 +44,9 @@ def run(n: int = 1024, nodes: int = 8, tile_frac: float = 0.3,
                 ("no_cache", {"cache_aware": False}, {"use_cache": False}),
                 ("no_lazy", {"lazy_fill": False}, {})]:
             prog = tile_expression(build(n), tile)
-            register_fill_origin({k: origin for k in prog.leaf_nodes})
-            sched = heft_schedule(prog.graph, spec, tm, **kw)
+            sched = heft_schedule(
+                prog.graph, spec, tm,
+                fill_origin={k: origin for k in prog.leaf_nodes}, **kw)
             mks[variant] = simulate(prog.graph, sched, spec, tm,
                                     **sim_kw).makespan
         rows.append(Row(name, mks["full"], mks["no_cache"], mks["no_lazy"]))

@@ -1,0 +1,214 @@
+"""Wave-batched execution + planning fast path benchmark -> BENCH_wave.json.
+
+Three measurements:
+
+* ``exec``  — per-task (``LocalExecutor``) vs wave-batched
+  (``WaveExecutor``) wall-clock across tile sizes on the small-tile
+  elementwise+matmul workload ``((A @ B) * 1.5 + C).relu() .hadamard(C)``
+  with the matmul inner dimension equal to the tile (single-k-tile GEMMs,
+  so the tiled reduction order matches the oracle's and results must be
+  BIT-IDENTICAL to both the per-task executor and ``eager()``);
+* ``plan_scaling`` — planning wall-clock with the fast path
+  (memoized costs + gap timelines + parked-transfer simulation) on vs off,
+  over growing task graphs (the >= 20k-task point is the acceptance gate);
+* ``strategy`` — the calibrated time model's per-plan executor choice
+  (per-task simulated makespan vs predicted wave makespan) against which
+  strategy actually won.
+
+Exit status is non-zero on any oracle mismatch — wired into CI as a
+perf-path smoke gate (``--smoke``).
+
+    PYTHONPATH=src python benchmarks/wave_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CMMEngine, ClusteredMatrix as CM, analytic_time_model
+from repro.core.machine import c5_9xlarge, local_spec
+from repro.core.profiler import calibrate_batch_dispatch, calibrate_dispatch
+from repro.exec.batched import WaveExecutor
+from repro.exec.local import LocalExecutor
+
+
+def build_smalltile(n: int, inner: int, seed: int = 0) -> CM:
+    """Elementwise+matmul workload whose GEMM k-chain fits ONE tile:
+    per-tile results are bit-identical to the eager oracle."""
+    A = CM.rand(n, inner, seed=seed, name="A")
+    B = CM.rand(inner, n, seed=seed + 1, name="B")
+    C = CM.rand(n, n, seed=seed + 2, name="C")
+    return ((A @ B) * 1.5 + C).relu().hadamard(C)
+
+
+def build_square(n: int, seed: int = 0) -> CM:
+    A = CM.rand(n, n, seed=seed)
+    B = CM.rand(n, n, seed=seed + 1)
+    return (A @ B).relu() * 2.0 + CM.rand(n, n, seed=seed + 2)
+
+
+def _best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_exec(n: int, tile: int, reps: int, tm) -> dict:
+    expr = build_smalltile(n, tile)
+    eng = CMMEngine(local_spec(1), tm, plan_cache=False)
+    plan = eng.plan(expr, tile=tile)
+
+    ex_local = LocalExecutor()
+    ex_wave = WaveExecutor()
+    out = {"local": None, "wave": None}
+
+    def run_local():
+        out["local"] = ex_local.execute(plan)
+
+    def run_wave():
+        out["wave"] = ex_wave.execute(plan)
+
+    t_local = _best(run_local, reps)
+    t_wave = _best(run_wave, reps)
+
+    ref = expr.eager()
+    bit_vs_per_task = bool(np.array_equal(out["local"], out["wave"]))
+    bit_vs_eager = bool(np.array_equal(out["wave"], ref))
+    err = float(np.abs(out["wave"] - ref).max())
+
+    return {
+        "n": n, "tile": tile,
+        "tasks": len(plan.program.graph),
+        "waves": ex_wave.stats["waves"],
+        "batched_calls": ex_wave.stats["batched_calls"],
+        "zero_copy_gathers": ex_wave.stats["zero_copy_gathers"],
+        "copied_gathers": ex_wave.stats["copied_gathers"],
+        "per_task_seconds": round(t_local, 6),
+        "batched_seconds": round(t_wave, 6),
+        "speedup": round(t_local / max(t_wave, 1e-12), 3),
+        "peak_buffer_bytes_per_task": ex_local.stats["peak_buffer_bytes"],
+        "peak_buffer_bytes_batched": ex_wave.stats["peak_buffer_bytes"],
+        "bit_identical_vs_per_task": bit_vs_per_task,
+        "bit_identical_vs_eager": bit_vs_eager,
+        "max_abs_err_vs_eager": err,
+        "predicted_per_task_s": round(plan.sim.makespan, 6),
+        "predicted_batched_s": round(plan.batched_makespan, 6),
+        "chosen_executor": plan.best_executor,
+    }
+
+
+def bench_plan_scaling(sizes, tm) -> list:
+    rows = []
+    for (n, tile) in sizes:
+        expr = build_square(n)
+        spec = c5_9xlarge(4)
+        eng_fast = CMMEngine(spec, tm, plan_cache=False, fast_planning=True)
+        eng_slow = CMMEngine(spec, tm, plan_cache=False, fast_planning=False)
+        t0 = time.perf_counter()
+        plan_fast = eng_fast.plan(expr, tile=tile)
+        t_fast = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        plan_slow = eng_slow.plan(expr, tile=tile)
+        t_slow = time.perf_counter() - t0
+        same = plan_fast.schedule.makespan == plan_slow.schedule.makespan \
+            and plan_fast.sim.makespan == plan_slow.sim.makespan
+        rows.append({
+            "n": n, "tile": tile,
+            "tasks": len(plan_fast.program.graph),
+            "fast_seconds": round(t_fast, 3),
+            "slow_seconds": round(t_slow, 3),
+            "speedup": round(t_slow / max(t_fast, 1e-12), 2),
+            "identical_schedule": bool(same),
+        })
+        print(f"[plan] n={n} tile={tile} tasks={rows[-1]['tasks']} "
+              f"fast={t_fast:.2f}s slow={t_slow:.2f}s "
+              f"({rows[-1]['speedup']}x, identical={same})")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI sanity")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_wave.json")
+    args = ap.parse_args(argv)
+
+    reps = args.reps or (1 if args.smoke else 3)
+    if args.smoke:
+        exec_cases = [(256, 16), (256, 32)]
+        plan_sizes = [(192, 16), (256, 16)]
+    else:
+        exec_cases = [(1024, 16), (1024, 32), (1024, 64)]
+        plan_sizes = [(512, 32), (896, 32)]   # ~6k and ~27k tasks
+
+    # calibrated dispatch terms: what the strategy selector actually weighs
+    tm = analytic_time_model()
+    calibrate_dispatch(tm)
+    calibrate_batch_dispatch(tm)
+
+    result = {
+        "bench": "wave",
+        "config": {"smoke": args.smoke, "reps": reps,
+                   "cpu_count": os.cpu_count(),
+                   "dispatch_overhead_s": tm.dispatch_overhead,
+                   "batch_dispatch_overhead_s": tm.batch_dispatch_overhead},
+        "exec": [],
+        "plan_scaling": [],
+    }
+
+    ok = True
+    for (n, tile) in exec_cases:
+        case = bench_exec(n, tile, reps, tm)
+        result["exec"].append(case)
+        print(f"[exec] n={n} tile={tile} tasks={case['tasks']} "
+              f"per-task={case['per_task_seconds']:.3f}s "
+              f"batched={case['batched_seconds']:.3f}s "
+              f"({case['speedup']}x)  "
+              f"bit-identical: per-task={case['bit_identical_vs_per_task']} "
+              f"eager={case['bit_identical_vs_eager']}  "
+              f"chosen={case['chosen_executor']}")
+        if not case["bit_identical_vs_per_task"]:
+            print(f"[exec] ORACLE MISMATCH vs per-task executor at "
+                  f"tile={tile}", file=sys.stderr)
+            ok = False
+        if not case["bit_identical_vs_eager"]:
+            print(f"[exec] ORACLE MISMATCH vs eager at tile={tile}",
+                  file=sys.stderr)
+            ok = False
+
+    result["plan_scaling"] = bench_plan_scaling(plan_sizes, tm)
+    for row in result["plan_scaling"]:
+        if not row["identical_schedule"]:
+            print("[plan] fast/slow schedule divergence at "
+                  f"n={row['n']}", file=sys.stderr)
+            ok = False
+
+    # headline numbers
+    best_exec = max(result["exec"], key=lambda c: c["speedup"])
+    big_plan = max(result["plan_scaling"], key=lambda r: r["tasks"])
+    result["headline"] = {
+        "best_exec_speedup": best_exec["speedup"],
+        "best_exec_tile": best_exec["tile"],
+        "plan_tasks": big_plan["tasks"],
+        "plan_speedup": big_plan["speedup"],
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}: exec {best_exec['speedup']}x @ tile "
+          f"{best_exec['tile']}, plan {big_plan['speedup']}x @ "
+          f"{big_plan['tasks']} tasks")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,7 +3,8 @@ from .lazy import ClusteredMatrix, Op, eager_eval, topo_order  # noqa: F401
 from .graph import Task, TaskGraph, TaskKind, TileRef          # noqa: F401
 from .tiling import tile_expression, TiledProgram              # noqa: F401
 from .machine import ClusterSpec, c5_9xlarge, tpu_v5e_pod      # noqa: F401
-from .timemodel import TimeModel, PolyModel, analytic_time_model  # noqa: F401
+from .timemodel import (TimeModel, PolyModel, CostCache,       # noqa: F401
+                        analytic_time_model)
 from .profiler import profile_machine                          # noqa: F401
 from .cache import NodeCache                                   # noqa: F401
 from .heft import heft_schedule, Schedule                      # noqa: F401

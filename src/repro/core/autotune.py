@@ -43,10 +43,17 @@ def tile_candidates(dim: int, granularity: int = 10) -> List[int]:
 
 
 def tune_tile(engine, root, candidates: Sequence[int] = None) -> TuneResult:
-    """Tile-size selection by simulated makespan (the §3.3 loop)."""
+    """Tile-size selection by simulated makespan (the §3.3 loop).
+
+    Each candidate is costed at its best predicted *strategy* (per-task
+    HEFT simulation vs wave-batched execution), so the tuner can trade
+    smaller tiles against batched dispatch — the paper's simulation-driven
+    selection extended over executor strategy.
+    """
     from .lazy import topo_order
     if candidates is None:
         dim = max(max(n.shape) for n in topo_order(root))
         candidates = tile_candidates(dim)
-    return argmin_search(candidates,
-                         lambda t: engine.plan(root, tile=t).predicted_makespan)
+    return argmin_search(
+        candidates,
+        lambda t: engine.plan(root, tile=t).best_predicted_makespan)

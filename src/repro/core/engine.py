@@ -29,12 +29,12 @@ import numpy as np
 from .fusion import (FusionReport, leaves_in_order, optimize,
                      structural_signature)
 from .graph import TaskGraph
-from .heft import Schedule, heft_schedule, register_fill_origin
+from .heft import DirectCost, Schedule, heft_schedule
 from .lazy import ClusteredMatrix, Op, topo_order
 from .machine import ClusterSpec, c5_9xlarge
 from .simulator import SimResult, simulate
 from .tiling import TiledProgram, normalize_tile, tile_expression
-from .timemodel import TimeModel, analytic_time_model
+from .timemodel import CostCache, TimeModel, analytic_time_model
 
 
 @dataclass
@@ -47,10 +47,31 @@ class Plan:
     spec: Optional[ClusterSpec] = None
     fusion: Optional[FusionReport] = None
     cache_hit: bool = False
+    #: dependency levels of the task graph (wave-batched execution order)
+    waves: Optional[list] = None
+    #: predicted wall-clock of the wave-batched executor strategy
+    batched_makespan: Optional[float] = None
 
     @property
     def predicted_makespan(self) -> float:
+        """Per-task (HEFT-simulated) makespan — the paper's §4.2 number."""
         return self.sim.makespan
+
+    @property
+    def best_predicted_makespan(self) -> float:
+        """Cheapest predicted strategy: per-task simulation vs wave-batched
+        execution (the simulation-driven selection extended to executor
+        strategy)."""
+        if self.batched_makespan is None:
+            return self.sim.makespan
+        return min(self.sim.makespan, self.batched_makespan)
+
+    @property
+    def best_executor(self) -> str:
+        if self.batched_makespan is not None and \
+                self.batched_makespan < self.sim.makespan:
+            return "batched"
+        return "local"
 
 
 class CMMEngine:
@@ -61,13 +82,18 @@ class CMMEngine:
                  tile: Optional[int] = None,
                  cache_aware: bool = True,
                  fuse: bool = True,
-                 plan_cache: bool = True):
+                 plan_cache: bool = True,
+                 fast_planning: bool = True):
         self.spec = spec or c5_9xlarge(1)
         self.timemodel = timemodel or analytic_time_model()
         self.tile = tile
         self.cache_aware = cache_aware
         self.fuse = fuse
         self.plan_cache = plan_cache
+        #: memoized-cost + gap-timeline HEFT (identical schedules; see
+        #: ``heft.heft_schedule(fast=...)``).  ``False`` restores the
+        #: pre-fast-path planner for benchmarking.
+        self.fast_planning = fast_planning
         #: structural signature + tile -> (Plan, leaf uid order)
         self._plans: Dict[tuple, Plan] = {}
         self.plan_cache_hits = 0
@@ -90,10 +116,12 @@ class CMMEngine:
         return out
 
     def plan(self, root: ClusteredMatrix, tile=None,
-             fuse: Optional[bool] = None) -> Plan:
+             fuse: Optional[bool] = None,
+             fast: Optional[bool] = None) -> Plan:
         t0 = time.perf_counter()
         tile = normalize_tile(tile or self.tile or self._default_tile(root))
         fuse = self.fuse if fuse is None else fuse
+        fast = self.fast_planning if fast is None else fast
         report = None
         if fuse:
             # transposed-operand tile indexing needs a square tile on
@@ -110,16 +138,29 @@ class CMMEngine:
                 prog = hit.program.rebound(leaves_in_order(root))
                 return Plan(prog, hit.schedule, hit.sim, hit.tile,
                             time.perf_counter() - t0, spec=self.spec,
-                            fusion=report, cache_hit=True)
+                            fusion=report, cache_hit=True, waves=hit.waves,
+                            batched_makespan=hit.batched_makespan)
             self.plan_cache_misses += 1
 
         prog = tile_expression(root, tile)
-        register_fill_origin(self._fill_origins(root))
+        # one cost object shared by scheduling, simulation and wave costing:
+        # memoized on the fast path, direct (naive-baseline) otherwise
+        cost = CostCache(self.timemodel, self.spec) if fast \
+            else DirectCost(self.timemodel, self.spec)
         sched = heft_schedule(prog.graph, self.spec, self.timemodel,
-                              cache_aware=self.cache_aware)
-        sim = simulate(prog.graph, sched, self.spec, self.timemodel)
+                              cache_aware=self.cache_aware,
+                              fill_origin=self._fill_origins(root),
+                              fast=fast, cost=cost)
+        sim = simulate(prog.graph, sched, self.spec, self.timemodel,
+                       cost=cost)
+        from ..exec.batched import build_waves, predict_wave_makespan
+        waves = build_waves(prog.graph)
+        batched = predict_wave_makespan(prog.graph, self.spec,
+                                        self.timemodel, waves=waves,
+                                        dtypes=prog.dtypes, cost=cost)
         plan = Plan(prog, sched, sim, tile, time.perf_counter() - t0,
-                    spec=self.spec, fusion=report)
+                    spec=self.spec, fusion=report, waves=waves,
+                    batched_makespan=batched)
         if key is not None:
             if len(self._plans) >= 128:      # bound cache growth (FIFO)
                 self._plans.pop(next(iter(self._plans)))
@@ -141,7 +182,8 @@ class CMMEngine:
         p = prog.rebound(stripped)
         p.root = None
         return Plan(p, plan.schedule, plan.sim, plan.tile, plan.plan_seconds,
-                    spec=plan.spec)
+                    spec=plan.spec, waves=plan.waves,
+                    batched_makespan=plan.batched_makespan)
 
     def _default_tile(self, root: ClusteredMatrix) -> int:
         # paper finding: tile ~ n/2 is best for n=10k on 8 nodes (§3.3);
@@ -151,10 +193,11 @@ class CMMEngine:
 
     def autotune_tile(self, root: ClusteredMatrix,
                       candidates: Sequence[int]) -> Tuple[int, Dict[int, float]]:
-        """§3.3: pick the tile size with the best *simulated* makespan."""
+        """§3.3: pick the tile size with the best *simulated* makespan,
+        costing each candidate at its cheapest executor strategy."""
         scores: Dict[int, float] = {}
         for c in candidates:
-            scores[c] = self.plan(root, tile=c).predicted_makespan
+            scores[c] = self.plan(root, tile=c).best_predicted_makespan
         best = min(scores, key=lambda k: (scores[k], k))
         return best, scores
 
@@ -162,21 +205,43 @@ class CMMEngine:
     def run(self, root: ClusteredMatrix, tile=None, executor: str = "local",
             validate: bool = False, plan: Optional[Plan] = None,
             **exec_kw) -> np.ndarray:
+        """Execute through a backend:
+
+        * ``"local"``          — per-task threaded executor;
+        * ``"kernel"``         — per-task with Pallas addmul tiles;
+        * ``"batched"``        — wave-batched stacked-kernel executor;
+        * ``"batched-pallas"`` — wave-batched, ADDMUL groups through
+          ``jax.vmap`` over the Pallas blocked GEMM;
+        * ``"auto"``           — simulation-driven choice between the
+          per-task and wave-batched strategies for this plan.
+        """
         plan = plan or self.plan(root, tile=tile)
+        if executor == "auto":
+            executor = self.choose_executor(plan)
         if executor == "local":
             from ..exec.local import LocalExecutor
             ex = LocalExecutor(**exec_kw)
         elif executor == "kernel":
             from ..exec.local import LocalExecutor
             ex = LocalExecutor(use_pallas=True, **exec_kw)
+        elif executor in ("batched", "batched-pallas"):
+            from ..exec.batched import WaveExecutor
+            backend = "pallas" if executor == "batched-pallas" else "numpy"
+            ex = WaveExecutor(backend=backend, **exec_kw)
         else:
             raise ValueError(f"unknown executor {executor!r}")
         out = ex.execute(plan)
         self.last_exec_stats = dict(ex.stats)
+        self.last_exec_stats["executor"] = executor
         if validate:
             ref = root.eager()
             np.testing.assert_allclose(out, ref, rtol=1e-8, atol=1e-8)
         return out
+
+    def choose_executor(self, plan: Plan) -> str:
+        """Per-plan executor strategy from predicted makespans (§3.3's
+        simulation-driven selection, extended to execution strategy)."""
+        return plan.best_executor
 
     def theoretical_speedup(self, root: ClusteredMatrix, tile=None,
                             n_nodes: Optional[int] = None) -> float:

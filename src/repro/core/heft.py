@@ -21,17 +21,26 @@ CMM modifications implemented here:
   phase visible in Fig. 3); generated data (RANDOM/ZEROS/EYE) fills locally
   on whichever node the scheduler picks (§3.3 optimisation).
 * ``calloc`` is free-placed and cheap (async in the engine; §3.3).
+
+Planning fast path (default, ``fast=True``): task compute times are
+memoized per unique ``(kind, operand-dims, payload-class, node)`` signature
+(a tiled program has a handful of tile shapes but 10k+ tasks), the upward
+rank is computed over those deduplicated costs, and each worker-slot
+timeline stores its *free gaps* instead of busy intervals so the insertion
+policy stops scanning O(placed tasks) per query.  Both representations are
+exact — ``fast=False`` (the pre-optimization baseline, kept for plan-time
+benchmarking) produces bit-identical schedules.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 from .cache import NodeCache
 from .graph import Task, TaskGraph, TaskKind
 from .machine import ClusterSpec
-from .timemodel import TimeModel
+from .timemodel import CostCache, TimeModel
 
 
 @dataclass
@@ -90,28 +99,68 @@ def _avg_comm(nbytes: int, spec: ClusterSpec) -> float:
     return frac * spec.comm_time(nbytes, 0, 1 if spec.n_nodes > 1 else 0)
 
 
-def upward_rank(g: TaskGraph, spec: ClusterSpec,
-                tm: TimeModel) -> Dict[int, float]:
+class DirectCost:
+    """Unmemoized cost lookups — the pre-fast-path baseline semantics.
+    Same interface as :class:`~repro.core.timemodel.CostCache`."""
+
+    __slots__ = ("tm", "spec")
+
+    def __init__(self, tm: TimeModel, spec: ClusterSpec):
+        self.tm = tm
+        self.spec = spec
+
+    def time(self, task: Task, node: int = 0) -> float:
+        return self.tm.compute_time(task, self.spec, node)
+
+    def kernel(self, task: Task, node: int = 0) -> float:
+        return self.tm.kernel_time(task, self.spec, node)
+
+    def avg(self, task: Task) -> float:
+        costs = [self.time(task, n) for n in range(self.spec.n_nodes)]
+        return sum(costs) / len(costs)
+
+
+def upward_rank(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
+                cost=None) -> Dict[int, float]:
+    """Upward ranks under ``tm``.
+
+    ``cost`` (a :class:`~repro.core.timemodel.CostCache` or ``DirectCost``)
+    supplies ``avg(task)``; the default memoizes per unique task signature,
+    which turns the O(V x nodes) polynomial evaluations of the naive loop
+    into O(unique tile shapes x nodes) — the fast-path win for big graphs.
+    Ranks are bit-identical either way.
+    """
+    cost = cost if cost is not None else CostCache(tm, spec)
     rank: Dict[int, float] = {}
     w: Dict[int, float] = {}
     for t in g:
         if t.kind is TaskKind.CALLOC:
             w[t.tid] = 1e-6  # async, near-free (§3.3)
         else:
-            costs = [tm.compute_time(t, spec, n) for n in range(spec.n_nodes)]
-            w[t.tid] = sum(costs) / len(costs)
+            w[t.tid] = cost.avg(t)
+    comm_memo: Dict[int, float] = {}
     for t in reversed(g.topo()):
         best = 0.0
         for s in t.succs:
             st = g.tasks[s]
-            c = _avg_comm(edge_bytes(g, t, st), spec)
-            best = max(best, c + rank[s])
+            nb = edge_bytes(g, t, st)
+            c = comm_memo.get(nb)
+            if c is None:
+                c = _avg_comm(nb, spec)
+                comm_memo[nb] = c
+            cr = c + rank[s]
+            if cr > best:
+                best = cr
         rank[t.tid] = w[t.tid] + best
     return rank
 
 
 class _SlotTimeline:
-    """Busy intervals of one worker-process slot, for insertion policy."""
+    """Busy intervals of one worker-process slot, for insertion policy.
+
+    Legacy representation (``fast=False``): a sorted busy-interval list that
+    ``earliest`` scans front-to-back — O(placed tasks) per query.
+    """
 
     __slots__ = ("iv",)
 
@@ -131,10 +180,68 @@ class _SlotTimeline:
         bisect.insort(self.iv, (start, start + dur))
 
 
+class _GapTimeline:
+    """One worker slot stored as its FREE gaps plus the free tail.
+
+    Exact complement of ``_SlotTimeline``: ``earliest``/``insert`` return
+    bit-identical results, but queries bisect into the (short, sorted) gap
+    list instead of scanning every placed interval, and tail appends are
+    O(1).  This is what lets HEFT placement scale to 100k-task graphs.
+    """
+
+    __slots__ = ("gs", "ge", "tail")
+
+    def __init__(self):
+        #: parallel sorted arrays: free gap i is [gs[i], ge[i]), all < tail
+        self.gs: List[float] = []
+        self.ge: List[float] = []
+        #: everything from here on is free
+        self.tail = 0.0
+
+    def earliest(self, ready: float, dur: float) -> float:
+        import bisect
+        ge = self.ge
+        i = bisect.bisect_right(ge, ready)   # first gap ending after `ready`
+        gs = self.gs
+        for i in range(i, len(gs)):
+            t = gs[i] if gs[i] >= ready else ready
+            if t + dur <= ge[i]:
+                return t
+        return self.tail if self.tail >= ready else ready
+
+    def insert(self, start: float, dur: float):
+        import bisect
+        end = start + dur
+        if start >= self.tail:
+            if start > self.tail:
+                self.gs.append(self.tail)
+                self.ge.append(start)
+            self.tail = end
+            return
+        i = bisect.bisect_right(self.gs, start) - 1
+        if i < 0 or end > self.ge[i]:
+            raise ValueError(
+                f"insert [{start}, {end}) overlaps busy time")
+        gs, ge = self.gs[i], self.ge[i]
+        if gs < start and end < ge:          # split the gap in two
+            self.gs[i:i + 1] = [gs, end]
+            self.ge[i:i + 1] = [start, ge]
+        elif gs < start:                     # trim the gap's tail
+            self.ge[i] = start
+        elif end < ge:                       # trim the gap's head
+            self.gs[i] = end
+        else:                                # exact fill
+            del self.gs[i]
+            del self.ge[i]
+
+
 def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
                   cache: Optional[NodeCache] = None,
                   cache_aware: bool = True,
-                  lazy_fill: bool = True) -> Schedule:
+                  lazy_fill: bool = True,
+                  fill_origin: Optional[Mapping[int, str]] = None,
+                  fast: bool = True,
+                  cost: Optional[CostCache] = None) -> Schedule:
     """Schedule ``g`` on ``spec`` under time model ``tm``.
 
     ``cache_aware=False`` disables the node-level-cache modification (the
@@ -148,20 +255,34 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     respective nodes ... schedule the data fill only right before the first
     tasks are executed").  Later consumers on other nodes pay the normal
     (cache-aware) transfer.
+
+    ``fill_origin`` maps leaf expression-node uid -> ``"master"`` |
+    ``"local"`` (INPUT leaves live on the master; generated leaves fill in
+    place).  Passing it explicitly keeps concurrent planners isolated; when
+    omitted, the deprecated module-level registry set by
+    ``register_fill_origin`` is consulted for backward compatibility.
+
+    ``fast=False`` selects the unmemoized cost path and the busy-interval
+    timelines — same schedule, pre-fast-path planning time (kept as the
+    benchmarking baseline).  ``cost`` lets the caller share one
+    :class:`CostCache` across scheduling and simulation.
     """
-    rank = upward_rank(g, spec, tm)
+    origin = _FILL_ORIGIN if fill_origin is None else fill_origin
+    if cost is None:
+        cost = CostCache(tm, spec) if fast else DirectCost(tm, spec)
+    rank = upward_rank(g, spec, tm, cost=cost)
     cache = cache if cache is not None else NodeCache(spec.n_nodes)
 
     def is_lazy(t: Task) -> bool:
         if not lazy_fill or t.kind is not TaskKind.FILL:
             return False
-        origin = _FILL_ORIGIN.get(t.payload)
-        return origin != "master"   # master-resident INPUT data stays pinned
+        return origin.get(t.payload) != "master"   # master INPUT stays pinned
 
     order_all = sorted(g.tasks, key=lambda tid: (-rank[tid], tid))
     order = [tid for tid in order_all if not is_lazy(g.tasks[tid])]
 
-    slots = {n: [_SlotTimeline() for _ in range(spec.worker_procs)]
+    timeline_cls = _GapTimeline if fast else _SlotTimeline
+    slots = {n: [timeline_cls() for _ in range(spec.worker_procs)]
              for n in range(spec.n_nodes)}
     placements: Dict[int, Placement] = {}
     comms: List[CommEvent] = []
@@ -170,15 +291,23 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
         if t.kind is TaskKind.TAKECOPY:
             return (spec.master,)
         if t.kind is TaskKind.FILL and isinstance(t.payload, int):
-            origin = _FILL_ORIGIN.get(t.payload)
-            if origin == "master":
+            if origin.get(t.payload) == "master":
                 return (spec.master,)
         return range(spec.n_nodes)
+
+    #: node -> {fill duration: estimated EFT}; a fill EFT estimate only
+    #: changes when the node's timelines change, and a wave of consumers
+    #: probes the same few fill durations over and over.  Part of the fast
+    #: path (disabled with it so ``fast=False`` stays the naive baseline).
+    fill_est: Optional[Dict[int, Dict[float, float]]] = \
+        {n: {} for n in range(spec.n_nodes)} if fast else None
 
     def commit(tid: int, node: int, si: int, st: float, eft: float,
                transfers) -> None:
         t = g.tasks[tid]
         slots[node][si].insert(st, eft - st)
+        if fill_est is not None:
+            fill_est[node].clear()
         placements[tid] = Placement(node, si, st, eft)
         for (p, src, nbytes, hit) in transfers:
             key = (p, g.tasks[p].out.tensor)
@@ -195,7 +324,7 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     def place_fill_on(fid: int, node: int) -> float:
         """Place a lazy fill on `node` at its earliest slot; returns EFT."""
         ft = g.tasks[fid]
-        dur = tm.compute_time(ft, spec, node)
+        dur = cost.time(ft, node)
         best = None
         for si, sl in enumerate(slots[node]):
             st = sl.earliest(0.0, dur)
@@ -207,8 +336,14 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
 
     def fill_eft_estimate(fid: int, node: int) -> float:
         ft = g.tasks[fid]
-        dur = tm.compute_time(ft, spec, node)
-        return min(sl.earliest(0.0, dur) + dur for sl in slots[node])
+        dur = cost.time(ft, node)
+        if fill_est is None:
+            return min(sl.earliest(0.0, dur) + dur for sl in slots[node])
+        est = fill_est[node].get(dur)
+        if est is None:
+            est = min(sl.earliest(0.0, dur) + dur for sl in slots[node])
+            fill_est[node][dur] = est
+        return est
 
     def eval_on_node(t: Task, node: int, dur: float):
         """(eft, slot, start, transfers, lazy_fills, regen_fills)."""
@@ -260,7 +395,7 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
         best = None  # (eft, node, dur)
         for node in allowed_nodes(t):
             dur = (1e-6 if t.kind is TaskKind.CALLOC
-                   else tm.compute_time(t, spec, node))
+                   else cost.time(t, node))
             eft, *_ = eval_on_node(t, node, dur)
             if best is None or eft < best[0] - 1e-15 or \
                     (abs(eft - best[0]) <= 1e-15 and node < best[1]):
@@ -294,11 +429,18 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
                     cache.hits, cache.misses)
 
 
-#: expr-node uid -> "master" | "local"; registered by the engine before
-#: scheduling (INPUT leaves are master-resident, generated leaves local).
+#: DEPRECATED mutable fallback for callers that predate the explicit
+#: ``fill_origin`` parameter.  Mutated-per-plan module state breaks
+#: concurrent planning — pass ``fill_origin=`` to ``heft_schedule`` instead.
 _FILL_ORIGIN: Dict[int, str] = {}
 
 
-def register_fill_origin(mapping: Dict[int, str]):
+def register_fill_origin(mapping: Mapping[int, str]):
+    """Deprecated: set the module-level fill-origin fallback.
+
+    Kept for backward compatibility only; prefer
+    ``heft_schedule(..., fill_origin=mapping)`` which carries the mapping
+    per call and is safe under concurrent planners.
+    """
     _FILL_ORIGIN.clear()
     _FILL_ORIGIN.update(mapping)

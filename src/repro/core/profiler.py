@@ -93,6 +93,7 @@ def profile_machine(sizes: Sequence[int] = (64, 128, 256, 384, 512),
     tm.models["fill"] = PolyModel.fit("ewise", dims_f, times_f)
     calibrate_contention(tm)
     calibrate_dispatch(tm)
+    calibrate_batch_dispatch(tm)
     return tm
 
 
@@ -149,6 +150,31 @@ def calibrate_dispatch(tm: TimeModel, n: int = 256, tile: int = 64,
     over = max(0.0, (wall - plan.predicted_makespan) * workers / n_tasks)
     tm.dispatch_overhead = min(over, 5e-3)
     return tm.dispatch_overhead
+
+
+def calibrate_batch_dispatch(tm: TimeModel, tile: int = 64,
+                             reps: int = 3) -> float:
+    """Fit the per-*batched-launch* overhead (wave executor cost model).
+
+    One stacked kernel call pays a fixed Python/NumPy entry cost that is
+    independent of how many tiles are stacked.  Time stacked launches
+    across group sizes and take the OLS intercept — that intercept is what
+    a wave group costs on top of its arithmetic, and what the strategy
+    selector weighs against ``dispatch_overhead`` x tasks."""
+    xs, ys = [], []
+    rng = np.random.default_rng(0)
+    for g in (1, 2, 8, 32):
+        a = rng.standard_normal((g, tile, tile))
+        b = rng.standard_normal((g, tile, tile))
+
+        def run(a=a, b=b):
+            np.matmul(a, b)
+
+        ys.append(_time_call(run, reps))
+        xs.append([1.0, float(g)])
+    coef, *_ = np.linalg.lstsq(np.asarray(xs), np.asarray(ys), rcond=None)
+    tm.batch_dispatch_overhead = float(min(max(coef[0], 1e-6), 5e-3))
+    return tm.batch_dispatch_overhead
 
 
 def profile_comm_synthetic(spec, sizes_bytes: Sequence[int] = None,

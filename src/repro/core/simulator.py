@@ -28,7 +28,7 @@ from .cache import NodeCache
 from .graph import Task, TaskGraph, TaskKind
 from .heft import Schedule, edge_bytes
 from .machine import ClusterSpec
-from .timemodel import TimeModel
+from .timemodel import CostCache, TimeModel
 
 
 @dataclass
@@ -108,11 +108,19 @@ class SimResult:
 
 
 def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
-             zero_comm: bool = False, use_cache: bool = True) -> SimResult:
+             zero_comm: bool = False, use_cache: bool = True,
+             cost: Optional[CostCache] = None) -> SimResult:
     """``use_cache=False`` disables the node-level cache in the MACHINE
-    (every consumer transfer is re-sent) — the §3.5 mechanism ablation."""
+    (every consumer transfer is re-sent) — the §3.5 mechanism ablation.
+
+    ``cost`` optionally shares a memoized :class:`CostCache` (e.g. the one
+    the scheduler already filled) so task durations are not re-derived from
+    the interpolation polynomials task-by-task on large graphs."""
     if zero_comm:
         spec = spec.zero_comm()
+        cost = None          # cached durations were built for the real spec
+    if cost is None:
+        cost = CostCache(tm, spec)
     prio = {tid: i for i, tid in enumerate(sched.order)}
     node_of = {tid: p.node for tid, p in sched.placements.items()}
 
@@ -127,7 +135,14 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
     waiting_data: Dict[Tuple[Tuple[int, int], int], List[int]] = defaultdict(list)
     data_left = {t.tid: 0 for t in g}
     ready: Dict[int, List[Tuple[int, int]]] = {n: [] for n in range(spec.n_nodes)}
-    pending_xfers: List[Tuple[int, Transfer]] = []  # (priority, transfer)
+    # startable transfers as a priority heap; a transfer blocked on an
+    # exhausted comm endpoint is PARKED on that node and only returns to the
+    # heap when the node frees a slot — so dispatch never rescans the whole
+    # pending set (the naive rescan is O(events x pending) on big graphs)
+    pending_xfers: List[Tuple[int, int, Transfer]] = []  # (prio, seq, tr)
+    parked_xfers: Dict[int, List[Tuple[int, int, Transfer]]] = \
+        defaultdict(list)
+    xseq = itertools.count()
     in_flight: Set[Tuple[Tuple[int, int], int]] = set()
 
     events: List[Tuple[float, int, str, object]] = []
@@ -164,28 +179,48 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
                     if (key, dst) not in in_flight:
                         cache.misses += 1
                         in_flight.add((key, dst))
-                        pending_xfers.append(
-                            (prio[s], Transfer(key, src, dst, nbytes)))
+                        heapq.heappush(
+                            pending_xfers,
+                            (prio[s], next(xseq),
+                             Transfer(key, src, dst, nbytes)))
             deps_left[s] -= 1
             if deps_left[s] == 0 and data_left[s] == 0:
                 task_ready(s)
 
     def dispatch(now: float):
-        # start feasible transfers in priority order
-        pending_xfers.sort(key=lambda x: x[0])
-        started = True
-        while started:
-            started = False
-            for i, (p, tr) in enumerate(pending_xfers):
-                if free_comm[tr.src] > 0 and free_comm[tr.dst] > 0:
-                    free_comm[tr.src] -= 1
-                    free_comm[tr.dst] -= 1
-                    tr.start = now
-                    tr.end = now + spec.comm_time(tr.nbytes, tr.src, tr.dst)
-                    push(tr.end, "xfer_done", tr)
-                    pending_xfers.pop(i)
-                    started = True
-                    break
+        # start feasible transfers in priority order.  Starting a transfer
+        # only CONSUMES comm slots, so a blocked transfer stays blocked for
+        # the rest of this dispatch: it parks on its exhausted endpoint and
+        # is only reconsidered once that node frees a slot.  Candidates are
+        # k-way-merged in global priority order from the fresh-transfer heap
+        # and the parked heaps of nodes that currently have free slots —
+        # exactly the feasible subset the naive full rescan would start, at
+        # O(starts + moves) instead of O(pending) per event.
+        while True:
+            best = pending_xfers[0] if pending_xfers else None
+            best_node = -1
+            for n, h in parked_xfers.items():
+                if h and free_comm[n] > 0 and \
+                        (best is None or h[0] < best):
+                    best = h[0]
+                    best_node = n
+            if best is None:
+                break
+            src_heap = pending_xfers if best_node < 0 \
+                else parked_xfers[best_node]
+            item = heapq.heappop(src_heap)
+            tr = item[2]
+            if free_comm[tr.src] <= 0:
+                heapq.heappush(parked_xfers[tr.src], item)
+                continue
+            if free_comm[tr.dst] <= 0:
+                heapq.heappush(parked_xfers[tr.dst], item)
+                continue
+            free_comm[tr.src] -= 1
+            free_comm[tr.dst] -= 1
+            tr.start = now
+            tr.end = now + spec.comm_time(tr.nbytes, tr.src, tr.dst)
+            push(tr.end, "xfer_done", tr)
         # start ready compute tasks
         for n in range(spec.n_nodes):
             while ready[n]:
@@ -203,7 +238,7 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
                 heapq.heappop(ready[n])
                 free_workers[n] -= 1
                 slot = free_slots[n].pop()
-                dur = tm.compute_time(t, spec, n)
+                dur = cost.time(t, n)
                 intervals.append(Interval(tid, t.kind.value, n, slot,
                                           now, now + dur))
                 push(now + dur, "task_done", (tid, slot))

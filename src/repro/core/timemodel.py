@@ -66,6 +66,10 @@ class PolyModel:
     coef: np.ndarray
 
     def predict(self, dims: Sequence[int]) -> float:
+        # NOTE: planning deliberately evaluates this SCALAR path (memoized
+        # per unique signature in CostCache) rather than a stacked matvec —
+        # BLAS matvec rounding differs from per-row dot in the last ulp,
+        # which would break the bit-identical fast/slow-schedule invariant.
         x = FEATURES[self.family](dims)
         return float(max(x @ self.coef, 1e-9))
 
@@ -91,34 +95,59 @@ class TimeModel:
     """Per-kind compute models + the per-pair communication model."""
 
     models: Dict[str, PolyModel] = field(default_factory=dict)
-    #: overhead multiplier for scheduling/dispatch (fitted or 1.0)
+    #: per-task scheduling/dispatch overhead, seconds (heap pop, closure,
+    #: lock round-trip per submitted task — fitted by
+    #: ``profiler.calibrate_dispatch``)
     dispatch_overhead: float = 0.0
+    #: per-*batched-kernel-launch* overhead, seconds: one stacked call
+    #: issued by the wave executor pays this ONCE per group instead of
+    #: ``dispatch_overhead`` once per task (fitted by
+    #: ``profiler.calibrate_batch_dispatch``)
+    batch_dispatch_overhead: float = 1e-4
     #: throughput scale observed under concurrent workers (profiling times
     #: one call at a time; real execution oversubscribes BLAS threads on a
     #: shared host — fitted by ``profiler.calibrate_contention``)
     contention: float = 1.0
 
-    def compute_time(self, task: Task, spec: Optional[ClusterSpec] = None,
-                     node: int = 0) -> float:
+    def _model_time(self, task: Task) -> float:
+        """Raw interpolation-model prediction for one task (no contention,
+        dispatch, or node slowdown applied)."""
         kind = task.kind
         if kind in (TaskKind.SEND, TaskKind.RECV):
             raise ValueError("comm tasks are costed by comm_time()")
         family = KIND_FAMILY[kind]
-        key = kind.value
-        model = self.models.get(key) or self.models.get(family)
+        model = self.models.get(kind.value) or self.models.get(family)
         if model is None:
             # analytic fallback: ~1 GFLOP/s effective if unprofiled
             flops = max(task.flops, int(np.prod(task.dims())))
-            t = flops / 1e9
-        else:
-            t = model.predict(task.dims())
-            if kind is TaskKind.FUSED:
-                # a fused region does N elementwise passes' arithmetic in
-                # one task (with better locality; the single-pass model
-                # per op is a conservative upper bound)
-                from .fusion import fused_op_count
-                t *= max(1, fused_op_count(task.payload))
-        t = t * self.contention + self.dispatch_overhead
+            return flops / 1e9
+        t = model.predict(task.dims())
+        if kind is TaskKind.FUSED:
+            # a fused region does N elementwise passes' arithmetic in
+            # one task (with better locality; the single-pass model
+            # per op is a conservative upper bound)
+            from .fusion import fused_op_count
+            t *= max(1, fused_op_count(task.payload))
+        return t
+
+    def kernel_time(self, task: Task, spec: Optional[ClusterSpec] = None,
+                    node: int = 0) -> float:
+        """Pure arithmetic time of ``task`` — NO per-task dispatch overhead.
+
+        This is what one slice of a batched (stacked) kernel call costs; the
+        wave executor's cost model sums it per group and adds
+        ``batch_dispatch_overhead`` once per launch.
+        """
+        t = self._model_time(task) * self.contention
+        if spec is not None:
+            t *= spec.node_slowdown(node)
+        return t
+
+    def compute_time(self, task: Task, spec: Optional[ClusterSpec] = None,
+                     node: int = 0) -> float:
+        """Per-task execution time as the per-task executor pays it:
+        arithmetic + one dispatch overhead."""
+        t = self._model_time(task) * self.contention + self.dispatch_overhead
         if spec is not None:
             t *= spec.node_slowdown(node)
         return t
@@ -131,6 +160,7 @@ class TimeModel:
     def to_json(self) -> str:
         return json.dumps({
             "dispatch_overhead": self.dispatch_overhead,
+            "batch_dispatch_overhead": self.batch_dispatch_overhead,
             "contention": self.contention,
             "models": {k: {"family": m.family, "coef": m.coef.tolist()}
                        for k, m in self.models.items()},
@@ -143,6 +173,7 @@ class TimeModel:
             models={k: PolyModel(v["family"], np.asarray(v["coef"]))
                     for k, v in d["models"].items()},
             dispatch_overhead=d.get("dispatch_overhead", 0.0),
+            batch_dispatch_overhead=d.get("batch_dispatch_overhead", 1e-4),
             contention=d.get("contention", 1.0),
         )
 
@@ -154,6 +185,72 @@ class TimeModel:
     def load(path: str) -> "TimeModel":
         with open(path) as f:
             return TimeModel.from_json(f.read())
+
+
+class CostCache:
+    """Memoized task compute times for one ``(TimeModel, ClusterSpec)`` pair.
+
+    Planning a 100k-task graph evaluates the interpolation polynomials
+    O(tasks x nodes) times, but a tiled program has only a handful of
+    distinct ``(kind, operand dims, payload class)`` signatures — one per
+    tile shape per kind.  The cache collapses the polynomial evaluations to
+    one per unique ``(signature, node)``, which is what makes the HEFT fast
+    path scale (§3.6 planning at 100k tasks).
+
+    Predictions are computed with the *scalar* ``PolyModel.predict`` so a
+    cached cost is bit-identical to the uncached path — fast and slow
+    planning produce identical schedules.
+    """
+
+    __slots__ = ("tm", "spec", "_time", "_kernel", "_avg")
+
+    def __init__(self, tm: "TimeModel", spec: Optional[ClusterSpec] = None):
+        self.tm = tm
+        self.spec = spec
+        self._time: Dict[tuple, float] = {}
+        self._kernel: Dict[tuple, float] = {}
+        self._avg: Dict[tuple, float] = {}
+
+    @staticmethod
+    def signature(task: Task) -> tuple:
+        extra = None
+        if task.kind is TaskKind.FUSED:
+            from .fusion import fused_op_count
+            extra = fused_op_count(task.payload)
+        return (task.kind, task.dims(), extra)
+
+    def time(self, task: Task, node: int = 0) -> float:
+        """Memoized ``tm.compute_time(task, spec, node)``."""
+        key = (self.signature(task), node)
+        v = self._time.get(key)
+        if v is None:
+            v = self.tm.compute_time(task, self.spec, node)
+            self._time[key] = v
+        return v
+
+    def kernel(self, task: Task, node: int = 0) -> float:
+        """Memoized ``tm.kernel_time(task, spec, node)``."""
+        key = (self.signature(task), node)
+        v = self._kernel.get(key)
+        if v is None:
+            v = self.tm.kernel_time(task, self.spec, node)
+            self._kernel[key] = v
+        return v
+
+    def avg(self, task: Task) -> float:
+        """Memoized average compute time over all nodes (upward-rank ``w``).
+
+        Reproduces the exact summation order of the unmemoized
+        ``sum(costs) / len(costs)`` loop so ranks are bit-identical.
+        """
+        sig = self.signature(task)
+        v = self._avg.get(sig)
+        if v is None:
+            n = self.spec.n_nodes if self.spec is not None else 1
+            costs = [self.time(task, i) for i in range(n)]
+            v = sum(costs) / len(costs)
+            self._avg[sig] = v
+        return v
 
 
 def analytic_time_model(gflops: float = 5.5, mem_gbs: float = 10.0,

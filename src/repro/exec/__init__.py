@@ -1,1 +1,3 @@
-from .local import LocalExecutor  # noqa: F401
+from .local import LocalExecutor                                # noqa: F401
+from .batched import (WaveExecutor, build_waves,                # noqa: F401
+                      predict_wave_makespan)

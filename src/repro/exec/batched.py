@@ -1,0 +1,411 @@
+"""Wave-batched executor: one stacked kernel call per wave group.
+
+At the tile sizes the autotuner favors, the per-task executor
+(``exec/local.py``) pays one Python dispatch — heap pop, closure, lock
+round-trip — per tile task; at 10k+ tasks that overhead dominates the BLAS
+time the plan was optimized for (the numpywren fine-grained-task wall).
+This backend removes it by *batching*:
+
+1. the scheduled task graph is partitioned into **waves** — antichains of
+   mutually independent tasks (longest-path levels, so every dependency
+   crosses waves);
+2. each wave is grouped by ``(kind, tile shape, dtype, payload class)``;
+3. each group executes as ONE stacked call — ``np.matmul`` over 3-D stacked
+   operands for ADDMUL/MATMUL, one vectorized ufunc application over a
+   stacked slab for ADD/SUB/EWMUL/SCALE/EWISE, ``fusion.eval_fused`` over
+   stacked inputs for FUSED — or, with ``backend="pallas"``, a
+   ``jax.vmap``-over-Pallas blocked GEMM (``kernels/matmul.py``) jit-cached
+   per group signature.
+
+Buffer arena: every group's output tiles live in ONE stacked slab
+``(group, tm, tn)``; each tile buffer is a zero-copy view ``slab[i]``.
+When a later group's inputs are exactly a contiguous run of a slab, the
+gather is a zero-copy slice (the common case for elementwise chains and
+the C-accumulator of addmul k-chains); otherwise tiles are stacked into a
+scratch copy.  Slabs are reference-counted like the per-task runtime: a
+slab is freed when the last reader of its last live tile finishes, so peak
+memory stays bounded by live *slabs* (wave-granular, vs tile-granular for
+the per-task executor — the throughput/peak trade-off of batching).
+
+Numerics: the NumPy backend is bit-identical to ``LocalExecutor`` — a 3-D
+``np.matmul`` issues the same BLAS GEMM per slice as the per-task ``@``,
+and NumPy ufuncs are elementwise-deterministic under stacking.  The Pallas
+backend accumulates in float32 VMEM on TPU and is validated at tolerance
+instead.
+
+``predict_wave_makespan`` is the executor-strategy leg of the paper's
+simulation-driven selection: the engine compares it against the per-task
+simulated makespan (which prices ``TimeModel.dispatch_overhead`` per task)
+and picks the cheaper strategy per plan.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.fusion import eval_fused
+from ..core.graph import Task, TaskGraph, TaskKind, TileRef, matmul_flags
+from ..core.lazy import EWISE_FNS, Op, apply_scale, leaf_slice
+from ..core.machine import ClusterSpec
+from ..core.timemodel import CostCache, TimeModel
+from ..core.tiling import assemble, tile_slices
+
+
+def build_waves(g: TaskGraph) -> List[List[int]]:
+    """Partition ``g`` into dependency levels (waves).
+
+    ``wave[t] = 1 + max(wave[p] for p in preds)`` — tasks in one wave are
+    mutually independent (any edge strictly increases the level), so a wave
+    can execute as a set of batched kernels with no intra-wave ordering.
+    Within a wave, tasks are ordered by output tile ``(tensor, i, j)`` so
+    group gathers line up with slab layout (maximising zero-copy runs).
+    """
+    level: Dict[int, int] = {}
+    for t in g.topo():
+        level[t.tid] = 1 + max((level[p] for p in t.preds), default=-1)
+    n_waves = max(level.values(), default=-1) + 1
+    waves: List[List[int]] = [[] for _ in range(n_waves)]
+    for tid, lv in level.items():
+        waves[lv].append(tid)
+
+    def order_key(tid: int):
+        t = g.tasks[tid]
+        if t.out is not None:
+            return (0, t.out.tensor, t.out.i, t.out.j, tid)
+        return (1, 0, 0, 0, tid)
+
+    for wave in waves:
+        wave.sort(key=order_key)
+    return waves
+
+
+def _group_key(t: Task, dtypes: Dict[int, object]) -> tuple:
+    """Batching signature: tasks with equal keys stack into one kernel."""
+    dt = lambda ref: str(dtypes.get(ref.tensor, np.float64))  # noqa: E731
+    k = t.kind
+    if k in (TaskKind.ADDMUL, TaskKind.MATMUL):
+        return (k, matmul_flags(t.payload), t.ins[0].shape, t.ins[1].shape,
+                t.out.shape, dt(t.ins[0]), dt(t.ins[1]), dt(t.out))
+    if k is TaskKind.CALLOC:
+        return (k, t.out.shape, dt(t.out))
+    if k is TaskKind.FILL:
+        return (k, t.out.shape, dt(t.out))
+    if k in (TaskKind.ADD, TaskKind.SUB, TaskKind.EWMUL):
+        return (k, t.out.shape, dt(t.ins[0]), dt(t.ins[1]))
+    if k in (TaskKind.SCALE, TaskKind.EWISE):
+        return (k, t.payload, t.out.shape, dt(t.ins[0]))
+    if k is TaskKind.FUSED:
+        return (k, t.payload, tuple(r.shape for r in t.ins),
+                tuple(dt(r) for r in t.ins))
+    if k is TaskKind.TRANSPOSE:
+        return (k, t.ins[0].shape, dt(t.ins[0]))
+    if k is TaskKind.TAKECOPY:
+        return (k,)
+    raise ValueError(k)  # pragma: no cover
+
+
+def group_wave(g: TaskGraph, wave: Sequence[int],
+               dtypes: Dict[int, object]) -> List[Tuple[tuple, List[Task]]]:
+    """Group one wave's tasks by batching signature (insertion-ordered)."""
+    groups: Dict[tuple, List[Task]] = {}
+    for tid in wave:
+        t = g.tasks[tid]
+        groups.setdefault(_group_key(t, dtypes), []).append(t)
+    return list(groups.items())
+
+
+class _Slab:
+    """One stacked allocation holding a wave group's output tiles."""
+
+    __slots__ = ("arr", "live", "nbytes")
+
+    def __init__(self, arr: np.ndarray, live: int):
+        self.arr = arr
+        self.live = live
+        self.nbytes = arr.nbytes
+
+
+class WaveArena:
+    """Stacked tile storage with slab-granular refcounted freeing."""
+
+    def __init__(self):
+        #: TileRef -> (slab, index within slab)
+        self._of: Dict[TileRef, Tuple[_Slab, int]] = {}
+        self.cur_bytes = 0
+        self.peak_bytes = 0
+        self.slabs_alloc = 0
+        self.slabs_freed = 0
+
+    def register(self, refs: Sequence[TileRef], arr: np.ndarray,
+                 extra_live: int = 0) -> _Slab:
+        """Adopt ``arr`` (leading axis = tiles in ``refs`` order) as a slab.
+
+        A tile ref can be produced twice — HEFT's §3.3 regeneration pass
+        clones a FILL onto another node, and both tasks share the original
+        ``out`` ref.  A ref holds exactly ONE slab slot alive at a time:
+        re-registering releases the previous hold, so duplicate producers
+        cannot strand a slab at ``live > 0`` forever.
+        """
+        slab = _Slab(arr, live=len(refs) + extra_live)
+        self.cur_bytes += slab.nbytes
+        self.peak_bytes = max(self.peak_bytes, self.cur_bytes)
+        self.slabs_alloc += 1
+        for i, r in enumerate(refs):
+            if r in self._of:
+                self.release_tile(r)
+            self._of[r] = (slab, i)
+        return slab
+
+    def contiguous_run(self, refs: Sequence[TileRef]) -> Optional[np.ndarray]:
+        """Zero-copy stacked view if ``refs`` are one ascending slab run."""
+        first = self._of.get(refs[0])
+        if first is None:
+            return None
+        slab, start = first
+        for k, r in enumerate(refs[1:], 1):
+            ent = self._of.get(r)
+            if ent is None or ent[0] is not slab or ent[1] != start + k:
+                return None
+        return slab.arr[start:start + len(refs)]
+
+    def release_tile(self, ref: TileRef) -> bool:
+        """Drop one live count of the tile's slab; True if the slab died."""
+        ent = self._of.get(ref)
+        if ent is None:
+            return False
+        slab, _ = ent
+        slab.live -= 1
+        if slab.live == 0:
+            self.cur_bytes -= slab.nbytes
+            self.slabs_freed += 1
+            slab.arr = None
+            return True
+        return False
+
+
+class WaveExecutor:
+    """Executes a planned tiled program wave-by-wave with batched kernels.
+
+    ``backend="numpy"`` (default) issues stacked BLAS/ufunc calls and is
+    bit-identical to ``LocalExecutor``; ``backend="pallas"`` routes ADDMUL
+    groups through ``jax.vmap`` over the Pallas blocked GEMM (interpret
+    mode on CPU, compiled on TPU), jit-cached per group signature.
+
+    ``free_buffers=False`` keeps every slab alive (debugging / benchmarks).
+    """
+
+    def __init__(self, backend: str = "numpy", free_buffers: bool = True):
+        if backend not in ("numpy", "pallas"):
+            raise ValueError(f"unknown wave backend {backend!r}")
+        self.backend = backend
+        self.free_buffers = free_buffers
+        self.stats: Dict[str, int] = {}
+
+    # -- gather helpers ----------------------------------------------------
+    def _gather(self, refs, buffers, arena) -> np.ndarray:
+        if len(refs) == 1:
+            self.stats["zero_copy_gathers"] += 1
+            return buffers[refs[0]][None]
+        run = arena.contiguous_run(refs)
+        if run is not None and run.shape[0] == len(refs):
+            self.stats["zero_copy_gathers"] += 1
+            return run
+        self.stats["copied_gathers"] += 1
+        return np.stack([buffers[r] for r in refs])
+
+    # -- group kernels -----------------------------------------------------
+    def _run_group(self, kind: TaskKind, tasks: List[Task], buffers, arena,
+                   leaf_nodes, dtypes, tile) -> None:
+        self.stats["batched_calls"] += 1
+        outs = [t.out for t in tasks]
+
+        if kind is TaskKind.TAKECOPY:
+            return
+
+        if kind is TaskKind.CALLOC:
+            dt = dtypes.get(tasks[0].payload, np.float64)
+            slab = np.zeros((len(tasks),) + outs[0].shape, dtype=dt)
+            arena.register(outs, slab)
+            for i, t in enumerate(tasks):
+                buffers[t.out] = slab[i]
+            return
+
+        if kind is TaskKind.FILL:
+            self._run_fill(tasks, buffers, arena, leaf_nodes, tile)
+            return
+
+        if kind in (TaskKind.ADDMUL, TaskKind.MATMUL):
+            self._run_matmul(kind, tasks, buffers, arena, dtypes)
+            return
+
+        # elementwise families: one vectorized call over stacked operands
+        ins0 = self._gather([t.ins[0] for t in tasks], buffers, arena)
+        if kind in (TaskKind.ADD, TaskKind.SUB, TaskKind.EWMUL):
+            ins1 = self._gather([t.ins[1] for t in tasks], buffers, arena)
+            ufunc = {TaskKind.ADD: np.add, TaskKind.SUB: np.subtract,
+                     TaskKind.EWMUL: np.multiply}[kind]
+            slab = ufunc(ins0, ins1)
+        elif kind is TaskKind.SCALE:
+            skind, s = tasks[0].payload
+            slab = apply_scale(skind, ins0, s)
+        elif kind is TaskKind.EWISE:
+            slab = EWISE_FNS[tasks[0].payload](ins0)
+        elif kind is TaskKind.FUSED:
+            stacks = [self._gather([t.ins[j] for t in tasks], buffers, arena)
+                      for j in range(len(tasks[0].ins))]
+            slab = eval_fused(tasks[0].payload, stacks)
+        elif kind is TaskKind.TRANSPOSE:
+            slab = np.ascontiguousarray(ins0.transpose(0, 2, 1))
+        else:  # pragma: no cover
+            raise ValueError(kind)
+        arena.register(outs, slab)
+        for i, t in enumerate(tasks):
+            buffers[t.out] = slab[i]
+
+    def _run_fill(self, tasks, buffers, arena, leaf_nodes, tile) -> None:
+        node = leaf_nodes[tasks[0].payload]
+        if node.op is Op.INPUT and \
+                all(leaf_nodes[t.payload].op is Op.INPUT for t in tasks):
+            # zero-copy views into the user array, exactly like exec/local
+            for t in tasks:
+                n = leaf_nodes[t.payload]
+                rs = tile_slices(n.shape[0], tile[0])[t.out.i]
+                cs = tile_slices(n.shape[1], tile[1])[t.out.j]
+                buffers[t.out] = leaf_slice(n, rs[0], rs[1], cs[0], cs[1])
+            return
+        slab = np.empty((len(tasks),) + tasks[0].out.shape, dtype=node.dtype)
+        for i, t in enumerate(tasks):
+            n = leaf_nodes[t.payload]
+            rs = tile_slices(n.shape[0], tile[0])[t.out.i]
+            cs = tile_slices(n.shape[1], tile[1])[t.out.j]
+            slab[i] = leaf_slice(n, rs[0], rs[1], cs[0], cs[1])
+            buffers[t.out] = slab[i]
+        arena.register([t.out for t in tasks], slab)
+
+    def _run_matmul(self, kind, tasks, buffers, arena, dtypes) -> None:
+        ta, tb = matmul_flags(tasks[0].payload)
+        a3 = self._gather([t.ins[0] for t in tasks], buffers, arena)
+        b3 = self._gather([t.ins[1] for t in tasks], buffers, arena)
+        if ta:
+            a3 = a3.transpose(0, 2, 1)
+        if tb:
+            b3 = b3.transpose(0, 2, 1)
+
+        if kind is TaskKind.MATMUL:
+            slab = np.matmul(a3, b3)
+            arena.register([t.out for t in tasks], slab)
+            for i, t in enumerate(tasks):
+                buffers[t.out] = slab[i]
+            return
+
+        # ADDMUL: C += A @ B, accumulating into the CALLOC'd tile buffers
+        outs = [t.out for t in tasks]
+        crun = arena.contiguous_run(outs) if len(outs) > 1 else None
+        if self.backend == "pallas":
+            from ..kernels import ops as kops
+            c3 = crun if crun is not None else \
+                np.stack([buffers[t.out] for t in tasks])
+            out = np.asarray(kops.addmul_batched(
+                np.ascontiguousarray(c3), np.ascontiguousarray(a3),
+                np.ascontiguousarray(b3)), dtype=c3.dtype)
+            if crun is not None:
+                np.copyto(crun, out)
+            else:
+                for i, t in enumerate(tasks):
+                    np.copyto(buffers[t.out], out[i])
+            return
+        prod = np.matmul(a3, b3)
+        if crun is not None:
+            crun += prod
+        else:
+            for i, t in enumerate(tasks):
+                buffers[t.out] += prod[i]
+
+    # -- driver ------------------------------------------------------------
+    def execute(self, plan) -> np.ndarray:
+        g: TaskGraph = plan.program.graph
+        tile = plan.tile
+        leaf_nodes = plan.program.leaf_nodes
+        dtypes = plan.program.dtypes
+        waves = getattr(plan, "waves", None) or build_waves(g)
+
+        buffers: Dict[TileRef, np.ndarray] = {}
+        arena = WaveArena()
+        self.stats = {"zero_copy_gathers": 0, "copied_gathers": 0,
+                      "batched_calls": 0}
+
+        # readers per tile (+1 keeps result tiles alive for assembly)
+        refcnt: Dict[TileRef, int] = {}
+        for t in g:
+            for r in t.ins:
+                refcnt[r] = refcnt.get(r, 0) + 1
+        for r in g.result_tiles:
+            refcnt[r] = refcnt.get(r, 0) + 1
+        # an ADDMUL chain rewrites its C tile: every chain step after the
+        # slab's CALLOC holds the tile alive even though it is not in `ins`
+        for t in g:
+            if t.kind in (TaskKind.ADDMUL, TaskKind.MATMUL) and \
+                    t.out is not None:
+                refcnt[t.out] = refcnt.get(t.out, 0) + 1
+
+        tasks_run = 0
+        for wave in waves:
+            for (key, tasks) in group_wave(g, wave, dtypes):
+                self._run_group(key[0], tasks, buffers, arena,
+                                leaf_nodes, dtypes, tile)
+                tasks_run += len(tasks)
+                if not self.free_buffers:
+                    continue
+                for t in tasks:
+                    reads = list(t.ins)
+                    if t.kind in (TaskKind.ADDMUL, TaskKind.MATMUL):
+                        reads.append(t.out)   # release the chain's hold
+                    for r in reads:
+                        refcnt[r] -= 1
+                        if refcnt[r] == 0:
+                            # result tiles hold an extra assembly ref, so
+                            # they can never reach zero here
+                            arena.release_tile(r)
+                            buffers.pop(r, None)
+
+        self.stats.update({
+            "peak_buffer_bytes": arena.peak_bytes,
+            "cur_buffer_bytes": arena.cur_bytes,
+            "slabs_alloc": arena.slabs_alloc,
+            "buffers_freed": arena.slabs_freed,
+            "tasks_run": tasks_run,
+            "waves": len(waves),
+        })
+        vals = {r: buffers[r] for r in g.result_tiles}
+        return assemble(vals, g.result_shape, tile, g.result_tiles[0].tensor)
+
+
+def predict_wave_makespan(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
+                          waves: Optional[List[List[int]]] = None,
+                          dtypes: Optional[Dict[int, object]] = None,
+                          cost: Optional[CostCache] = None) -> float:
+    """Predicted wall-clock of wave-batched execution under ``tm``.
+
+    Waves run back-to-back; each group costs one
+    ``tm.batch_dispatch_overhead`` plus its summed per-slice kernel time
+    spread over the node's worker parallelism (stacked BLAS keeps every
+    core busy).  Compare with the per-task simulated makespan — which pays
+    ``tm.dispatch_overhead`` per task — to pick an executor strategy.
+    """
+    waves = waves or build_waves(g)
+    dtypes = dtypes or {}
+    cost = cost or CostCache(tm, spec)
+    par = max(1, spec.worker_procs)
+    total = 0.0
+    for wave in waves:
+        for (key, tasks) in group_wave(g, wave, dtypes):
+            kind = key[0]
+            if kind is TaskKind.TAKECOPY:
+                continue
+            if kind is TaskKind.CALLOC:
+                total += 1e-6      # calloc slab: zero pages, near-free
+                continue
+            kern = sum(cost.kernel(t) for t in tasks)
+            total += tm.batch_dispatch_overhead + kern / par
+    return total

@@ -73,6 +73,11 @@ class LocalExecutor:
         for r in g.result_tiles:
             refcnt[r] = refcnt.get(r, 0) + 1
         mem = {"cur": 0, "peak": 0, "freed": 0}
+        #: bytes currently accounted per tile ref — a task that REBINDS
+        #: ``buffers[t.out]`` over an earlier allocation (ufunc output over
+        #: a CALLOC'd tile, the Pallas addmul result) must release the old
+        #: allocation's bytes, or ``peak_buffer_bytes`` drifts upward
+        owned: Dict[TileRef, int] = {}
 
         if self.use_pallas:
             from ..kernels import ops as kops
@@ -146,14 +151,16 @@ class LocalExecutor:
             """Memory bookkeeping after a task ran (under cv)."""
             if t.out is not None and t.kind is not TaskKind.TAKECOPY:
                 buf = buffers.get(t.out)
-                if buf is not None and buf.base is None and \
-                        t.kind in (TaskKind.CALLOC, TaskKind.FILL,
-                                   TaskKind.ADD, TaskKind.SUB,
-                                   TaskKind.EWMUL, TaskKind.SCALE,
-                                   TaskKind.EWISE, TaskKind.FUSED,
-                                   TaskKind.TRANSPOSE):
+                if buf is not None:
                     # views (zero-copy INPUT slices) own no memory
-                    mem["cur"] += buf.nbytes
+                    new = buf.nbytes if buf.base is None else 0
+                    old = owned.get(t.out, 0)
+                    if new != old:
+                        mem["cur"] += new - old
+                        if new:
+                            owned[t.out] = new
+                        else:
+                            owned.pop(t.out, None)
                     mem["peak"] = max(mem["peak"], mem["cur"])
             if not self.free_buffers:
                 return
@@ -162,8 +169,7 @@ class LocalExecutor:
                 if refcnt[r] == 0:
                     buf = buffers.pop(r, None)
                     if buf is not None:
-                        if buf.base is None:
-                            mem["cur"] -= buf.nbytes
+                        mem["cur"] -= owned.pop(r, 0)
                         mem["freed"] += 1
 
         def worker_done(tid: int):
@@ -205,6 +211,7 @@ class LocalExecutor:
             raise errors[0]
 
         self.stats = {"peak_buffer_bytes": mem["peak"],
+                      "cur_buffer_bytes": mem["cur"],
                       "buffers_freed": mem["freed"],
                       "tasks_run": len(g),
                       "workers": nworkers}

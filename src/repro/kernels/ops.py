@@ -36,6 +36,33 @@ def addmul(c, a, b, *, block_m: int = 128, block_n: int = 128,
                       block_k=block_k, interpret=interpret)
 
 
+@functools.lru_cache(maxsize=128)
+def _addmul_batched_fn(block_m: int, block_n: int, block_k: int,
+                       interpret: bool):
+    """One jitted ``vmap`` of the Pallas addmul per block/backend signature.
+
+    The wave executor calls this once per ``(tile shape, dtype)`` group;
+    jax's jit cache then specialises per stacked operand shape, so repeated
+    waves of the same group signature reuse the compiled executable.
+    """
+    fn = functools.partial(_mm.addmul, block_m=block_m, block_n=block_n,
+                           block_k=block_k, interpret=interpret)
+    return jax.jit(jax.vmap(fn))
+
+
+def addmul_batched(c, a, b, *, block_m: int = 128, block_n: int = 128,
+                   block_k: int = 128, interpret: bool | None = None):
+    """Stacked GEMM-accumulate: ``out[i] = c[i] + a[i] @ b[i]``.
+
+    ``jax.vmap`` over the blocked Pallas kernel — the wave-batched
+    executor's ADDMUL group call (one launch per group instead of one per
+    tile task).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    fn = _addmul_batched_fn(block_m, block_n, block_k, interpret)
+    return fn(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b))
+
+
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
@@ -50,4 +77,5 @@ def gla(q, k, v, log_a, *, chunk: int = 128, normalize: bool = True,
                     interpret=interpret)
 
 
-__all__ = ["matmul", "addmul", "flash_attention", "gla", "ref"]
+__all__ = ["matmul", "addmul", "addmul_batched", "flash_attention", "gla",
+           "ref"]

@@ -1,0 +1,71 @@
+"""Plan-cache keying and simulation-driven tuning regressions."""
+import numpy as np
+
+from repro.core import (ClusteredMatrix as CM, CMMEngine,
+                        analytic_time_model, c5_9xlarge, tune_tile)
+
+TM = analytic_time_model()
+
+
+def _expr(n=96):
+    return (CM.rand(n, n, seed=0) @ CM.rand(n, n, seed=1)) + \
+        CM.rand(n, n, seed=2)
+
+
+def test_plan_cache_key_includes_tile():
+    """Satellite regression: two tiles of the same structure must MISS the
+    structural plan cache against each other (distinct tiled programs), and
+    each must HIT on a same-tile replan."""
+    eng = CMMEngine(c5_9xlarge(2), TM, plan_cache=True)
+    p16 = eng.plan(_expr(), tile=16)
+    p32 = eng.plan(_expr(), tile=32)
+    assert not p16.cache_hit and not p32.cache_hit
+    assert len(p16.program.graph) != len(p32.program.graph)
+    assert eng.plan_cache_misses == 2 and eng.plan_cache_hits == 0
+
+    h16 = eng.plan(_expr(), tile=16)
+    h32 = eng.plan(_expr(), tile=32)
+    assert h16.cache_hit and h32.cache_hit
+    assert len(h16.program.graph) == len(p16.program.graph)
+    assert len(h32.program.graph) == len(p32.program.graph)
+    # normalized tile forms share one cache slot
+    assert eng.plan(_expr(), tile=(16, 16)).cache_hit
+
+
+def test_plan_cache_hit_carries_strategy_metadata():
+    eng = CMMEngine(c5_9xlarge(1), TM, plan_cache=True)
+    p1 = eng.plan(_expr(), tile=16)
+    p2 = eng.plan(_expr(), tile=16)
+    assert p2.cache_hit
+    assert p2.waves == p1.waves
+    assert p2.batched_makespan == p1.batched_makespan
+    assert p2.best_predicted_makespan == p1.best_predicted_makespan
+
+
+def test_tune_tile_gets_distinct_plans_per_candidate():
+    """Satellite: the §3.3 loop must cost each candidate on its OWN tiled
+    program, not on a cache hit from a previous candidate."""
+    eng = CMMEngine(c5_9xlarge(2), TM, plan_cache=True)
+    root = _expr(120)
+    cands = [12, 24, 60]
+    result = tune_tile(eng, root, candidates=cands)
+    assert sorted(c for c, _ in result.scores) == sorted(cands)
+    # distinct tiles -> distinct task graphs -> distinct predicted costs
+    costs = [s for _, s in result.scores]
+    assert len(set(costs)) == len(costs), \
+        "identical costs across tiles suggests plan-cache collisions"
+    # and re-tuning hits the cache without changing the answer
+    again = tune_tile(eng, root, candidates=cands)
+    assert again.best == result.best
+    assert eng.plan_cache_hits >= len(cands)
+
+
+def test_engine_autotune_tile_consistent():
+    eng = CMMEngine(c5_9xlarge(2), TM, plan_cache=True)
+    root = _expr(120)
+    best, scores = eng.autotune_tile(root, candidates=[12, 24, 60])
+    assert best in scores
+    assert scores[best] == min(scores.values())
+    # scores come from each candidate's cheapest predicted strategy
+    for c, s in scores.items():
+        assert s == eng.plan(root, tile=c).best_predicted_makespan

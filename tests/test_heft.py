@@ -6,7 +6,8 @@ from repro.core import (ClusteredMatrix as CM, CMMEngine, NodeCache,
                         analytic_time_model, c5_9xlarge, heft_schedule,
                         tile_expression)
 from repro.core.graph import TaskKind
-from repro.core.heft import edge_bytes, register_fill_origin, upward_rank
+from repro.core.heft import (_GapTimeline, _SlotTimeline, edge_bytes,
+                             register_fill_origin, upward_rank)
 from repro.core.lazy import Op, topo_order
 
 
@@ -83,13 +84,13 @@ def test_cache_aware_not_worse():
     expr = (CM.rand(n, n, seed=0) @ CM.rand(n, n, seed=1)) @ \
         CM.rand(n, n, seed=2)
     prog = tile_expression(expr, tile)
-    register_fill_origin({k: "local" for k in prog.leaf_nodes})
     tm = analytic_time_model()
     spec = c5_9xlarge(4)
-    s_on = heft_schedule(prog.graph, spec, tm, cache_aware=True)
+    s_on = heft_schedule(prog.graph, spec, tm, cache_aware=True,
+                         fill_origin={k: "local" for k in prog.leaf_nodes})
     prog2 = tile_expression(expr, tile)
-    register_fill_origin({k: "local" for k in prog2.leaf_nodes})
-    s_off = heft_schedule(prog2.graph, spec, tm, cache_aware=False)
+    s_off = heft_schedule(prog2.graph, spec, tm, cache_aware=False,
+                          fill_origin={k: "local" for k in prog2.leaf_nodes})
     assert s_on.makespan <= s_off.makespan * 1.05
 
 
@@ -117,6 +118,77 @@ def test_edge_bytes_accumulation_edges():
 def test_single_node_no_comm():
     plan = _plan(1)
     assert not [c for c in plan.schedule.comms if not c.cached]
+
+
+def test_fill_origin_param_isolated_between_planners():
+    """Satellite: fill origins travel with the heft_schedule CALL, so two
+    planners with different origin maps can interleave without clobbering
+    each other (the old module-global broke concurrent planning)."""
+    a = np.ones((32, 32))
+    expr_in = CM.from_array(a) @ CM.from_array(a)     # INPUT: master-pinned
+    expr_rnd = CM.rand(32, 32, seed=0) @ CM.rand(32, 32, seed=1)
+    tm = analytic_time_model()
+    spec = c5_9xlarge(4)
+
+    prog_in = tile_expression(expr_in, 16)
+    prog_rnd = tile_expression(expr_rnd, 16)
+    origin_in = {k: "master" for k in prog_in.leaf_nodes}
+    origin_rnd = {k: "local" for k in prog_rnd.leaf_nodes}
+
+    # pollute the deprecated global with the WRONG origins, then schedule
+    # with explicit parameters — the parameter must win
+    register_fill_origin({k: "local" for k in prog_in.leaf_nodes})
+    s_rnd = heft_schedule(prog_rnd.graph, spec, tm, fill_origin=origin_rnd)
+    s_in = heft_schedule(prog_in.graph, spec, tm, fill_origin=origin_in)
+    for t in prog_in.graph:
+        if t.kind is TaskKind.FILL:
+            assert s_in.placements[t.tid].node == spec.master
+    # generated fills are lazily placed, not pinned to the master
+    fill_nodes = {s_rnd.placements[t.tid].node
+                  for t in prog_rnd.graph if t.kind is TaskKind.FILL}
+    assert fill_nodes  # scheduled at all
+    register_fill_origin({})
+
+
+def test_fast_and_slow_planning_identical():
+    """The fast path (memoized costs, gap timelines) must produce the SAME
+    schedule as the naive path — it is a representation change, not a
+    heuristic change."""
+    n = 96
+    expr = (CM.rand(n, n, seed=0) @ CM.rand(n, n, seed=1)).relu() * 2.0 + \
+        CM.rand(n, n, seed=2)
+    tm = analytic_time_model()
+    for nodes in (1, 3):
+        e_fast = CMMEngine(c5_9xlarge(nodes), tm, plan_cache=False,
+                           fast_planning=True)
+        e_slow = CMMEngine(c5_9xlarge(nodes), tm, plan_cache=False,
+                           fast_planning=False)
+        p_fast = e_fast.plan(expr, tile=16)
+        p_slow = e_slow.plan(expr, tile=16)
+        assert set(p_fast.schedule.placements) == \
+            set(p_slow.schedule.placements)
+        for tid, pf in p_fast.schedule.placements.items():
+            ps = p_slow.schedule.placements[tid]
+            assert (pf.node, pf.slot, pf.start, pf.finish) == \
+                (ps.node, ps.slot, ps.start, ps.finish)
+        assert p_fast.schedule.makespan == p_slow.schedule.makespan
+        assert p_fast.sim.makespan == p_slow.sim.makespan
+
+
+def test_gap_timeline_matches_interval_timeline():
+    """_GapTimeline is the exact complement representation of
+    _SlotTimeline: identical earliest() answers under random workloads."""
+    rng = np.random.default_rng(7)
+    slow, fast = _SlotTimeline(), _GapTimeline()
+    for _ in range(300):
+        ready = float(rng.uniform(0, 50))
+        dur = float(rng.uniform(0.01, 5))
+        t1 = slow.earliest(ready, dur)
+        t2 = fast.earliest(ready, dur)
+        assert t1 == t2, (ready, dur, t1, t2)
+        if rng.random() < 0.7:      # commit the placement to both
+            slow.insert(t1, dur)
+            fast.insert(t1, dur)
 
 
 def test_more_nodes_not_slower_on_parallel_graph():

@@ -9,7 +9,7 @@ from repro.core import (ClusteredMatrix as CM, CMMEngine,
                         analytic_time_model, c5_9xlarge, simulate,
                         tile_expression)
 from repro.core.graph import TaskKind
-from repro.core.heft import heft_schedule, register_fill_origin
+from repro.core.heft import heft_schedule
 from repro.core.tiling import assemble, tile_slices
 from repro.core.graph import TileRef
 
@@ -82,9 +82,9 @@ def test_heft_schedule_always_valid(nodes, tile, n):
     expr = (CM.rand(n, n, seed=0) @ CM.rand(n, n, seed=1)) + \
         CM.rand(n, n, seed=2)
     prog = tile_expression(expr, tile)
-    register_fill_origin({k: "local" for k in prog.leaf_nodes})
     spec = c5_9xlarge(nodes)
-    sched = heft_schedule(prog.graph, spec, TM)
+    sched = heft_schedule(prog.graph, spec, TM,
+                          fill_origin={k: "local" for k in prog.leaf_nodes})
     g = prog.graph
     assert set(sched.placements) == set(g.tasks)
     for t in g:
