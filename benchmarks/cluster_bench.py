@@ -1,0 +1,130 @@
+"""Multi-process cluster executor benchmark + smoke gate -> BENCH_cluster.json.
+
+Runs a tiled GEMM workload on a 2-node spec through the executor registry:
+the multi-process ``cluster`` backend (one worker process per node, real
+shared-memory XFERs) against the in-process ``local`` backend on the SAME
+plan, checking:
+
+* **oracle**: cluster output is bit-identical to the per-task executor and
+  within tolerance of ``eager()`` (multi-k-tile reduction order);
+* **placement**: every task ran in the worker process of its HEFT-assigned
+  node (``exec_nodes`` vs ``Schedule.placements``);
+* **transfers**: the schedule's cross-node edges produced real XFERs.
+
+Exit status is non-zero on any mismatch — wired into CI as the
+cluster-executor smoke gate (``--smoke``: 2-node spec, small GEMM).
+
+    PYTHONPATH=src python benchmarks/cluster_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CMMEngine, ClusteredMatrix as CM, analytic_time_model
+from repro.core.machine import hetero_spec
+from repro.exec import make_executor
+
+
+def build_gemm(n: int, seed: int = 0) -> CM:
+    A = CM.rand(n, n, seed=seed, name="A")
+    B = CM.rand(n, n, seed=seed + 1, name="B")
+    C = CM.rand(n, n, seed=seed + 2, name="C")
+    return (A @ B) + C
+
+
+def run_case(n: int, tile: int, node_workers, reps: int = 1) -> dict:
+    from repro.core.profiler import calibrate_ipc
+    spec = hetero_spec(node_workers, link_bw=1e12, latency=1e-6)
+    tm = analytic_time_model()
+    calibrate_ipc(tm)     # measured queue round-trip + shm copy bandwidth
+    eng = CMMEngine(spec, tm, plan_cache=False)
+    expr = build_gemm(n)
+    plan = eng.plan(expr, tile=tile)
+
+    results = {}
+    walls = {}
+    stats = {}
+    for backend in ("local", "cluster"):
+        ex = make_executor(backend)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = ex.execute(plan)
+            best = min(best, time.perf_counter() - t0)
+        results[backend] = out
+        walls[backend] = best
+        stats[backend] = ex.stats
+
+    ok_bitident = bool(np.array_equal(results["local"], results["cluster"]))
+    ok_oracle = bool(np.allclose(results["cluster"], expr.eager(),
+                                 rtol=1e-8, atol=1e-10))
+    sched_nodes = {tid: p.node
+                   for tid, p in plan.schedule.placements.items()}
+    ok_placement = stats["cluster"]["exec_nodes"] == sched_nodes
+    n_xfer_sched = len(plan.schedule.xfers(plan.program.graph))
+    return {
+        "n": n, "tile": tile, "node_workers": list(node_workers),
+        "tasks": len(plan.program.graph),
+        "wall_local_s": walls["local"],
+        "wall_cluster_s": walls["cluster"],
+        "predicted_cluster_s": plan.cluster_makespan,
+        "xfers": stats["cluster"]["xfers"],
+        "xfers_scheduled": n_xfer_sched,
+        "xfer_bytes": stats["cluster"]["xfer_bytes"],
+        "peak_buffer_bytes": stats["cluster"]["peak_buffer_bytes"],
+        "nodes_used": len(set(stats["cluster"]["exec_nodes"].values())),
+        "ok_bitident": ok_bitident,
+        "ok_oracle": ok_oracle,
+        "ok_placement": ok_placement,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small 2-node GEMM, oracle-checked (the CI gate)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_cluster.json, "
+                         "or BENCH_cluster_smoke.json under --smoke so the "
+                         "smoke gate never clobbers the published artifact)")
+    args = ap.parse_args()
+    if args.out is None:
+        name = "BENCH_cluster_smoke.json" if args.smoke \
+            else "BENCH_cluster.json"
+        args.out = os.path.join(os.path.dirname(__file__), "..", name)
+
+    if args.smoke:
+        cases = [run_case(96, 32, (2, 1))]
+    else:
+        cases = [run_case(256, 64, (2, 1), reps=2),
+                 run_case(384, 96, (3, 2, 1), reps=2)]
+
+    ok = True
+    for c in cases:
+        ok &= c["ok_bitident"] and c["ok_oracle"] and c["ok_placement"]
+        print(f"[cluster] n={c['n']} tile={c['tile']} "
+              f"nodes={c['node_workers']} tasks={c['tasks']} "
+              f"xfers={c['xfers']}/{c['xfers_scheduled']} "
+              f"nodes_used={c['nodes_used']} "
+              f"local={c['wall_local_s']:.3f}s "
+              f"cluster={c['wall_cluster_s']:.3f}s "
+              f"bitident={c['ok_bitident']} oracle={c['ok_oracle']} "
+              f"placement={c['ok_placement']}")
+        if not (c["ok_bitident"] and c["ok_oracle"] and c["ok_placement"]):
+            print(f"[cluster] CHECK FAILED at n={c['n']} tile={c['tile']}",
+                  file=sys.stderr)
+
+    with open(args.out, "w") as f:
+        json.dump({"cases": cases}, f, indent=2)
+    print(f"[cluster] wrote {os.path.abspath(args.out)}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

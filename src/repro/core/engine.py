@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -51,6 +51,18 @@ class Plan:
     waves: Optional[list] = None
     #: predicted wall-clock of the wave-batched executor strategy
     batched_makespan: Optional[float] = None
+    #: lazy, memoized predictor for the multi-process cluster strategy
+    #: (None on single-node specs).  Pricing it re-simulates the whole
+    #: schedule under the process/IPC terms, so it only runs when the
+    #: prediction is actually consulted (``auto`` / ``best_*``) — plain
+    #: ``plan()`` keeps the fast-path planning time.
+    _cluster_pred: Optional[Callable[[], float]] = None
+
+    @property
+    def cluster_makespan(self) -> Optional[float]:
+        """Predicted wall-clock of the multi-process cluster executor
+        (None on single-node specs; computed on first access)."""
+        return self._cluster_pred() if self._cluster_pred else None
 
     @property
     def predicted_makespan(self) -> float:
@@ -60,18 +72,36 @@ class Plan:
     @property
     def best_predicted_makespan(self) -> float:
         """Cheapest predicted strategy: per-task simulation vs wave-batched
-        execution (the simulation-driven selection extended to executor
-        strategy)."""
-        if self.batched_makespan is None:
-            return self.sim.makespan
-        return min(self.sim.makespan, self.batched_makespan)
+        vs multi-process cluster execution (the simulation-driven selection
+        extended to executor strategy)."""
+        cands = [self.sim.makespan, self.batched_makespan,
+                 self.cluster_makespan]
+        return min(c for c in cands if c is not None)
 
     @property
     def best_executor(self) -> str:
-        if self.batched_makespan is not None and \
-                self.batched_makespan < self.sim.makespan:
-            return "batched"
-        return "local"
+        best, t = "local", self.sim.makespan
+        if self.batched_makespan is not None and self.batched_makespan < t:
+            best, t = "batched", self.batched_makespan
+        if self.cluster_makespan is not None and self.cluster_makespan < t:
+            best, t = "cluster", self.cluster_makespan
+        return best
+
+
+def _memo_cluster_pred(g, sched, spec, tm) -> Callable[[], float]:
+    """One-shot memoized cluster-strategy predictor, shared by a cached
+    plan and every cache-hit copy so the extra simulation runs at most
+    once per planned structure."""
+    memo: Dict[str, float] = {}
+
+    def pred() -> float:
+        v = memo.get("v")
+        if v is None:
+            from ..exec.cluster import predict_cluster_makespan
+            v = memo["v"] = predict_cluster_makespan(g, sched, spec, tm)
+        return v
+
+    return pred
 
 
 class CMMEngine:
@@ -139,7 +169,8 @@ class CMMEngine:
                 return Plan(prog, hit.schedule, hit.sim, hit.tile,
                             time.perf_counter() - t0, spec=self.spec,
                             fusion=report, cache_hit=True, waves=hit.waves,
-                            batched_makespan=hit.batched_makespan)
+                            batched_makespan=hit.batched_makespan,
+                            _cluster_pred=hit._cluster_pred)
             self.plan_cache_misses += 1
 
         prog = tile_expression(root, tile)
@@ -158,9 +189,14 @@ class CMMEngine:
         batched = predict_wave_makespan(prog.graph, self.spec,
                                         self.timemodel, waves=waves,
                                         dtypes=prog.dtypes, cost=cost)
+        cluster_pred = None
+        if self.spec.n_nodes > 1:
+            # the multi-process strategy only exists for multi-node specs
+            cluster_pred = _memo_cluster_pred(prog.graph, sched, self.spec,
+                                              self.timemodel)
         plan = Plan(prog, sched, sim, tile, time.perf_counter() - t0,
                     spec=self.spec, fusion=report, waves=waves,
-                    batched_makespan=batched)
+                    batched_makespan=batched, _cluster_pred=cluster_pred)
         if key is not None:
             if len(self._plans) >= 128:      # bound cache growth (FIFO)
                 self._plans.pop(next(iter(self._plans)))
@@ -183,7 +219,8 @@ class CMMEngine:
         p.root = None
         return Plan(p, plan.schedule, plan.sim, plan.tile, plan.plan_seconds,
                     spec=plan.spec, waves=plan.waves,
-                    batched_makespan=plan.batched_makespan)
+                    batched_makespan=plan.batched_makespan,
+                    _cluster_pred=plan._cluster_pred)
 
     def _default_tile(self, root: ClusteredMatrix) -> int:
         # paper finding: tile ~ n/2 is best for n=10k on 8 nodes (§3.3);
@@ -205,31 +242,24 @@ class CMMEngine:
     def run(self, root: ClusteredMatrix, tile=None, executor: str = "local",
             validate: bool = False, plan: Optional[Plan] = None,
             **exec_kw) -> np.ndarray:
-        """Execute through a backend:
+        """Execute through a backend from the ``repro.exec.EXECUTORS``
+        registry:
 
         * ``"local"``          — per-task threaded executor;
         * ``"kernel"``         — per-task with Pallas addmul tiles;
         * ``"batched"``        — wave-batched stacked-kernel executor;
         * ``"batched-pallas"`` — wave-batched, ADDMUL groups through
           ``jax.vmap`` over the Pallas blocked GEMM;
+        * ``"cluster"``        — one worker process per cluster node,
+          HEFT node placements executed for real;
         * ``"auto"``           — simulation-driven choice between the
-          per-task and wave-batched strategies for this plan.
+          per-task, wave-batched and cluster strategies for this plan.
         """
         plan = plan or self.plan(root, tile=tile)
         if executor == "auto":
             executor = self.choose_executor(plan)
-        if executor == "local":
-            from ..exec.local import LocalExecutor
-            ex = LocalExecutor(**exec_kw)
-        elif executor == "kernel":
-            from ..exec.local import LocalExecutor
-            ex = LocalExecutor(use_pallas=True, **exec_kw)
-        elif executor in ("batched", "batched-pallas"):
-            from ..exec.batched import WaveExecutor
-            backend = "pallas" if executor == "batched-pallas" else "numpy"
-            ex = WaveExecutor(backend=backend, **exec_kw)
-        else:
-            raise ValueError(f"unknown executor {executor!r}")
+        from ..exec import make_executor
+        ex = make_executor(executor, **exec_kw)
         out = ex.execute(plan)
         self.last_exec_stats = dict(ex.stats)
         self.last_exec_stats["executor"] = executor

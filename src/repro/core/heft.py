@@ -75,6 +75,38 @@ class Schedule:
     def node_of(self, tid: int) -> int:
         return self.placements[tid].node
 
+    def node_tasks(self) -> Dict[int, List[int]]:
+        """Per-node task ids in scheduled start order — the per-node
+        dispatch queues a distributed executor replays."""
+        by_node: Dict[int, List[int]] = {}
+        for tid in sorted(self.placements,
+                          key=lambda t: (self.placements[t].start, t)):
+            by_node.setdefault(self.placements[tid].node, []).append(tid)
+        return by_node
+
+    def xfers(self, g: "TaskGraph") -> List[Tuple[int, int, int, int]]:
+        """The schedule's cross-node data movements, as concrete executor
+        endpoints: deduplicated ``(producer tid, src node, dst node,
+        nbytes)`` tuples, one per tile *version* arriving at a node (later
+        consumers of the same version on that node hit the node-level
+        cache, §3.5).  Derived from placements + graph edges, so it is
+        authoritative even for the regenerated-fill clones the scheduler
+        splices in."""
+        out: List[Tuple[int, int, int, int]] = []
+        seen = set()
+        for tid in sorted(self.placements):
+            t = g.tasks[tid]
+            src = self.placements[tid].node
+            for s in sorted(t.succs):
+                if s not in self.placements:
+                    continue
+                nbytes = edge_bytes(g, t, g.tasks[s])
+                dst = self.placements[s].node
+                if nbytes and dst != src and (tid, dst) not in seen:
+                    seen.add((tid, dst))
+                    out.append((tid, src, dst, nbytes))
+        return out
+
 
 def edge_bytes(g: TaskGraph, u: Task, v: Task) -> int:
     """Bytes flowing along dependency edge u->v.
@@ -282,7 +314,7 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     order = [tid for tid in order_all if not is_lazy(g.tasks[tid])]
 
     timeline_cls = _GapTimeline if fast else _SlotTimeline
-    slots = {n: [timeline_cls() for _ in range(spec.worker_procs)]
+    slots = {n: [timeline_cls() for _ in range(spec.workers_at(n))]
              for n in range(spec.n_nodes)}
     placements: Dict[int, Placement] = {}
     comms: List[CommEvent] = []

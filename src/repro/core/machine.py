@@ -8,7 +8,7 @@ scheduler and the discrete-event simulator consume them.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -31,10 +31,22 @@ class ClusterSpec:
     master: int = 0
     #: per-node compute slowdown factors (straggler modelling, runtime/fault)
     slowdown: Tuple[float, ...] = ()
+    #: per-node worker-process overrides (heterogeneous clusters: unequal
+    #: slot counts per node).  Empty -> every node gets ``worker_procs``.
+    node_workers: Tuple[int, ...] = ()
 
     def comm_procs(self, node: int) -> int:
         return self.comm_procs_master if node == self.master \
             else self.comm_procs_worker
+
+    def workers_at(self, node: int) -> int:
+        """Compute slots on ``node`` (heterogeneous-aware)."""
+        if self.node_workers and node < len(self.node_workers):
+            return max(1, self.node_workers[node])
+        return self.worker_procs
+
+    def total_workers(self) -> int:
+        return sum(self.workers_at(n) for n in range(self.n_nodes))
 
     def bandwidth(self, a: int, b: int) -> float:
         for (pa, pb), bw in self.pair_bw:
@@ -63,6 +75,16 @@ class ClusterSpec:
 def c5_9xlarge(n_nodes: int = 1, **kw) -> ClusterSpec:
     """The paper's AWS instance: 36 vCPU / 18 physical cores, 10 Gbps."""
     return ClusterSpec(n_nodes=n_nodes, **kw)
+
+
+def hetero_spec(node_workers: Sequence[int],
+                slowdown: Sequence[float] = (), **kw) -> ClusterSpec:
+    """A heterogeneous cluster: one node per entry of ``node_workers`` with
+    that many worker processes, optionally per-node compute slowdowns —
+    the spec shape the multi-process ClusterExecutor exercises."""
+    return ClusterSpec(n_nodes=len(node_workers),
+                       node_workers=tuple(int(w) for w in node_workers),
+                       slowdown=tuple(float(s) for s in slowdown), **kw)
 
 
 def local_spec(n_nodes: int = 1, **kw) -> ClusterSpec:

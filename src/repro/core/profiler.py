@@ -94,6 +94,7 @@ def profile_machine(sizes: Sequence[int] = (64, 128, 256, 384, 512),
     calibrate_contention(tm)
     calibrate_dispatch(tm)
     calibrate_batch_dispatch(tm)
+    calibrate_ipc(tm)
     return tm
 
 
@@ -175,6 +176,64 @@ def calibrate_batch_dispatch(tm: TimeModel, tile: int = 64,
     coef, *_ = np.linalg.lstsq(np.asarray(xs), np.asarray(ys), rcond=None)
     tm.batch_dispatch_overhead = float(min(max(coef[0], 1e-6), 5e-3))
     return tm.batch_dispatch_overhead
+
+
+def _ipc_echo(inq, outq):                      # pragma: no cover - subprocess
+    while True:
+        msg = inq.get()
+        if msg is None:
+            break
+        outq.put(msg)
+
+
+def calibrate_ipc(tm: TimeModel, nbytes: int = 1 << 22,
+                  reps: int = 5) -> Tuple[float, float]:
+    """Fit the cluster executor's cost terms (§3.4 applied to processes):
+
+    * ``process_dispatch_overhead`` / ``ipc_latency`` — one dispatch-queue
+      round trip to a worker process (pickle + pipe + wakeup + ack), which
+      the multi-process executor pays per task (and per XFER message);
+    * ``ipc_bandwidth`` — throughput of a tile copy between two
+      ``SharedMemory`` arenas, the executor's actual XFER data path.
+    """
+    import multiprocessing as mp
+    from multiprocessing import shared_memory
+
+    ctx = mp.get_context()
+    inq, outq = ctx.Queue(), ctx.Queue()
+    p = ctx.Process(target=_ipc_echo, args=(inq, outq), daemon=True)
+    p.start()
+    try:
+        inq.put(0)                    # warm the queues / process
+        outq.get(timeout=30)
+        best = float("inf")
+        for i in range(reps):
+            t0 = time.perf_counter()
+            inq.put(i)
+            outq.get(timeout=30)
+            best = min(best, time.perf_counter() - t0)
+    finally:
+        inq.put(None)
+        p.join(timeout=10)
+        if p.is_alive():              # pragma: no cover
+            p.terminate()
+    tm.process_dispatch_overhead = min(max(best, 1e-6), 5e-2)
+    tm.ipc_latency = tm.process_dispatch_overhead
+
+    src = shared_memory.SharedMemory(create=True, size=nbytes)
+    dst = shared_memory.SharedMemory(create=True, size=nbytes)
+    try:
+        a = np.ndarray((nbytes // 8,), dtype=np.float64, buffer=src.buf)
+        b = np.ndarray((nbytes // 8,), dtype=np.float64, buffer=dst.buf)
+        a[:] = 1.0
+        copy = _time_call(lambda: np.copyto(b, a), reps)
+        tm.ipc_bandwidth = float(min(max(nbytes / max(copy, 1e-9), 1e8),
+                                     1e12))
+    finally:
+        for s in (src, dst):
+            s.close()
+            s.unlink()
+    return tm.process_dispatch_overhead, tm.ipc_bandwidth
 
 
 def profile_comm_synthetic(spec, sizes_bytes: Sequence[int] = None,

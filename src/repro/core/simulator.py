@@ -70,8 +70,9 @@ class SimResult:
         busy = defaultdict(float)
         for iv in self.intervals:
             busy[iv.node] += iv.end - iv.start
-        cap = self.spec.worker_procs * max(self.makespan, 1e-12)
-        return {n: busy[n] / cap for n in range(self.spec.n_nodes)}
+        ms = max(self.makespan, 1e-12)
+        return {n: busy[n] / (self.spec.workers_at(n) * ms)
+                for n in range(self.spec.n_nodes)}
 
     def comm_busy_seconds(self) -> float:
         return sum(t.end - t.start for t in self.transfers)
@@ -125,8 +126,8 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
     node_of = {tid: p.node for tid, p in sched.placements.items()}
 
     cache = NodeCache(spec.n_nodes)
-    free_workers = {n: spec.worker_procs for n in range(spec.n_nodes)}
-    free_slots = {n: list(range(spec.worker_procs))
+    free_workers = {n: spec.workers_at(n) for n in range(spec.n_nodes)}
+    free_slots = {n: list(range(spec.workers_at(n)))
                   for n in range(spec.n_nodes)}
     free_comm = {n: spec.comm_procs(n) for n in range(spec.n_nodes)}
 

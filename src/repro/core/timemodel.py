@@ -108,6 +108,18 @@ class TimeModel:
     #: one call at a time; real execution oversubscribes BLAS threads on a
     #: shared host — fitted by ``profiler.calibrate_contention``)
     contention: float = 1.0
+    #: per-task overhead of the multi-process cluster executor, seconds:
+    #: one dispatch-queue round trip (pickle, pipe write, wakeup, ack) per
+    #: task instead of the in-process ``dispatch_overhead`` — fitted by
+    #: ``profiler.calibrate_ipc``
+    process_dispatch_overhead: float = 5e-4
+    #: shared-memory inter-process tile-copy throughput, bytes/s (the
+    #: ClusterExecutor's XFER cost is ``ipc_latency + bytes/ipc_bandwidth``
+    #: instead of the network link model — fitted by
+    #: ``profiler.calibrate_ipc``)
+    ipc_bandwidth: float = 2e9
+    #: per-XFER message latency of the cluster executor, seconds
+    ipc_latency: float = 2e-4
 
     def _model_time(self, task: Task) -> float:
         """Raw interpolation-model prediction for one task (no contention,
@@ -162,6 +174,9 @@ class TimeModel:
             "dispatch_overhead": self.dispatch_overhead,
             "batch_dispatch_overhead": self.batch_dispatch_overhead,
             "contention": self.contention,
+            "process_dispatch_overhead": self.process_dispatch_overhead,
+            "ipc_bandwidth": self.ipc_bandwidth,
+            "ipc_latency": self.ipc_latency,
             "models": {k: {"family": m.family, "coef": m.coef.tolist()}
                        for k, m in self.models.items()},
         })
@@ -175,6 +190,10 @@ class TimeModel:
             dispatch_overhead=d.get("dispatch_overhead", 0.0),
             batch_dispatch_overhead=d.get("batch_dispatch_overhead", 1e-4),
             contention=d.get("contention", 1.0),
+            process_dispatch_overhead=d.get("process_dispatch_overhead",
+                                            5e-4),
+            ipc_bandwidth=d.get("ipc_bandwidth", 2e9),
+            ipc_latency=d.get("ipc_latency", 2e-4),
         )
 
     def save(self, path: str):

@@ -396,7 +396,10 @@ def predict_wave_makespan(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     waves = waves or build_waves(g)
     dtypes = dtypes or {}
     cost = cost or CostCache(tm, spec)
-    par = max(1, spec.worker_procs)
+    # the wave executor runs in ONE process: its parallelism is the widest
+    # node's worker count (equals ``worker_procs`` on homogeneous specs;
+    # heterogeneous specs must not be priced at the default 3)
+    par = max(1, max(spec.workers_at(n) for n in range(spec.n_nodes)))
     total = 0.0
     for wave in waves:
         for (key, tasks) in group_wave(g, wave, dtypes):

@@ -1,0 +1,571 @@
+"""Multi-process cluster executor: HEFT node placements run for real.
+
+The paper's claim is that CMM "automatically configures communication and
+worker processes" so the schedule produced for a multi-node cluster
+actually executes across nodes.  The in-process executors
+(``exec/local.py``, ``exec/batched.py``) validate *numerics* but collapse
+the cluster to one address space and ignore the schedule's node
+assignments.  This backend closes the loop:
+
+* one **worker process per ClusterSpec node** (numpywren-style isolated
+  workers over shared storage), each running ``spec.workers_at(node)``
+  compute threads — heterogeneous specs (unequal worker counts/speeds per
+  node) spawn unequal pools, so ``plan()``'s placement decisions are
+  exercised, not just simulated;
+* every task runs **on the process of its HEFT-assigned node**
+  (``Schedule.placements``), driven by per-node dispatch queues;
+* tile buffers live in per-node ``multiprocessing.SharedMemory`` **tile
+  arenas** (one segment per live tile buffer, owned by the node that
+  produced it);
+* cross-node dependency edges become **XFER** operations: the consumer
+  node attaches the producer node's segment and copies the tile into its
+  own arena — a real inter-process copy, overlapped with compute (XFERs
+  run on the node's thread pool while other tiles execute);
+* one XFER per tile *version* per destination node — later consumers on
+  that node reuse the arrived copy, mirroring the §3.5 node-level cache
+  the scheduler planned with;
+* segments are **reference-counted** exactly like ``exec/local.py``'s
+  owned-bytes accounting: the master tracks static per-(node, tile) reader
+  counts (task inputs + accumulate-chain holds + outgoing XFER reads +
+  result-gather holds) and tells the owning node to free a segment as soon
+  as its last reader finishes.
+
+Numerics: every task executes the same NumPy calls as ``LocalExecutor``
+and tile movement is bit-copying, so results are **bit-identical** to the
+per-task executor (asserted across the paper suite in
+``tests/test_cmm_suite.py``).  The Pallas tile kernel is not routed
+through this backend.
+
+``predict_cluster_makespan`` is the executor-strategy leg for ``"auto"``:
+it re-simulates the schedule under the profiler-calibrated process
+dispatch + IPC terms (``TimeModel.process_dispatch_overhead`` /
+``ipc_bandwidth`` / ``ipc_latency``, see ``profiler.calibrate_ipc``) so
+the engine can weigh the multi-process strategy against the in-process
+ones per plan.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import queue as _queue
+import threading
+import time
+import traceback
+from collections import defaultdict
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.fusion import eval_fused
+from ..core.graph import TaskGraph, TaskKind, TileRef, matmul_flags
+from ..core.heft import Schedule, edge_bytes
+from ..core.lazy import EWISE_FNS, apply_scale, leaf_slice
+from ..core.machine import ClusterSpec
+from ..core.timemodel import TimeModel
+from ..core.tiling import assemble, tile_slices
+
+#: task kinds that accumulate into their output tile in place (the chain
+#: holds the buffer alive without listing it in ``ins`` — same bookkeeping
+#: as the wave executor's slab refcounts)
+_CHAIN_KINDS = (TaskKind.ADDMUL, TaskKind.MATMUL)
+
+
+#: serialises SharedMemory create/attach so the attach-time tracker patch
+#: below can never swallow a concurrent create's registration
+_TRACK_LOCK = threading.Lock()
+
+
+def _attach_shm(name: str):
+    """Attach an existing segment WITHOUT registering it with the resource
+    tracker (bpo-39959: attaches register too, but the tracker's cache is a
+    set — the owner's create+unlink pair then unbalances and the tracker
+    raises KeyError / warns about leaks at shutdown).  Only the creating
+    node registers a segment; crash cleanup still covers every segment."""
+    from multiprocessing import resource_tracker, shared_memory
+    with _TRACK_LOCK:
+        orig = resource_tracker.register
+        resource_tracker.register = lambda *a, **kw: None
+        try:
+            return shared_memory.SharedMemory(name=name)
+        finally:
+            resource_tracker.register = orig
+
+
+def _release_seg(seg, unlink: bool = True) -> None:
+    """Close (+unlink) tolerating live views: a reader thread that grabbed
+    the ndarray before a rebind keeps the mapping alive until it drops the
+    reference; unlinking just removes the name."""
+    try:
+        seg.close()
+    except BufferError:
+        pass
+    if unlink:
+        try:
+            seg.unlink()
+        except FileNotFoundError:       # pragma: no cover
+            pass
+
+
+class _NodeArena:
+    """One node's shared-memory tile arena: a segment per live buffer,
+    with exec/local.py-style owned-bytes accounting."""
+
+    def __init__(self, prefix: str, node: int):
+        self._lock = threading.Lock()
+        self._segs: Dict[TileRef, object] = {}
+        self._arrs: Dict[TileRef, np.ndarray] = {}
+        self._count = itertools.count()
+        self._prefix = f"{prefix}n{node}"
+        self.cur = 0
+        self.peak = 0
+        self.freed = 0
+        self.allocs = 0
+
+    def _new_seg(self, nbytes: int):
+        from multiprocessing import shared_memory
+        with _TRACK_LOCK:
+            return shared_memory.SharedMemory(
+                create=True, size=max(int(nbytes), 1),
+                name=f"{self._prefix}_{next(self._count)}")
+
+    def alloc(self, ref: TileRef, shape, dtype) -> np.ndarray:
+        """A fresh zeroed buffer for ``ref`` (CALLOC — shm is zero-filled
+        by the OS, matching ``np.zeros``)."""
+        dtype = np.dtype(dtype)
+        n = int(np.prod(shape)) * dtype.itemsize
+        seg = self._new_seg(n)
+        arr = np.ndarray(shape, dtype=dtype, buffer=seg.buf)
+        arr[...] = 0
+        self._adopt(ref, seg, arr)
+        return arr
+
+    def store(self, ref: TileRef, value: np.ndarray) -> np.ndarray:
+        """Copy ``value`` into a new segment bound to ``ref``."""
+        value = np.asarray(value)
+        seg = self._new_seg(value.nbytes)
+        arr = np.ndarray(value.shape, dtype=value.dtype, buffer=seg.buf)
+        arr[...] = value
+        self._adopt(ref, seg, arr)
+        return arr
+
+    def _adopt(self, ref: TileRef, seg, arr: np.ndarray) -> None:
+        with self._lock:
+            # replace in place — ``get`` is lock-free, so the key must
+            # never be absent during a rebind (a reader racing a
+            # duplicate-producer rebind sees the old or new buffer, both
+            # holding the same tile value)
+            old = self._segs.get(ref)
+            self._segs[ref] = seg
+            self._arrs[ref] = arr
+            if old is not None:
+                # rebind over a superseded version: release the old
+                # allocation's bytes (the exec/local.py drift fix)
+                self.cur -= old.size
+                self.freed += 1
+                _release_seg(old)
+            self.allocs += 1
+            self.cur += seg.size
+            self.peak = max(self.peak, self.cur)
+
+    def get(self, ref: TileRef) -> np.ndarray:
+        return self._arrs[ref]
+
+    def seg_of(self, ref: TileRef) -> Tuple[str, str]:
+        with self._lock:
+            return self._segs[ref].name, self._arrs[ref].dtype.str
+
+    def free(self, ref: TileRef) -> None:
+        with self._lock:
+            seg = self._segs.pop(ref, None)
+            self._arrs.pop(ref, None)
+            if seg is not None:
+                self.cur -= seg.size
+                self.freed += 1
+                _release_seg(seg)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"peak_buffer_bytes": self.peak,
+                    "cur_buffer_bytes": self.cur,
+                    "buffers_freed": self.freed,
+                    "buffers_alloc": self.allocs,
+                    "live_buffers": len(self._segs)}
+
+    def destroy(self) -> None:
+        with self._lock:
+            for seg in self._segs.values():
+                _release_seg(seg)
+            self._segs.clear()
+            self._arrs.clear()
+
+
+def _execute_task(t, arena: _NodeArena, leaf_nodes, dtypes,
+                  tile) -> Tuple[Optional[str], Optional[str]]:
+    """Run one task against the node arena; mirrors the per-task executor's
+    kernels exactly (bit-identity contract).  Returns the output buffer's
+    (segment name, dtype str)."""
+    k = t.kind
+    if k is TaskKind.CALLOC:
+        arena.alloc(t.out, t.out.shape, dtypes.get(t.payload, np.float64))
+        return arena.seg_of(t.out)
+    if k is TaskKind.TAKECOPY:
+        # gather to master: the tile already sits in the master node's
+        # arena (produced here or XFER'd in) — nothing to compute
+        return arena.seg_of(t.out)
+    if k in _CHAIN_KINDS:
+        ta, tb = matmul_flags(t.payload)
+        a = arena.get(t.ins[0])
+        b = arena.get(t.ins[1])
+        a = a.T if ta else a
+        b = b.T if tb else b
+        c = arena.get(t.out)
+        c += a @ b
+        return arena.seg_of(t.out)
+    if k is TaskKind.FILL:
+        node = leaf_nodes[t.payload]
+        rs = tile_slices(node.shape[0], tile[0])[t.out.i]
+        cs = tile_slices(node.shape[1], tile[1])[t.out.j]
+        val = leaf_slice(node, rs[0], rs[1], cs[0], cs[1])
+    elif k is TaskKind.ADD:
+        val = arena.get(t.ins[0]) + arena.get(t.ins[1])
+    elif k is TaskKind.SUB:
+        val = arena.get(t.ins[0]) - arena.get(t.ins[1])
+    elif k is TaskKind.EWMUL:
+        val = arena.get(t.ins[0]) * arena.get(t.ins[1])
+    elif k is TaskKind.SCALE:
+        kind, s = t.payload
+        val = apply_scale(kind, arena.get(t.ins[0]), s)
+    elif k is TaskKind.EWISE:
+        val = EWISE_FNS[t.payload](arena.get(t.ins[0]))
+    elif k is TaskKind.FUSED:
+        val = eval_fused(t.payload, [arena.get(r) for r in t.ins])
+    elif k is TaskKind.TRANSPOSE:
+        val = np.ascontiguousarray(arena.get(t.ins[0]).T)
+    else:       # pragma: no cover
+        raise ValueError(t.kind)
+    arena.store(t.out, val)
+    return arena.seg_of(t.out)
+
+
+def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
+                 dtypes, nthreads: int, prefix: str) -> None:
+    """One cluster node: a dispatch-queue loop feeding a thread pool of
+    ``nthreads`` compute slots, with tiles in this node's shm arena.
+    XFER copies run on the same pool, so they overlap in-flight compute."""
+    arena = _NodeArena(prefix, node)
+    pid = os.getpid()
+
+    def run_task(tid: int) -> None:
+        try:
+            seg, dt = _execute_task(g.tasks[tid], arena, leaf_nodes,
+                                    dtypes, tile)
+            outq.put(("done", node, tid, seg, dt, pid))
+        except BaseException:
+            outq.put(("error", node, tid, traceback.format_exc()))
+
+    def run_xfer(version: int, ref: TileRef, src_name: str,
+                 dtype_str: str) -> None:
+        try:
+            remote = _attach_shm(src_name)
+            try:
+                src = np.ndarray(ref.shape, dtype=np.dtype(dtype_str),
+                                 buffer=remote.buf)
+                arena.store(ref, src)
+            finally:
+                remote.close()
+            seg, dt = arena.seg_of(ref)
+            outq.put(("xfer_done", node, version, ref, seg, dt))
+        except BaseException:
+            outq.put(("error", node, None, traceback.format_exc()))
+
+    with ThreadPoolExecutor(max_workers=max(1, nthreads)) as pool:
+        while True:
+            msg = inq.get()
+            op = msg[0]
+            if op == "task":
+                pool.submit(run_task, msg[1])
+            elif op == "xfer":
+                pool.submit(run_xfer, msg[1], msg[2], msg[3], msg[4])
+            elif op == "free":
+                arena.free(msg[1])
+            elif op == "stop":
+                break
+    stats = arena.stats()
+    arena.destroy()
+    outq.put(("stats", node, stats, pid))
+
+
+class ClusterExecutor:
+    """Executes a planned tiled program across one process per cluster node,
+    honoring the HEFT schedule's per-task node placement.
+
+    ``workers_per_node`` overrides the per-node thread count (default:
+    ``spec.workers_at(node)``); ``free_buffers=False`` keeps every segment
+    alive until shutdown; ``mp_context`` picks the multiprocessing start
+    method (default ``fork`` where available — workers inherit the plan
+    instead of re-pickling it); ``timeout`` bounds each wait on worker
+    events so a dead worker raises instead of hanging.
+    """
+
+    def __init__(self, workers_per_node: Optional[int] = None,
+                 free_buffers: bool = True,
+                 mp_context: Optional[str] = None,
+                 timeout: float = 300.0):
+        self.workers_per_node = workers_per_node
+        self.free_buffers = free_buffers
+        self.mp_context = mp_context
+        self.timeout = timeout
+        self.stats: Dict[str, object] = {}
+
+    # -- driver --------------------------------------------------------------
+    def execute(self, plan) -> np.ndarray:
+        import multiprocessing as mp
+
+        g: TaskGraph = plan.program.graph
+        spec: Optional[ClusterSpec] = getattr(plan, "spec", None)
+        if spec is None:
+            raise ValueError("ClusterExecutor needs plan.spec "
+                             "(a ClusterSpec) to spawn node processes")
+        sched: Schedule = plan.schedule
+        node_of = {tid: p.node for tid, p in sched.placements.items()}
+        missing = [tid for tid in g.tasks if tid not in node_of]
+        if missing:
+            raise ValueError(f"schedule places {len(node_of)} tasks but the "
+                             f"graph has {len(g.tasks)}; unplaced: "
+                             f"{missing[:5]}")
+
+        method = self.mp_context or (
+            "fork" if "fork" in mp.get_all_start_methods() else "spawn")
+        ctx = mp.get_context(method)
+        prefix = f"cmm{os.getpid()}_{next(_RUN_IDS)}_"
+
+        # -- static dataflow: XFER endpoints, waiters, reader counts --------
+        xfer_by_producer: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
+        for (p, _src, dst, nbytes) in sched.xfers(g):
+            xfer_by_producer[p].append((dst, nbytes))
+        waiters: Dict[Tuple[int, int], List[int]] = defaultdict(list)
+        xfers_left: Dict[int, int] = defaultdict(int)
+        reads: Dict[Tuple[int, TileRef], int] = defaultdict(int)
+        for t in g:
+            n = node_of[t.tid]
+            for r in t.ins:
+                reads[(n, r)] += 1
+            if t.kind in _CHAIN_KINDS and t.out is not None:
+                reads[(n, t.out)] += 1
+            for p in t.preds:
+                if node_of[p] != n and edge_bytes(g, g.tasks[p], t) > 0:
+                    waiters[(p, n)].append(t.tid)
+                    xfers_left[t.tid] += 1
+        for p, dsts in xfer_by_producer.items():
+            reads[(node_of[p], g.tasks[p].out)] += len(dsts)
+        master_node = spec.master
+        for r in g.result_tiles:
+            reads[(master_node, r)] += 1
+
+        # -- spawn one worker process per node ------------------------------
+        outq = ctx.Queue()
+        inqs = [ctx.Queue() for _ in range(spec.n_nodes)]
+        procs = []
+        for n in range(spec.n_nodes):
+            nthreads = self.workers_per_node or spec.workers_at(n)
+            p = ctx.Process(
+                target=_node_worker,
+                args=(n, inqs[n], outq, g, plan.tile,
+                      plan.program.leaf_nodes, plan.program.dtypes,
+                      nthreads, prefix),
+                daemon=True)
+            p.start()
+            procs.append(p)
+
+        seg_info: Dict[Tuple[int, TileRef], Tuple[str, str]] = {}
+        exec_nodes: Dict[int, int] = {}
+        node_pids: Dict[int, int] = {}
+        deps_left = {t.tid: len(t.preds) for t in g}
+        dispatched = set()
+        counters = {"xfers": 0, "xfer_bytes": 0}
+
+        def dec_read(n: int, r: TileRef) -> None:
+            if not self.free_buffers:
+                return
+            key = (n, r)
+            c = reads.get(key)
+            if c is None:
+                return
+            if c <= 1:
+                del reads[key]
+                inqs[n].put(("free", r))
+            else:
+                reads[key] = c - 1
+
+        def maybe_dispatch(tid: int) -> None:
+            if tid in dispatched:
+                return
+            if deps_left[tid] == 0 and xfers_left[tid] == 0:
+                dispatched.add(tid)
+                inqs[node_of[tid]].put(("task", tid))
+
+        def next_event():
+            deadline = time.monotonic() + self.timeout
+            while True:
+                wait = min(10.0, max(0.1, deadline - time.monotonic()))
+                try:
+                    return outq.get(timeout=wait)
+                except _queue.Empty:
+                    dead = [i for i, p in enumerate(procs)
+                            if not p.is_alive()]
+                    if dead:
+                        raise RuntimeError(
+                            f"cluster worker process(es) {dead} died "
+                            f"(exit codes "
+                            f"{[procs[i].exitcode for i in dead]})")
+                    if time.monotonic() >= deadline:
+                        raise RuntimeError(
+                            f"cluster execution stalled: no worker event "
+                            f"within timeout={self.timeout}s")
+
+        total = len(g)
+        done = 0
+        try:
+            for t in g.sources():
+                maybe_dispatch(t.tid)
+            while done < total:
+                msg = next_event()
+                kind = msg[0]
+                if kind == "done":
+                    _, n, tid, seg, dt, pid = msg
+                    t = g.tasks[tid]
+                    if seg is not None and t.out is not None:
+                        seg_info[(n, t.out)] = (seg, dt)
+                    exec_nodes[tid] = n
+                    node_pids[n] = pid
+                    done += 1
+                    for (dst, nbytes) in xfer_by_producer.get(tid, ()):
+                        sname, sdt = seg_info[(n, t.out)]
+                        inqs[dst].put(("xfer", tid, t.out, sname, sdt))
+                        counters["xfers"] += 1
+                        counters["xfer_bytes"] += nbytes
+                    for s in sorted(t.succs):
+                        deps_left[s] -= 1
+                        maybe_dispatch(s)
+                    for r in t.ins:
+                        dec_read(n, r)
+                    if t.kind in _CHAIN_KINDS and t.out is not None:
+                        dec_read(n, t.out)
+                elif kind == "xfer_done":
+                    _, n, version, ref, seg, dt = msg
+                    seg_info[(n, ref)] = (seg, dt)
+                    dec_read(node_of[version], g.tasks[version].out)
+                    for s in waiters.pop((version, n), ()):
+                        xfers_left[s] -= 1
+                        maybe_dispatch(s)
+                elif kind == "error":
+                    raise RuntimeError(
+                        f"cluster task failed on node {msg[1]} "
+                        f"(task {msg[2]}):\n{msg[3]}")
+
+            # -- gather result tiles from the master node's arena ----------
+            vals: Dict[TileRef, np.ndarray] = {}
+            for r in g.result_tiles:
+                sname, dt = seg_info[(master_node, r)]
+                seg = _attach_shm(sname)
+                try:
+                    view = np.ndarray(r.shape, dtype=np.dtype(dt),
+                                      buffer=seg.buf)
+                    vals[r] = view.copy()
+                finally:
+                    seg.close()
+                dec_read(master_node, r)
+
+            # -- orderly shutdown + per-node stats --------------------------
+            node_stats: Dict[int, Dict[str, int]] = {}
+            for q in inqs:
+                q.put(("stop",))
+            while len(node_stats) < spec.n_nodes:
+                msg = next_event()
+                if msg[0] == "stats":
+                    node_stats[msg[1]] = msg[2]
+                    node_pids.setdefault(msg[1], msg[3])
+                elif msg[0] == "error":     # pragma: no cover
+                    raise RuntimeError(f"cluster worker error during "
+                                       f"shutdown:\n{msg[3]}")
+            for p in procs:
+                p.join(timeout=self.timeout)
+        except BaseException:
+            for p in procs:
+                if p.is_alive():
+                    p.terminate()
+            # best-effort unlink of segments the (terminated) workers own;
+            # tracker register/unregister are silenced — these names were
+            # registered by the workers' trackers, not the master's
+            from multiprocessing import resource_tracker, shared_memory
+            with _TRACK_LOCK:
+                orig = (resource_tracker.register,
+                        resource_tracker.unregister)
+                resource_tracker.register = lambda *a, **kw: None
+                resource_tracker.unregister = lambda *a, **kw: None
+                try:
+                    names = {sname for (sname, _dt) in seg_info.values()}
+                    if os.path.isdir("/dev/shm"):
+                        # segments allocated but not yet reported when the
+                        # workers were terminated are only findable by the
+                        # run's namespace prefix
+                        names.update(f for f in os.listdir("/dev/shm")
+                                     if f.startswith(prefix))
+                    for sname in names:
+                        try:
+                            _release_seg(
+                                shared_memory.SharedMemory(name=sname))
+                        except FileNotFoundError:
+                            pass
+                finally:
+                    (resource_tracker.register,
+                     resource_tracker.unregister) = orig
+            raise
+        finally:
+            for p in procs:
+                if p.is_alive():        # pragma: no cover
+                    p.terminate()
+                    p.join(timeout=5)
+
+        self.stats = {
+            "tasks_run": total,
+            "workers": sum(self.workers_per_node or spec.workers_at(n)
+                           for n in range(spec.n_nodes)),
+            "nodes": spec.n_nodes,
+            "xfers": counters["xfers"],
+            "xfer_bytes": counters["xfer_bytes"],
+            "peak_buffer_bytes": sum(s["peak_buffer_bytes"]
+                                     for s in node_stats.values()),
+            "cur_buffer_bytes": sum(s["cur_buffer_bytes"]
+                                    for s in node_stats.values()),
+            "buffers_freed": sum(s["buffers_freed"]
+                                 for s in node_stats.values()),
+            "exec_nodes": exec_nodes,
+            "node_pids": node_pids,
+        }
+        return assemble(vals, g.result_shape, plan.tile,
+                        g.result_tiles[0].tensor)
+
+
+#: unique per-execute() shm namespace within this master process
+_RUN_IDS = itertools.count()
+
+
+def predict_cluster_makespan(g: TaskGraph, sched: Schedule,
+                             spec: ClusterSpec, tm: TimeModel) -> float:
+    """Predicted wall-clock of the multi-process cluster executor.
+
+    Re-simulates the schedule with the machine model swapped to what this
+    backend actually pays: per-task process dispatch
+    (``tm.process_dispatch_overhead``) and shared-memory XFER transfers
+    (``tm.ipc_latency + bytes / tm.ipc_bandwidth``) instead of the network
+    link model.  The engine compares this against the per-task and
+    wave-batched predictions to pick ``executor="auto"``'s strategy.
+    """
+    from ..core.simulator import simulate
+    ipc_spec = replace(spec, link_bw=max(tm.ipc_bandwidth, 1.0),
+                       latency=max(tm.ipc_latency, 0.0), pair_bw=())
+    tm_proc = replace(tm, dispatch_overhead=tm.process_dispatch_overhead)
+    return simulate(g, sched, ipc_spec, tm_proc).makespan

@@ -54,7 +54,7 @@ class LocalExecutor:
             return self.workers
         spec = getattr(plan, "spec", None)
         if spec is not None:
-            return max(1, spec.n_nodes * spec.worker_procs)
+            return max(1, spec.total_workers())
         return os.cpu_count() or 4
 
     def execute(self, plan) -> np.ndarray:

@@ -207,3 +207,41 @@ def test_more_nodes_not_slower_on_parallel_graph():
         mk[nodes] = eng.plan(build()).predicted_makespan
     assert mk[2] < mk[1]
     assert mk[4] <= mk[2] * 1.05
+
+
+def test_heterogeneous_spec_slot_bounds_and_simulation():
+    """Unequal per-node worker counts: HEFT must only use slots that exist
+    on each node, and the simulator must respect the same capacities."""
+    from repro.core.machine import hetero_spec
+    from repro.core.simulator import simulate
+
+    spec = hetero_spec((3, 1, 2), slowdown=(1.0, 2.0, 1.3),
+                       link_bw=1e12, latency=1e-6)
+    assert [spec.workers_at(n) for n in range(3)] == [3, 1, 2]
+    assert spec.total_workers() == 6
+
+    tm = analytic_time_model()
+    A = CM.rand(64, 64, seed=0)
+    B = CM.rand(64, 64, seed=1)
+    C = CM.rand(64, 64, seed=2)
+    D = CM.rand(64, 64, seed=3)
+    eng = CMMEngine(spec, tm, tile=16, plan_cache=False)
+    plan = eng.plan((A @ B) + (C @ D))
+    g, sched = plan.program.graph, plan.schedule
+    for tid, p in sched.placements.items():
+        assert 0 <= p.slot < spec.workers_at(p.node), \
+            f"task {tid} on nonexistent slot {p.slot} of node {p.node}"
+    # concurrent occupancy in the simulation never exceeds a node's slots
+    sim = simulate(g, sched, spec, tm)
+    events = {}
+    for iv in sim.intervals:
+        if iv.slot < 0:          # calloc: async, occupies no worker slot
+            continue
+        events.setdefault(iv.node, []).append((iv.start, 1))
+        events.setdefault(iv.node, []).append((iv.end, -1))
+    for n, evs in events.items():
+        live = peak = 0
+        for _, d in sorted(evs, key=lambda e: (e[0], e[1])):
+            live += d
+            peak = max(peak, live)
+        assert peak <= spec.workers_at(n)
