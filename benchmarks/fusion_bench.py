@@ -121,8 +121,14 @@ def main(argv=None) -> int:
     ap.add_argument("-n", type=int, default=None)
     ap.add_argument("--tile", type=int, default=None)
     ap.add_argument("--reps", type=int, default=None)
-    ap.add_argument("--out", default="BENCH_fusion.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_fusion.json, or "
+                         "BENCH_fusion_smoke.json under --smoke so the CI "
+                         "gate never clobbers the published artifact)")
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = "BENCH_fusion_smoke.json" if args.smoke \
+            else "BENCH_fusion.json"
 
     n = args.n or (256 if args.smoke else 2048)
     tile = args.tile or (128 if args.smoke else 512)

@@ -139,8 +139,14 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CI sanity")
     ap.add_argument("--reps", type=int, default=None)
-    ap.add_argument("--out", default="BENCH_wave.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_wave.json, or "
+                         "BENCH_wave_smoke.json under --smoke so the CI "
+                         "gate never clobbers the published artifact)")
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = "BENCH_wave_smoke.json" if args.smoke \
+            else "BENCH_wave.json"
 
     reps = args.reps or (1 if args.smoke else 3)
     if args.smoke:

@@ -57,12 +57,22 @@ class Plan:
     #: prediction is actually consulted (``auto`` / ``best_*``) — plain
     #: ``plan()`` keeps the fast-path planning time.
     _cluster_pred: Optional[Callable[[], float]] = None
+    #: lazy churn-priced predictor for the elastic strategy (cluster
+    #: prediction + expected recovery cost under ``tm.node_mtbf``)
+    _elastic_pred: Optional[Callable[[], float]] = None
 
     @property
     def cluster_makespan(self) -> Optional[float]:
         """Predicted wall-clock of the multi-process cluster executor
         (None on single-node specs; computed on first access)."""
         return self._cluster_pred() if self._cluster_pred else None
+
+    @property
+    def elastic_makespan(self) -> Optional[float]:
+        """Expected wall-clock of the elastic cluster strategy once
+        node-failure risk is priced in (``churn_adjusted_makespan``;
+        equals ``cluster_makespan`` at the default ``node_mtbf=inf``)."""
+        return self._elastic_pred() if self._elastic_pred else None
 
     @property
     def predicted_makespan(self) -> float:
@@ -89,17 +99,41 @@ class Plan:
 
 
 def _memo_cluster_pred(g, sched, spec, tm) -> Callable[[], float]:
-    """One-shot memoized cluster-strategy predictor, shared by a cached
-    plan and every cache-hit copy so the extra simulation runs at most
-    once per planned structure."""
-    memo: Dict[str, float] = {}
+    """Memoized cluster-strategy predictor, shared by a cached plan and
+    every cache-hit copy so the extra simulation runs at most once per
+    planned structure — **keyed on the TimeModel state + spec**, so
+    recalibration (``profiler.calibrate_ipc`` mutates ``tm`` in place)
+    invalidates the cached verdict instead of returning a stale
+    makespan."""
+    memo: Dict[str, object] = {}
 
     def pred() -> float:
-        v = memo.get("v")
-        if v is None:
+        key = (tm.to_json(), spec)
+        if memo.get("k") != key:
             from ..exec.cluster import predict_cluster_makespan
-            v = memo["v"] = predict_cluster_makespan(g, sched, spec, tm)
-        return v
+            memo["k"] = key
+            memo["v"] = predict_cluster_makespan(g, sched, spec, tm)
+        return memo["v"]
+
+    return pred
+
+
+def _memo_elastic_pred(g, sched, spec, tm,
+                       cluster_pred: Callable[[], float]
+                       ) -> Callable[[], float]:
+    """Churn-priced twin of ``_memo_cluster_pred``: the cluster
+    prediction inflated by expected lineage-recovery cost under
+    ``tm.node_mtbf`` (same TimeModel-keyed invalidation)."""
+    memo: Dict[str, object] = {}
+
+    def pred() -> float:
+        key = (tm.to_json(), spec)
+        if memo.get("k") != key:
+            from .simulator import churn_adjusted_makespan
+            memo["k"] = key
+            memo["v"] = churn_adjusted_makespan(g, sched, spec, tm,
+                                                base=cluster_pred())
+        return memo["v"]
 
     return pred
 
@@ -113,13 +147,18 @@ class CMMEngine:
                  cache_aware: bool = True,
                  fuse: bool = True,
                  plan_cache: bool = True,
-                 fast_planning: bool = True):
+                 fast_planning: bool = True,
+                 elastic: bool = False):
         self.spec = spec or c5_9xlarge(1)
         self.timemodel = timemodel or analytic_time_model()
         self.tile = tile
         self.cache_aware = cache_aware
         self.fuse = fuse
         self.plan_cache = plan_cache
+        #: elastic runtime mode: multi-node execution goes through the
+        #: fault-tolerant ``"elastic"`` backend and ``auto`` selection
+        #: prices churn risk (``tm.node_mtbf``) into the cluster strategy
+        self.elastic = elastic
         #: memoized-cost + gap-timeline HEFT (identical schedules; see
         #: ``heft.heft_schedule(fast=...)``).  ``False`` restores the
         #: pre-fast-path planner for benchmarking.
@@ -160,8 +199,11 @@ class CMMEngine:
 
         key = None
         if self.plan_cache:
+            # the TimeModel fingerprint keys the cache too: in-place
+            # recalibration (calibrate_ipc/contention/...) must invalidate
+            # cached schedules + auto-selection verdicts, not replay them
             key = (structural_signature(root), tile, self.spec,
-                   self.cache_aware, fuse)
+                   self.cache_aware, fuse, self.timemodel.to_json())
             hit = self._plans.get(key)
             if hit is not None:
                 self.plan_cache_hits += 1
@@ -170,7 +212,8 @@ class CMMEngine:
                             time.perf_counter() - t0, spec=self.spec,
                             fusion=report, cache_hit=True, waves=hit.waves,
                             batched_makespan=hit.batched_makespan,
-                            _cluster_pred=hit._cluster_pred)
+                            _cluster_pred=hit._cluster_pred,
+                            _elastic_pred=hit._elastic_pred)
             self.plan_cache_misses += 1
 
         prog = tile_expression(root, tile)
@@ -190,13 +233,17 @@ class CMMEngine:
                                         self.timemodel, waves=waves,
                                         dtypes=prog.dtypes, cost=cost)
         cluster_pred = None
+        elastic_pred = None
         if self.spec.n_nodes > 1:
             # the multi-process strategy only exists for multi-node specs
             cluster_pred = _memo_cluster_pred(prog.graph, sched, self.spec,
                                               self.timemodel)
+            elastic_pred = _memo_elastic_pred(prog.graph, sched, self.spec,
+                                              self.timemodel, cluster_pred)
         plan = Plan(prog, sched, sim, tile, time.perf_counter() - t0,
                     spec=self.spec, fusion=report, waves=waves,
-                    batched_makespan=batched, _cluster_pred=cluster_pred)
+                    batched_makespan=batched, _cluster_pred=cluster_pred,
+                    _elastic_pred=elastic_pred)
         if key is not None:
             if len(self._plans) >= 128:      # bound cache growth (FIFO)
                 self._plans.pop(next(iter(self._plans)))
@@ -220,7 +267,8 @@ class CMMEngine:
         return Plan(p, plan.schedule, plan.sim, plan.tile, plan.plan_seconds,
                     spec=plan.spec, waves=plan.waves,
                     batched_makespan=plan.batched_makespan,
-                    _cluster_pred=plan._cluster_pred)
+                    _cluster_pred=plan._cluster_pred,
+                    _elastic_pred=plan._elastic_pred)
 
     def _default_tile(self, root: ClusteredMatrix) -> int:
         # paper finding: tile ~ n/2 is best for n=10k on 8 nodes (§3.3);
@@ -252,12 +300,20 @@ class CMMEngine:
           ``jax.vmap`` over the Pallas blocked GEMM;
         * ``"cluster"``        — one worker process per cluster node,
           HEFT node placements executed for real;
+        * ``"elastic"``        — the cluster backend under the elastic
+          control plane (membership, lineage recovery, re-planning);
         * ``"auto"``           — simulation-driven choice between the
-          per-task, wave-batched and cluster strategies for this plan.
+          per-task, wave-batched and cluster strategies for this plan
+          (churn-priced, and routed through ``"elastic"``, when the
+          engine runs with ``elastic=True``).
         """
         plan = plan or self.plan(root, tile=tile)
         if executor == "auto":
             executor = self.choose_executor(plan)
+        if executor == "elastic" and "timemodel" not in exec_kw:
+            # frontier re-planning inside the executor must price nodes
+            # with the same model the original schedule used
+            exec_kw["timemodel"] = self.timemodel
         from ..exec import make_executor
         ex = make_executor(executor, **exec_kw)
         out = ex.execute(plan)
@@ -270,8 +326,23 @@ class CMMEngine:
 
     def choose_executor(self, plan: Plan) -> str:
         """Per-plan executor strategy from predicted makespans (§3.3's
-        simulation-driven selection, extended to execution strategy)."""
-        return plan.best_executor
+        simulation-driven selection, extended to execution strategy).
+
+        Under ``elastic=True`` the multi-process strategy is priced at
+        its churn-adjusted makespan (expected lineage-recovery cost under
+        ``tm.node_mtbf``) and executed by the fault-tolerant backend —
+        an unreliable cluster can tip ``auto`` back to an in-process
+        strategy even when the pristine cluster prediction wins.
+        """
+        if not self.elastic:
+            return plan.best_executor
+        best, t = "local", plan.sim.makespan
+        if plan.batched_makespan is not None and plan.batched_makespan < t:
+            best, t = "batched", plan.batched_makespan
+        em = plan.elastic_makespan
+        if em is not None and em < t:
+            best, t = "elastic", em
+        return best
 
     def theoretical_speedup(self, root: ClusteredMatrix, tile=None,
                             n_nodes: Optional[int] = None) -> float:

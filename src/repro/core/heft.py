@@ -298,6 +298,10 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     timelines — same schedule, pre-fast-path planning time (kept as the
     benchmarking baseline).  ``cost`` lets the caller share one
     :class:`CostCache` across scheduling and simulation.
+
+    NOTE: ``replan_frontier`` mirrors this function's EFT-insertion
+    policy (tie-break epsilon, cache accounting, CALLOC duration) —
+    keep the two in sync when changing placement rules.
     """
     origin = _FILL_ORIGIN if fill_origin is None else fill_origin
     if cost is None:
@@ -319,13 +323,21 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     placements: Dict[int, Placement] = {}
     comms: List[CommEvent] = []
 
+    #: drained nodes (0 worker slots — evicted by the elastic runtime)
+    #: never receive placements
+    live_nodes = spec.alive_nodes()
+    if not live_nodes:
+        raise ValueError("cluster spec has no live nodes to schedule on")
+    if spec.master not in live_nodes:
+        raise ValueError("the master node is drained; cannot schedule")
+
     def allowed_nodes(t: Task) -> Sequence[int]:
         if t.kind is TaskKind.TAKECOPY:
             return (spec.master,)
         if t.kind is TaskKind.FILL and isinstance(t.payload, int):
             if origin.get(t.payload) == "master":
                 return (spec.master,)
-        return range(spec.n_nodes)
+        return live_nodes
 
     #: node -> {fill duration: estimated EFT}; a fill EFT estimate only
     #: changes when the node's timelines change, and a wave of consumers
@@ -454,6 +466,151 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     for tid in order_all:
         if tid not in placements:
             place_fill_on(tid, spec.master)
+
+    final_order = sorted(placements, key=lambda x: (placements[x].start, x))
+    makespan = max((p.finish for p in placements.values()), default=0.0)
+    return Schedule(placements, final_order, comms, makespan,
+                    cache.hits, cache.misses)
+
+
+def replan_frontier(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
+                    done: Mapping[int, Placement],
+                    frontier: Sequence[int],
+                    cache_aware: bool = True,
+                    fill_origin: Optional[Mapping[int, str]] = None,
+                    fast: bool = True,
+                    cost: Optional[CostCache] = None) -> Schedule:
+    """Incremental re-plan after a cluster-membership change.
+
+    The elastic runtime calls this on node death/join/straggle: ``done``
+    holds the placements that are immutable (tasks already completed or
+    already dispatched to a surviving node — they are copied into the
+    result verbatim), and ``frontier`` the not-yet-dispatched tasks that
+    may move.  Frontier tasks are re-ranked and re-placed with the normal
+    EFT insertion policy, but **only onto live nodes** of ``spec``
+    (``workers_at(n) > 0`` — a dead node is drained via
+    ``ClusterSpec.without_node``; a joined node appears via
+    ``with_node``).  Surviving nodes' slot timelines are seeded with the
+    fixed placements so new work packs around in-flight work.
+
+    Differences from full ``heft_schedule``, both deliberate: no lazy-fill
+    deferral (every frontier task is placed now — mid-run there is no
+    "first consumer still unknown") and no regenerated-fill cloning (the
+    task graph is never mutated while an executor is running it).
+
+    NOTE: the EFT-insertion core below (candidate-node loop, slot
+    earliest-gap search, 1e-15 tie-break, cache-aware comm accounting,
+    CALLOC's 1e-6 duration) intentionally mirrors ``heft_schedule`` —
+    any change to that policy there must be mirrored here, or static
+    plans and elastic re-plans will place tasks under different rules.
+    """
+    origin = fill_origin if fill_origin is not None else {}
+    if cost is None:
+        cost = CostCache(tm, spec) if fast else DirectCost(tm, spec)
+    live = spec.alive_nodes()
+    if not live:
+        raise ValueError("no live nodes to re-plan onto")
+    if spec.master not in live:
+        raise ValueError("the master node is drained; cannot re-plan")
+
+    frontier_set = set(frontier)
+    overlap = frontier_set & set(done)
+    if overlap:
+        raise ValueError(f"tasks both done and in the frontier: "
+                         f"{sorted(overlap)[:5]}")
+
+    rank = upward_rank(g, spec, tm, cost=cost)
+    order = sorted(frontier_set, key=lambda tid: (-rank[tid], tid))
+
+    timeline_cls = _GapTimeline if fast else _SlotTimeline
+    slots = {n: [timeline_cls() for _ in range(spec.workers_at(n))]
+             for n in live}
+
+    # seed surviving slot timelines with the immutable placements (merged
+    # per slot — placements accumulated across successive re-plans are
+    # disjoint by construction, but merging keeps seeding robust)
+    by_slot: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
+    for tid, p in done.items():
+        if p.node in slots and 0 <= p.slot < len(slots[p.node]) \
+                and p.finish > p.start:
+            by_slot.setdefault((p.node, p.slot), []).append(
+                (p.start, p.finish))
+    for (n, si), ivs in by_slot.items():
+        ivs.sort()
+        cur_s, cur_e = ivs[0]
+        merged = []
+        for (s, e) in ivs[1:]:
+            if s <= cur_e:
+                cur_e = max(cur_e, e)
+            else:
+                merged.append((cur_s, cur_e))
+                cur_s, cur_e = s, e
+        merged.append((cur_s, cur_e))
+        for (s, e) in merged:
+            slots[n][si].insert(s, e - s)
+
+    placements: Dict[int, Placement] = dict(done)
+    comms: List[CommEvent] = []
+    cache = NodeCache(spec.n_nodes)
+
+    def allowed(t: Task) -> Sequence[int]:
+        if t.kind is TaskKind.TAKECOPY:
+            return (spec.master,)
+        if t.kind is TaskKind.FILL and isinstance(t.payload, int):
+            if origin.get(t.payload) == "master":
+                return (spec.master,)
+        return live
+
+    def eval_on(t: Task, node: int, dur: float):
+        ready = 0.0
+        transfers = []
+        for p in t.preds:
+            pp = placements.get(p)
+            if pp is None:
+                raise ValueError(
+                    f"pred {p} of frontier task {t.tid} is neither done "
+                    f"nor already re-planned (frontier not closed)")
+            pt = g.tasks[p]
+            nbytes = edge_bytes(g, pt, t)
+            arr = pp.finish
+            if nbytes and pp.node != node:
+                key = (p, pt.out.tensor)
+                hit = cache_aware and cache.peek(node, key)
+                if not hit:
+                    arr = pp.finish + spec.comm_time(nbytes, pp.node, node)
+                transfers.append((p, pp.node, nbytes, hit))
+            ready = max(ready, arr)
+        best = None
+        for si, sl in enumerate(slots[node]):
+            st = sl.earliest(ready, dur)
+            if best is None or st + dur < best[0]:
+                best = (st + dur, si, st)
+        eft, si, st = best
+        return eft, si, st, transfers
+
+    for tid in order:
+        t = g.tasks[tid]
+        best = None
+        for node in allowed(t):
+            dur = (1e-6 if t.kind is TaskKind.CALLOC
+                   else cost.time(t, node))
+            eft, si, st, transfers = eval_on(t, node, dur)
+            if best is None or eft < best[0] - 1e-15 or \
+                    (abs(eft - best[0]) <= 1e-15 and node < best[1]):
+                best = (eft, node, si, st, transfers)
+        eft, node, si, st, transfers = best
+        slots[node][si].insert(st, eft - st)
+        placements[tid] = Placement(node, si, st, eft)
+        for (p, src, nbytes, hit) in transfers:
+            comms.append(CommEvent(p, tid, src, node, nbytes, hit))
+            if hit:
+                cache.hits += 1
+            else:
+                cache.misses += 1
+                if cache_aware:
+                    cache.put(node, (p, g.tasks[p].out.tensor), nbytes)
+        if t.out is not None:
+            cache.put(node, (tid, t.out.tensor), t.out.bytes)
 
     final_order = sorted(placements, key=lambda x: (placements[x].start, x))
     makespan = max((p.finish for p in placements.values()), default=0.0)

@@ -40,13 +40,23 @@ class ClusterSpec:
             else self.comm_procs_worker
 
     def workers_at(self, node: int) -> int:
-        """Compute slots on ``node`` (heterogeneous-aware)."""
+        """Compute slots on ``node`` (heterogeneous-aware).
+
+        A zero entry means the node is **drained** (evicted from the
+        cluster by the elastic runtime, ``without_node``): it holds no
+        compute slots and the scheduler must not place tasks there.
+        """
         if self.node_workers and node < len(self.node_workers):
-            return max(1, self.node_workers[node])
+            return max(0, self.node_workers[node])
         return self.worker_procs
 
     def total_workers(self) -> int:
         return sum(self.workers_at(n) for n in range(self.n_nodes))
+
+    def alive_nodes(self) -> Tuple[int, ...]:
+        """Nodes that still hold compute slots (not drained)."""
+        return tuple(n for n in range(self.n_nodes)
+                     if self.workers_at(n) > 0)
 
     def bandwidth(self, a: int, b: int) -> float:
         for (pa, pb), bw in self.pair_bw:
@@ -66,6 +76,48 @@ class ClusterSpec:
 
     def with_nodes(self, n: int) -> "ClusterSpec":
         return replace(self, n_nodes=n)
+
+    # -- membership deltas (elastic runtime) --------------------------------
+    def _all_workers(self) -> Tuple[int, ...]:
+        return tuple(self.workers_at(n) for n in range(self.n_nodes))
+
+    def _all_slowdowns(self) -> Tuple[float, ...]:
+        return tuple(self.node_slowdown(n) for n in range(self.n_nodes))
+
+    def without_node(self, node: int) -> "ClusterSpec":
+        """The spec after ``node`` leaves the cluster (dies or is evicted).
+
+        Node indices stay stable — the departed node is *drained* (zero
+        worker slots) rather than renumbered, so placements recorded
+        against the old spec remain addressable during recovery.
+        """
+        if node == self.master:
+            raise ValueError("cannot remove the master node")
+        if not 0 <= node < self.n_nodes:
+            raise ValueError(f"no node {node} in a {self.n_nodes}-node spec")
+        nw = list(self._all_workers())
+        nw[node] = 0
+        return replace(self, node_workers=tuple(nw))
+
+    def with_node(self, workers: Optional[int] = None,
+                  slowdown: float = 1.0) -> "ClusterSpec":
+        """The spec after a new node joins, appended at index
+        ``n_nodes`` with ``workers`` compute slots (default: the spec's
+        homogeneous ``worker_procs``)."""
+        w = self.worker_procs if workers is None else int(workers)
+        if w <= 0:
+            raise ValueError("a joining node needs at least one worker")
+        return replace(self, n_nodes=self.n_nodes + 1,
+                       node_workers=self._all_workers() + (w,),
+                       slowdown=self._all_slowdowns() + (float(slowdown),))
+
+    def with_slowdown(self, node: int, slowdown: float) -> "ClusterSpec":
+        """The spec with ``node``'s compute slowdown factor replaced —
+        how the elastic runtime re-prices an observed straggler before
+        re-planning the frontier."""
+        sd = list(self._all_slowdowns())
+        sd[node] = float(slowdown)
+        return replace(self, slowdown=tuple(sd))
 
     def zero_comm(self) -> "ClusterSpec":
         """Theoretical-speedup variant (§5.1): instantaneous communication."""

@@ -71,7 +71,7 @@ class SimResult:
         for iv in self.intervals:
             busy[iv.node] += iv.end - iv.start
         ms = max(self.makespan, 1e-12)
-        return {n: busy[n] / (self.spec.workers_at(n) * ms)
+        return {n: busy[n] / (max(1, self.spec.workers_at(n)) * ms)
                 for n in range(self.spec.n_nodes)}
 
     def comm_busy_seconds(self) -> float:
@@ -276,3 +276,55 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
     makespan = max((iv.end for iv in intervals), default=0.0)
     return SimResult(makespan, intervals, transfers_done,
                      cache.hits, cache.misses, spec)
+
+
+# -- churn pricing (elastic runtime) ----------------------------------------
+
+def predict_recovery_cost(g: TaskGraph, sched: Schedule, spec: ClusterSpec,
+                          tm: TimeModel, node: int,
+                          cost: Optional[CostCache] = None) -> float:
+    """Predicted wall-clock cost of losing ``node`` mid-run.
+
+    The elastic runtime recovers by lineage: every tile the dead node held
+    is recomputed from its producer subgraph on the survivors (no tile
+    data is checkpointed), so the dominant term is re-executing the tasks
+    HEFT had placed on ``node``.  A uniformly random failure time loses
+    half of that work in expectation; recomputation spreads over the
+    surviving compute slots.  ``tm.respawn_overhead`` adds the fixed
+    detection + re-plan + rewire cost of one recovery event.
+    """
+    surv = sum(spec.workers_at(k) for k in spec.alive_nodes() if k != node)
+    if surv <= 0:
+        return float("inf")
+    if cost is None:
+        cost = CostCache(tm, spec)
+    lost = sum(cost.time(g.tasks[tid], node)
+               for tid, p in sched.placements.items() if p.node == node)
+    return tm.respawn_overhead + 0.5 * lost / surv
+
+
+def churn_adjusted_makespan(g: TaskGraph, sched: Schedule, spec: ClusterSpec,
+                            tm: TimeModel, base: Optional[float] = None,
+                            cost: Optional[CostCache] = None) -> float:
+    """Expected makespan once node-failure risk is priced in.
+
+    ``base`` (default: the schedule's makespan) is inflated by, per
+    non-master node, the probability of losing that node during the run
+    (``base / tm.node_mtbf``, capped at 1) times its predicted recovery
+    cost.  With the default ``node_mtbf = inf`` this is exactly ``base``,
+    so pristine-cluster auto-selection is unchanged.
+    """
+    import math
+    base = sched.makespan if base is None else base
+    if not math.isfinite(tm.node_mtbf) or tm.node_mtbf <= 0:
+        return base
+    if cost is None:
+        cost = CostCache(tm, spec)
+    total = base
+    for node in spec.alive_nodes():
+        if node == spec.master:
+            continue
+        p_fail = min(1.0, base / tm.node_mtbf)
+        total += p_fail * predict_recovery_cost(g, sched, spec, tm, node,
+                                                cost=cost)
+    return total

@@ -120,6 +120,14 @@ class TimeModel:
     ipc_bandwidth: float = 2e9
     #: per-XFER message latency of the cluster executor, seconds
     ipc_latency: float = 2e-4
+    #: mean time between failures of one (non-master) node, seconds — the
+    #: churn model the elastic runtime prices ``auto`` selection with
+    #: (``simulator.churn_adjusted_makespan``).  ``inf`` = assume a
+    #: pristine cluster (the static executors' implicit assumption).
+    node_mtbf: float = float("inf")
+    #: fixed wall-clock cost of one recovery event, seconds: failure
+    #: detection (heartbeat patience) + frontier re-plan + respawn/rewire
+    respawn_overhead: float = 0.5
 
     def _model_time(self, task: Task) -> float:
         """Raw interpolation-model prediction for one task (no contention,
@@ -177,6 +185,10 @@ class TimeModel:
             "process_dispatch_overhead": self.process_dispatch_overhead,
             "ipc_bandwidth": self.ipc_bandwidth,
             "ipc_latency": self.ipc_latency,
+            # json emits inf as the (non-standard but round-tripping)
+            # Infinity literal; keep it explicit for readability
+            "node_mtbf": self.node_mtbf,
+            "respawn_overhead": self.respawn_overhead,
             "models": {k: {"family": m.family, "coef": m.coef.tolist()}
                        for k, m in self.models.items()},
         })
@@ -194,6 +206,8 @@ class TimeModel:
                                             5e-4),
             ipc_bandwidth=d.get("ipc_bandwidth", 2e9),
             ipc_latency=d.get("ipc_latency", 2e-4),
+            node_mtbf=d.get("node_mtbf", float("inf")),
+            respawn_overhead=d.get("respawn_overhead", 0.5),
         )
 
     def save(self, path: str):

@@ -11,6 +11,7 @@ from .batched import (WaveExecutor, build_waves,                # noqa: F401
                       predict_wave_makespan)
 from .cluster import (ClusterExecutor,                          # noqa: F401
                       predict_cluster_makespan)
+from .elastic import ChaosEvent, ElasticClusterExecutor         # noqa: F401
 
 #: executor name -> zero-arg-capable factory (kwargs forwarded verbatim)
 EXECUTORS: Dict[str, Callable] = {
@@ -24,6 +25,9 @@ EXECUTORS: Dict[str, Callable] = {
     "batched-pallas": lambda **kw: WaveExecutor(backend="pallas", **kw),
     # one process per ClusterSpec node, HEFT placements executed for real
     "cluster": ClusterExecutor,
+    # cluster execution under membership churn: heartbeats, lineage
+    # recovery, frontier re-planning, speculative straggler duplicates
+    "elastic": ElasticClusterExecutor,
 }
 
 

@@ -250,18 +250,45 @@ def _execute_task(t, arena: _NodeArena, leaf_nodes, dtypes,
 
 
 def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
-                 dtypes, nthreads: int, prefix: str) -> None:
+                 dtypes, nthreads: int, prefix: str,
+                 hb_interval: float = 0.0,
+                 blas_threads: Optional[int] = None) -> None:
     """One cluster node: a dispatch-queue loop feeding a thread pool of
     ``nthreads`` compute slots, with tiles in this node's shm arena.
-    XFER copies run on the same pool, so they overlap in-flight compute."""
+    XFER copies run on the same pool, so they overlap in-flight compute.
+
+    ``hb_interval > 0`` enables the elastic runtime's liveness protocol:
+    the worker emits ``("hb", node, pid)`` whenever the dispatch queue is
+    idle for that long, reports per-task service time in its ``done``
+    messages (straggler EWMA input), and honours a ``("throttle", s)``
+    op (fault-injection: make this node artificially slow).  XFER
+    failures are reported as recoverable ``xfer_fail`` events — a dead
+    source node's segment vanishing mid-copy must re-route, not crash.
+
+    ``blas_threads`` caps this process's BLAS pool (the machine model's
+    ``threads_per_worker``): without it one worker process can saturate
+    every host core through OpenBLAS threading, which hides the
+    process-level scaling the cluster model is about.
+    """
+    if blas_threads:
+        try:
+            import threadpoolctl
+            threadpoolctl.threadpool_limits(blas_threads)
+        except ImportError:             # pragma: no cover
+            pass
     arena = _NodeArena(prefix, node)
     pid = os.getpid()
+    throttle = [0.0]
 
     def run_task(tid: int) -> None:
         try:
+            t0 = time.perf_counter()
+            if throttle[0] > 0.0:
+                time.sleep(throttle[0])
             seg, dt = _execute_task(g.tasks[tid], arena, leaf_nodes,
                                     dtypes, tile)
-            outq.put(("done", node, tid, seg, dt, pid))
+            outq.put(("done", node, tid, seg, dt, pid,
+                      time.perf_counter() - t0))
         except BaseException:
             outq.put(("error", node, tid, traceback.format_exc()))
 
@@ -278,11 +305,19 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
             seg, dt = arena.seg_of(ref)
             outq.put(("xfer_done", node, version, ref, seg, dt))
         except BaseException:
-            outq.put(("error", node, None, traceback.format_exc()))
+            outq.put(("xfer_fail", node, version, ref,
+                      traceback.format_exc()))
 
     with ThreadPoolExecutor(max_workers=max(1, nthreads)) as pool:
         while True:
-            msg = inq.get()
+            if hb_interval > 0.0:
+                try:
+                    msg = inq.get(timeout=hb_interval)
+                except _queue.Empty:
+                    outq.put(("hb", node, pid))
+                    continue
+            else:
+                msg = inq.get()
             op = msg[0]
             if op == "task":
                 pool.submit(run_task, msg[1])
@@ -290,6 +325,8 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                 pool.submit(run_xfer, msg[1], msg[2], msg[3], msg[4])
             elif op == "free":
                 arena.free(msg[1])
+            elif op == "throttle":
+                throttle[0] = float(msg[1])
             elif op == "stop":
                 break
     stats = arena.stats()
@@ -434,7 +471,7 @@ class ClusterExecutor:
                 msg = next_event()
                 kind = msg[0]
                 if kind == "done":
-                    _, n, tid, seg, dt, pid = msg
+                    _, n, tid, seg, dt, pid, _dur = msg
                     t = g.tasks[tid]
                     if seg is not None and t.out is not None:
                         seg_info[(n, t.out)] = (seg, dt)
@@ -464,6 +501,12 @@ class ClusterExecutor:
                     raise RuntimeError(
                         f"cluster task failed on node {msg[1]} "
                         f"(task {msg[2]}):\n{msg[3]}")
+                elif kind == "xfer_fail":
+                    # static membership: an XFER can only fail if the run
+                    # is already broken — no re-route target exists
+                    raise RuntimeError(
+                        f"cluster XFER of {msg[3]} (version {msg[2]}) "
+                        f"failed on node {msg[1]}:\n{msg[4]}")
 
             # -- gather result tiles from the master node's arena ----------
             vals: Dict[TileRef, np.ndarray] = {}

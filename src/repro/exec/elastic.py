@@ -1,0 +1,865 @@
+"""Elastic fault-tolerant cluster executor: plan -> observe -> re-plan.
+
+``ClusterExecutor`` (exec/cluster.py) executes a HEFT schedule across one
+worker process per node, but the membership is frozen at plan time: a
+dead worker hangs the run and a node joining mid-run is invisible.  This
+backend is the paper's dynamic-cluster story made real — "automatic
+configuration of communication and worker processes ... automatically
+scale up for clusters of heterogeneous nodes" — implemented as a master
+control loop over three mechanisms:
+
+* **membership** (``runtime/membership.py``): workers heartbeat over
+  their queues; process exit or heartbeat staleness raises a DEATH
+  event, per-task service-time EWMAs raise STRAGGLE events (the
+  ``runtime/fault.py`` policy shapes applied at node granularity).
+
+* **lineage recovery** (numpywren-style): no tile data is ever
+  checkpointed.  Every tile is a deterministic function of the task
+  graph, so when a node dies the master resurrects exactly the completed
+  tasks whose output values were lost with it and are still needed —
+  computed as a closure over the producer subgraph — and re-executes
+  them on the survivors.
+
+* **incremental frontier re-planning** (``heft.replan_frontier``): on
+  death/join/straggle the not-yet-dispatched frontier is re-HEFTed
+  against the surviving (or augmented) ``ClusterSpec`` — completed and
+  in-flight placements stay fixed, dead nodes are drained
+  (``spec.without_node``), joined nodes appended (``spec.with_node``).
+
+Stragglers additionally get **speculative duplicate execution**: their
+in-flight tasks are duplicated onto healthy nodes, and the master's
+first-writer-wins bookkeeping keeps exactly one completion per task.
+Because every task kind is deterministic (same NumPy call on the same
+bits), duplicate and resurrected executions produce bit-identical
+tiles, so results under any failure/join/straggle interleaving are
+**bit-identical to** ``LocalExecutor`` — the repo's conformance bar —
+which the fault-injection tier (tests/test_elastic.py) asserts.
+
+Unlike the static executor's pre-computed transfer plan, the elastic
+master routes data dynamically: it tracks which *version* (producer
+task id) of each tile ref is bound in each node's arena, and requests a
+shared-memory XFER from a live holder whenever a dispatch-ready task is
+missing an input at its assigned node.  Writes to one ``(node, ref)``
+arena slot are serialised by a master-side write lock, so in-place
+accumulate chains can never race a transfer reading the same buffer.
+
+Fault injection for tests/benchmarks is first-class: ``ChaosEvent``\\ s
+fire on task-completion counts — SIGKILL a worker process, join a new
+node, throttle a node into a straggler — so churn is reproducible.
+"""
+from __future__ import annotations
+
+import os
+import queue as _queue
+import signal
+import time
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from ..core.graph import TaskGraph, TaskKind, TileRef
+from ..core.heft import Placement, Schedule, replan_frontier
+from ..core.lazy import Op
+from ..core.machine import ClusterSpec
+from ..core.timemodel import CostCache, TimeModel, analytic_time_model
+from ..core.tiling import assemble
+from ..runtime.membership import (DEATH, RECOVER, STRAGGLE,
+                                  MembershipConfig, MembershipService)
+from .cluster import _CHAIN_KINDS, _RUN_IDS, _attach_shm, _node_worker
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One injected membership change, fired when the master's completed-
+    task count first reaches ``after_done`` (deterministic trigger)."""
+
+    after_done: int
+    #: SIGKILL this node's worker process (master refuses its own node)
+    kill_node: Optional[int] = None
+    #: spawn + join a fresh node with this many worker threads
+    join_workers: Optional[int] = None
+    join_slowdown: float = 1.0
+    #: make this node sleep this long per task (manufactures a straggler)
+    throttle_node: Optional[int] = None
+    throttle_seconds: float = 0.0
+    #: bypass EWMA detection latency: raise STRAGGLE for this node now
+    flag_straggler: Optional[int] = None
+
+
+class ElasticClusterExecutor:
+    """Multi-process cluster executor that survives membership churn.
+
+    Same numerics and tile runtime as ``ClusterExecutor`` (one process
+    per node, shared-memory arenas, real XFER copies), plus the elastic
+    control plane described in the module docstring.  ``timemodel``
+    drives frontier re-planning (``CMMEngine.run`` injects its own);
+    ``membership`` tunes detection latency; ``chaos`` injects
+    failures/joins/stragglers for tests and the chaos benchmark;
+    ``respawn_dead=True`` additionally respawns a dead node's worker
+    (fresh process, empty arena) and re-admits it instead of draining
+    its slots.
+    """
+
+    def __init__(self, workers_per_node: Optional[int] = None,
+                 free_buffers: bool = True,
+                 mp_context: Optional[str] = None,
+                 timeout: float = 300.0,
+                 timemodel: Optional[TimeModel] = None,
+                 membership: Optional[MembershipConfig] = None,
+                 chaos: Sequence[ChaosEvent] = (),
+                 respawn_dead: bool = False,
+                 speculate: bool = True,
+                 gc_interval: int = 64,
+                 blas_threads: Optional[int] = None):
+        self.workers_per_node = workers_per_node
+        self.free_buffers = free_buffers
+        self.mp_context = mp_context
+        self.timeout = timeout
+        self.timemodel = timemodel
+        self.membership_cfg = membership
+        self.chaos = tuple(sorted(chaos, key=lambda c: c.after_done))
+        self.respawn_dead = respawn_dead
+        self.speculate = speculate
+        self.gc_interval = max(1, gc_interval)
+        #: per-worker BLAS thread cap (machine model: threads_per_worker);
+        #: None leaves the BLAS pool at its library default
+        self.blas_threads = blas_threads
+        self.stats: Dict[str, object] = {}
+
+    # -- setup helpers --------------------------------------------------------
+    def _derive_fill_origin(self, prog) -> Dict[int, str]:
+        """INPUT leaves live on the master, generated leaves fill locally
+        (mirrors ``CMMEngine._fill_origins`` without needing the root)."""
+        return {uid: ("master" if n.op is Op.INPUT else "local")
+                for uid, n in prog.leaf_nodes.items()}
+
+    def _spawn(self, node: int, nthreads: int):
+        """(Re)spawn the worker process for ``node`` under a fresh
+        incarnation: fresh queues (a SIGKILLed predecessor may have died
+        holding queue locks or with stale dispatches enqueued) and a
+        fresh arena namespace (so leftover segments of the dead
+        incarnation can never collide with new allocations)."""
+        inc = next(self._incarnations)
+        prefix = f"{self._prefix}i{inc}_"
+        inq, outq = self._ctx.Queue(), self._ctx.Queue()
+        p = self._ctx.Process(
+            target=_node_worker,
+            args=(node, inq, outq, self._g, self._tile, self._leaf_nodes,
+                  self._dtypes, nthreads, prefix,
+                  self._mcfg.heartbeat_interval_s, self.blas_threads),
+            daemon=True)
+        p.start()
+        self._procs[node] = p
+        self._inqs[node] = inq
+        self._outqs[node] = outq
+
+    # -- the run --------------------------------------------------------------
+    def execute(self, plan) -> np.ndarray:
+        import multiprocessing as mp
+
+        g: TaskGraph = plan.program.graph
+        spec: Optional[ClusterSpec] = getattr(plan, "spec", None)
+        if spec is None:
+            raise ValueError("ElasticClusterExecutor needs plan.spec")
+        sched: Schedule = plan.schedule
+        n_joins = sum(1 for c in self.chaos if c.join_workers is not None)
+        for c in self.chaos:
+            if c.kill_node is not None:
+                if c.kill_node == spec.master:
+                    raise ValueError("cannot kill the master node")
+                if not 0 <= c.kill_node < spec.n_nodes + n_joins:
+                    raise ValueError(
+                        f"kill_node={c.kill_node} is outside the "
+                        f"{spec.n_nodes}-node spec (+{n_joins} joins)")
+            if c.join_workers is not None and c.join_workers <= 0:
+                raise ValueError("join needs at least one worker")
+
+        tm = self.timemodel or analytic_time_model()
+        self._mcfg = self.membership_cfg or MembershipConfig()
+        method = self.mp_context or (
+            "fork" if "fork" in mp.get_all_start_methods() else "spawn")
+        self._ctx = mp.get_context(method)
+        self._prefix = f"cmm{os.getpid()}_{next(_RUN_IDS)}e"
+        self._incarnations = iter(range(1 << 30))
+        self._g, self._tile = g, plan.tile
+        self._leaf_nodes = plan.program.leaf_nodes
+        self._dtypes = plan.program.dtypes
+        origin = self._derive_fill_origin(plan.program)
+
+        # -- value-version canonicalisation ---------------------------------
+        # the scheduler may splice in regenerated-fill clones: several FILL
+        # task ids producing the SAME tile from the same leaf payload.
+        # Their outputs are bit-identical by construction, so version
+        # bookkeeping treats each group as one canonical version (else a
+        # value-equal rebind looks like a lost value and triggers a
+        # needless lineage recovery).
+        canon: Dict[int, int] = {}
+        vgroup: Dict[int, Tuple[int, ...]] = {}
+        fill_groups: Dict[Tuple[object, TileRef], List[int]] = \
+            defaultdict(list)
+        for t in g:
+            if t.kind is TaskKind.FILL and t.out is not None:
+                fill_groups[(t.payload, t.out)].append(t.tid)
+        for members in fill_groups.values():
+            c = min(members)
+            for m in members:
+                canon[m] = c
+            vgroup[c] = tuple(sorted(members))
+
+        def canon_of(tid: int) -> int:
+            return canon.get(tid, tid)
+
+        # -- static dataflow: data needs (ref, producer-version) per task --
+        needs: Dict[int, List[Tuple[TileRef, int]]] = defaultdict(list)
+        for t in g:
+            for p in sorted(t.preds):
+                po = g.tasks[p].out
+                if po is None:
+                    continue
+                if po in t.ins or (t.out is not None and po == t.out):
+                    needs[t.tid].append((po, canon_of(p)))
+
+        # -- mutable control-plane state ------------------------------------
+        cur_spec = spec
+        master = spec.master
+        assigned = {tid: p.node for tid, p in sched.placements.items()}
+        missing = [tid for tid in g.tasks if tid not in assigned]
+        if missing:
+            raise ValueError(f"schedule misses placements for "
+                             f"{missing[:5]}")
+        cur_place: Dict[int, Placement] = dict(sched.placements)
+        deps_left = {t.tid: len(t.preds) for t in g}
+        completed: Set[int] = set()
+        dispatched: Dict[int, Set[int]] = defaultdict(set)
+        exec_nodes: Dict[int, int] = {}
+        node_pids: Dict[int, int] = {}
+        #: (node, ref) -> (version tid, segment name, dtype str): the
+        #: master's view of every worker arena binding
+        avail: Dict[Tuple[int, TileRef], Tuple[int, str, str]] = {}
+        write_busy: Set[Tuple[int, TileRef]] = set()
+        src_busy: Dict[Tuple[int, TileRef], int] = defaultdict(int)
+        xfer_inflight: Dict[Tuple[int, TileRef], Tuple[int, int]] = {}
+        xfer_retries: Dict[Tuple[int, int], int] = defaultdict(int)
+        spec_pending: Dict[int, int] = {}        # speculative node per tid
+        ready: Set[int] = {t.tid for t in g.sources()}
+        #: the sweep is O(tasks), so its cadence scales with graph size:
+        #: at most ~8 periodic sweeps per run (replans add their own) —
+        #: peak arena memory traded against master-loop dispatch latency
+        gc_every = max(self.gc_interval, len(g) // 8)
+        #: dispatched-not-done instances per node: dispatch is LATE-BOUND
+        #: (a node's queue holds at most ~2x its slots) so most of the
+        #: graph stays in the replannable frontier — a flooded queue
+        #: would pin work to a node the moment it became ready and leave
+        #: a joining node nothing to take over
+        inflight: Dict[int, int] = defaultdict(int)
+
+        def depth_cap(node: int) -> int:
+            return 2 * max(1, cur_spec.workers_at(node)) + 1
+        fired = [False] * len(self.chaos)
+        cnt = defaultdict(int)
+        recovery_seconds = [0.0]
+        total = len(g)
+
+        ms = MembershipService(range(spec.n_nodes), master=master,
+                               cfg=self._mcfg)
+        # start the resource tracker BEFORE forking workers so every
+        # worker shares this process's tracker: a SIGKILLed worker's
+        # segment registrations then land where the master's post-mortem
+        # unregister (see _reap_segments) can retract them — otherwise
+        # each worker lazily spawns its own tracker, which outlives the
+        # kill and warns about "leaked" segments the master already reaped
+        from multiprocessing import resource_tracker
+        resource_tracker.ensure_running()
+        self._procs: Dict[int, object] = {}
+        self._inqs: Dict[int, object] = {}
+        self._outqs: Dict[int, object] = {}
+        for n in range(spec.n_nodes):
+            self._spawn(n, self.workers_per_node or spec.workers_at(n))
+
+        # -- control-plane actions ------------------------------------------
+        def alive(n: int) -> bool:
+            return ms.is_alive(n)
+
+        def pick_holder(version: int, ref: TileRef) -> Optional[int]:
+            """Deterministic live holder of this tile version whose copy
+            is safe to read (no in-progress write on that arena slot)."""
+            for k in ms.alive_nodes():
+                ent = avail.get((k, ref))
+                if ent is not None and ent[0] == version \
+                        and (k, ref) not in write_busy:
+                    return k
+            return None
+
+        def value_secured(v: int) -> bool:
+            """Is canonical version ``v`` guaranteed to (re)appear without
+            intervention?  Bound in a live arena (even mid-write), being
+            produced by a live in-flight instance, or owed by a group
+            member that has not run yet."""
+            ref = g.tasks[v].out
+            if ref is None:
+                return True
+            if any(avail.get((k, ref), (None,))[0] == v
+                   for k in ms.alive_nodes()):
+                return True
+            for m in vgroup.get(v, (v,)):
+                if m not in completed:
+                    return True
+                if any(alive(k) for k in dispatched[m]):
+                    return True
+            return False
+
+        def try_dispatch(tid: int, node: int,
+                         prefetch_only: bool = False) -> bool:
+            """Dispatch one instance of ``tid`` on ``node`` if its inputs
+            are bound there; otherwise request the missing XFERs.  Every
+            write to a (node, ref) arena slot is exclusive.
+            ``prefetch_only`` stages inputs without dispatching (used for
+            tasks beyond the node's in-flight depth cap)."""
+            t = g.tasks[tid]
+            waiting = False
+            for (ref, p) in needs[tid]:
+                ent = avail.get((node, ref))
+                if ent is not None and ent[0] == p:
+                    continue
+                waiting = True
+                if (node, ref) in write_busy:
+                    continue                  # a write is already in flight
+                holder = pick_holder(p, ref)
+                if holder is None or holder == node:
+                    if not value_secured(p):
+                        # value lost outside a death event (defensive):
+                        # recover it through the normal lineage path.
+                        # (a merely write-busy holder is NOT lost — the
+                        # copy becomes readable when its write completes)
+                        replan({p})
+                        return False
+                    continue                  # value not yet obtainable
+                sname, sdt = avail[(holder, ref)][1], avail[(holder, ref)][2]
+                self._inqs[node].put(("xfer", p, ref, sname, sdt))
+                write_busy.add((node, ref))
+                xfer_inflight[(node, ref)] = (p, holder)
+                src_busy[(holder, ref)] += 1
+                cnt["xfers"] += 1
+                cnt["xfer_bytes"] += ref.bytes
+            if waiting or prefetch_only:
+                return False
+            if t.out is not None:
+                if (node, t.out) in write_busy:
+                    return False
+                if t.kind in _CHAIN_KINDS and \
+                        src_busy.get((node, t.out), 0) > 0:
+                    return False              # an XFER is reading the chain
+                write_busy.add((node, t.out))
+            self._inqs[node].put(("task", tid))
+            dispatched[tid].add(node)
+            inflight[node] += 1
+            return True
+
+        def scan_dispatch() -> None:
+            for tid in sorted(ready):
+                if tid in completed or dispatched[tid]:
+                    ready.discard(tid)        # an instance beat us to it
+                    continue
+                node = assigned[tid]
+                if not alive(node):
+                    continue                  # replan is imminent
+                over = inflight[node] >= depth_cap(node)
+                if try_dispatch(tid, node, prefetch_only=over):
+                    ready.discard(tid)
+            for tid in sorted(spec_pending):
+                node = spec_pending[tid]
+                if tid in completed or not alive(node):
+                    spec_pending.pop(tid, None)
+                    continue
+                if node in dispatched[tid]:
+                    continue
+                if inflight[node] >= depth_cap(node):
+                    continue
+                if try_dispatch(tid, node):
+                    cnt["speculated"] += 1
+
+        def run_gc() -> None:
+            """Mark-and-sweep over arena bindings: a (node, ref) binding
+            stays only while some not-completed task still needs that
+            version, a write/XFER is touching it, or it backs an
+            ungathered result tile.  Lineage makes over-freeing safe but
+            expensive — this never frees a value the current plan reads."""
+            if not self.free_buffers:
+                return
+            live_nodes = set(ms.alive_nodes())
+            keep: Set[Tuple[int, TileRef]] = set(write_busy)
+            for (dst, ref), (_v, src) in xfer_inflight.items():
+                keep.add((dst, ref))
+                keep.add((src, ref))
+            for t in g:
+                # a completed task may still have a LOSING duplicate
+                # instance in flight (first-writer-wins): its inputs at
+                # that node must survive until the instance reports, or
+                # the worker's arena lookup explodes mid-execution
+                if t.tid in completed and not dispatched[t.tid]:
+                    continue
+                for (ref, p) in needs[t.tid]:
+                    for k in live_nodes:
+                        ent = avail.get((k, ref))
+                        if ent is not None and ent[0] == p:
+                            keep.add((k, ref))
+                for n in dispatched[t.tid]:
+                    if t.out is not None:
+                        keep.add((n, t.out))
+            for r in g.result_tiles:
+                for k in live_nodes:
+                    if (k, r) in avail:
+                        keep.add((k, r))
+            for key in [k for k in avail if k not in keep]:
+                n, ref = key
+                del avail[key]
+                if alive(n):
+                    self._inqs[n].put(("free", ref))
+                    cnt["frees"] += 1
+
+        def replan(resurrect_seed: Set[int] = frozenset()) -> None:
+            """Resurrection closure + incremental frontier re-plan —
+            the observe->re-plan half of the loop, run on every
+            membership event (and on a detected lost value)."""
+            t0 = time.perf_counter()
+            resurrected: Set[int] = set()
+
+            def ensure(v: int) -> None:
+                """Canonical version ``v`` must be obtainable: if every
+                producer ran and no live copy/instance remains, the
+                canonical producer is resurrected — and its own inputs
+                secured transitively (the lineage closure)."""
+                if v in resurrected or value_secured(v):
+                    return
+                completed.discard(v)
+                resurrected.add(v)
+                for (_ref, q) in needs[v]:
+                    ensure(q)
+
+            for v in sorted(resurrect_seed):
+                ensure(v)
+            for tid in [t.tid for t in g if t.tid not in completed]:
+                for (_ref, p) in needs[tid]:
+                    ensure(p)
+            cnt["recovered_tasks"] += len(resurrected)
+
+            for tid in g.tasks:
+                if tid not in completed:
+                    deps_left[tid] = sum(1 for p in g.tasks[tid].preds
+                                         if p not in completed)
+            live_disp = {tid for tid, insts in dispatched.items()
+                         if tid not in completed
+                         and any(alive(k) for k in insts)}
+            frontier = [tid for tid in g.tasks
+                        if tid not in completed and tid not in live_disp]
+            done_pl: Dict[int, Placement] = {}
+            for tid in g.tasks:
+                if tid in completed or tid in live_disp:
+                    p = cur_place[tid]
+                    out = g.tasks[tid].out
+                    if tid in completed and out is not None \
+                            and not alive(p.node):
+                        holder = pick_holder(canon_of(tid), out)
+                        if holder is not None:
+                            p = Placement(holder, 0, p.start, p.finish)
+                    done_pl[tid] = p
+            if frontier:
+                new_sched = replan_frontier(
+                    g, cur_spec, tm, done_pl, frontier,
+                    fill_origin=origin, cost=CostCache(tm, cur_spec))
+                for tid in frontier:
+                    cur_place[tid] = new_sched.placements[tid]
+                    assigned[tid] = new_sched.placements[tid].node
+            ready.clear()
+            ready.update(tid for tid in frontier if deps_left[tid] == 0)
+            cnt["replans"] += 1
+            run_gc()
+            recovery_seconds[0] += time.perf_counter() - t0
+
+        def on_death(n: int) -> None:
+            nonlocal cur_spec
+            cnt["deaths"] += 1
+            survivors = ms.alive_nodes()
+            if not self.respawn_dead and \
+                    len(survivors) < self._mcfg.min_nodes:
+                raise RuntimeError(
+                    f"node {n} died leaving {len(survivors)} node(s), "
+                    f"below the configured floor "
+                    f"min_nodes={self._mcfg.min_nodes}; aborting the run")
+            proc = self._procs.get(n)
+            if proc is not None and proc.is_alive():
+                proc.terminate()
+            # the master's view of node n is gone: arena bindings, write
+            # locks, transfers to/from it
+            for key in [k for k in avail if k[0] == n]:
+                del avail[key]
+            for key in [k for k in write_busy if k[0] == n]:
+                write_busy.discard(key)
+            for key in [k for k in src_busy if k[0] == n]:
+                del src_busy[key]
+            for (dst, ref) in list(xfer_inflight):
+                ver, src = xfer_inflight[(dst, ref)]
+                if dst == n:
+                    del xfer_inflight[(dst, ref)]
+                    if (src, ref) in src_busy:
+                        src_busy[(src, ref)] -= 1
+                # src == n: the destination worker reports xfer_fail and
+                # the retry path re-routes from a surviving holder
+            for tid in list(dispatched):
+                dispatched[tid].discard(n)
+            inflight[n] = 0
+            for tid in [t for t, k in spec_pending.items() if k == n]:
+                del spec_pending[tid]
+            self._reap_segments(n)
+            self._procs[n] = None
+            self._inqs[n] = None
+            self._outqs[n] = None
+            if self.respawn_dead:
+                self._spawn(n, self.workers_per_node
+                            or cur_spec.workers_at(n))
+                ms.add_node(n)
+                cnt["respawns"] += 1
+            else:
+                cur_spec = cur_spec.without_node(n)
+            replan()
+
+        def on_join(workers: int, slowdown: float) -> None:
+            nonlocal cur_spec
+            node = cur_spec.n_nodes
+            cur_spec = cur_spec.with_node(workers, slowdown)
+            base_slowdown[node] = float(slowdown)
+            self._spawn(node, self.workers_per_node or workers)
+            ms.add_node(node)
+            cnt["joins"] += 1
+            replan()
+
+        #: each node's un-penalised slowdown, for idempotent straggler
+        #: re-pricing (bump to base*factor, restore to base on recovery
+        #: — never compound across repeated STRAGGLE events)
+        base_slowdown = {n: spec.node_slowdown(n)
+                         for n in range(spec.n_nodes)}
+
+        def on_straggle(n: int) -> None:
+            nonlocal cur_spec
+            cnt["straggles"] += 1
+            if self.speculate:
+                others = [k for k in ms.alive_nodes() if k != n]
+                if others:
+                    load = {k: sum(1 for s in dispatched.values()
+                                   if k in s) for k in others}
+                    for tid in sorted(t for t, insts in dispatched.items()
+                                      if n in insts and t not in completed):
+                        if g.tasks[tid].kind is TaskKind.TAKECOPY:
+                            continue          # pinned to the master
+                        tgt = min(others, key=lambda k: (load[k], k))
+                        spec_pending[tid] = tgt
+                        load[tgt] += 1
+            # reprice the straggler so the frontier drains away from it
+            cur_spec = cur_spec.with_slowdown(
+                n, base_slowdown.get(n, 1.0) * self._mcfg.straggler_factor)
+            replan()
+
+        def on_recover(n: int) -> None:
+            nonlocal cur_spec
+            if not alive(n):
+                return
+            cnt["recoveries"] += 1
+            cur_spec = cur_spec.with_slowdown(n, base_slowdown.get(n, 1.0))
+            replan()
+
+        def fire_chaos() -> None:
+            for i, c in enumerate(self.chaos):
+                if fired[i] or len(completed) < c.after_done:
+                    continue
+                if c.kill_node is not None:
+                    proc = self._procs.get(c.kill_node)
+                    if proc is None or not proc.pid:
+                        # target not spawned yet (kill of a node whose
+                        # join has not fired) — stay armed, retry on the
+                        # next completion instead of dropping the kill
+                        continue
+                fired[i] = True
+                if c.kill_node is not None:
+                    proc = self._procs.get(c.kill_node)
+                    if proc is not None and proc.pid:
+                        os.kill(proc.pid, signal.SIGKILL)
+                if c.throttle_node is not None \
+                        and alive(c.throttle_node):
+                    self._inqs[c.throttle_node].put(
+                        ("throttle", c.throttle_seconds))
+                if c.join_workers is not None:
+                    on_join(c.join_workers, c.join_slowdown)
+                if c.flag_straggler is not None \
+                        and alive(c.flag_straggler):
+                    on_straggle(c.flag_straggler)
+
+        def handle(msg) -> bool:
+            """Process one worker message; returns True when it counts
+            as forward progress (heartbeats do NOT — a wedged run with
+            idle-but-alive workers must still trip the stall watchdog)."""
+            kind = msg[0]
+            if kind == "done":
+                _, n, tid, seg, dt, pid, dur = msg
+                ms.record_task(n, dur)
+                node_pids[n] = pid
+                t = g.tasks[tid]
+                if t.out is not None:
+                    write_busy.discard((n, t.out))
+                    if seg is not None:
+                        avail[(n, t.out)] = (canon_of(tid), seg, dt)
+                dispatched[tid].discard(n)
+                inflight[n] -= 1
+                if tid in completed:
+                    cnt["dup_done"] += 1      # first-writer-wins: a late
+                    return True               # duplicate only adds a copy
+                completed.add(tid)
+                exec_nodes[tid] = n
+                if spec_pending.pop(tid, None) == n:
+                    cnt["spec_wins"] += 1
+                for s in sorted(t.succs):
+                    deps_left[s] -= 1
+                    if deps_left[s] == 0 and s not in completed \
+                            and not dispatched[s]:
+                        ready.add(s)
+                if len(completed) % gc_every == 0:
+                    run_gc()
+                fire_chaos()
+            elif kind == "xfer_done":
+                _, n, version, ref, seg, dt = msg
+                write_busy.discard((n, ref))
+                ent = xfer_inflight.pop((n, ref), None)
+                if ent is not None and (ent[1], ref) in src_busy:
+                    src_busy[(ent[1], ref)] -= 1
+                avail[(n, ref)] = (version, seg, dt)
+            elif kind == "xfer_fail":
+                _, n, version, ref, tb = msg
+                write_busy.discard((n, ref))
+                ent = xfer_inflight.pop((n, ref), None)
+                if ent is not None and (ent[1], ref) in src_busy:
+                    src_busy[(ent[1], ref)] -= 1
+                xfer_retries[(version, n)] += 1
+                cnt["xfer_retries"] += 1
+                if xfer_retries[(version, n)] > 8:
+                    raise RuntimeError(
+                        f"XFER of {ref} (version {version}) to node {n} "
+                        f"failed {xfer_retries[(version, n)]} times:\n{tb}")
+            elif kind == "hb":
+                ms.heartbeat(msg[1])
+                node_pids.setdefault(msg[1], msg[2])
+                return False
+            elif kind == "error":
+                if msg[2] in completed:
+                    # a losing duplicate instance crashed after the
+                    # winner already produced the value — the run does
+                    # not depend on it
+                    lt = g.tasks[msg[2]]
+                    if lt.out is not None:
+                        write_busy.discard((msg[1], lt.out))
+                    dispatched[msg[2]].discard(msg[1])
+                    inflight[msg[1]] -= 1
+                    cnt["dup_errors"] += 1
+                    return True
+                raise RuntimeError(
+                    f"elastic task failed on node {msg[1]} "
+                    f"(task {msg[2]}):\n{msg[3]}")
+            elif kind == "stats":
+                self._node_stats[msg[1]] = msg[2]
+            return True
+
+        # -- master event loop ----------------------------------------------
+        self._node_stats: Dict[int, Dict[str, int]] = {}
+        last_progress = time.monotonic()
+
+        def wait_for_events(timeout: float) -> None:
+            """Block on the live workers' queue pipes (not a sleep poll —
+            a timer-sleeping master loses its sleeper credit and gets
+            starved for 100ms+ once workers oversubscribe the host,
+            which turns every dispatch round trip into idle worker
+            time).  Falls back to a short sleep if the queue internals
+            are unavailable."""
+            conns = []
+            for n in ms.alive_nodes():
+                q = self._outqs.get(n)
+                r = getattr(q, "_reader", None) if q is not None else None
+                if r is not None:
+                    conns.append(r)
+            if not conns:
+                time.sleep(0.002)
+                return
+            try:
+                from multiprocessing.connection import wait as conn_wait
+                conn_wait(conns, timeout)
+            except OSError:             # pragma: no cover — racing a death
+                time.sleep(0.002)
+
+        try:
+            fire_chaos()                      # after_done=0 chaos
+            scan_dispatch()
+            while len(completed) < total:
+                processed = 0
+                for n in list(ms.alive_nodes()):
+                    q = self._outqs.get(n)
+                    if q is None:
+                        continue
+                    for _ in range(256):
+                        try:
+                            msg = q.get_nowait()
+                        except _queue.Empty:
+                            break
+                        if handle(msg):
+                            processed += 1
+                liveness = {n: self._procs[n].is_alive()
+                            for n in ms.alive_nodes()
+                            if self._procs.get(n) is not None}
+                for ev in ms.poll(liveness):
+                    processed += 1
+                    if ev.kind == DEATH:
+                        on_death(ev.node)
+                    elif ev.kind == STRAGGLE:
+                        on_straggle(ev.node)
+                    elif ev.kind == RECOVER:
+                        on_recover(ev.node)
+                scan_dispatch()
+                now = time.monotonic()
+                if processed:
+                    last_progress = now
+                elif now - last_progress > self.timeout:
+                    raise RuntimeError(
+                        f"elastic execution stalled: no progress within "
+                        f"timeout={self.timeout}s "
+                        f"({len(completed)}/{total} tasks, "
+                        f"ready={sorted(ready)[:8]})")
+                else:
+                    wait_for_events(0.05)
+
+            # -- gather result tiles from the master node -------------------
+            vals: Dict[TileRef, np.ndarray] = {}
+            for r in g.result_tiles:
+                ent = avail.get((master, r))
+                if ent is None:       # pragma: no cover — takecopy pins
+                    raise RuntimeError(f"result tile {r} missing from "
+                                       f"the master arena")
+                seg = _attach_shm(ent[1])
+                try:
+                    view = np.ndarray(r.shape, dtype=np.dtype(ent[2]),
+                                      buffer=seg.buf)
+                    vals[r] = view.copy()
+                finally:
+                    seg.close()
+
+            # -- release every remaining binding before shutdown ------------
+            if self.free_buffers:
+                for (n, ref) in list(avail):
+                    del avail[(n, ref)]
+                    if alive(n) and self._inqs.get(n) is not None:
+                        self._inqs[n].put(("free", ref))
+
+            # -- orderly shutdown + per-node stats --------------------------
+            expect = [n for n in ms.alive_nodes()
+                      if self._inqs.get(n) is not None]
+            for n in expect:
+                self._inqs[n].put(("stop",))
+            deadline = time.monotonic() + min(self.timeout, 30.0)
+            while len(self._node_stats) < len(expect) \
+                    and time.monotonic() < deadline:
+                got = False
+                for n in expect:
+                    try:
+                        msg = self._outqs[n].get_nowait()
+                    except _queue.Empty:
+                        continue
+                    if msg[0] == "stats":
+                        self._node_stats[msg[1]] = msg[2]
+                        node_pids.setdefault(msg[1], msg[3])
+                    got = True
+                if not got:
+                    time.sleep(0.005)
+            for n in expect:
+                p = self._procs.get(n)
+                if p is not None:
+                    p.join(timeout=5)
+        except BaseException:
+            self._terminate_all()
+            raise
+        finally:
+            for p in self._procs.values():
+                if p is not None and p.is_alive():    # pragma: no cover
+                    p.terminate()
+                    p.join(timeout=5)
+
+        self.stats = {
+            "tasks_run": total,
+            "nodes_initial": spec.n_nodes,
+            "nodes_final": len(ms.alive_nodes()),
+            "workers": sum(cur_spec.workers_at(n)
+                           for n in cur_spec.alive_nodes()),
+            "exec_nodes": exec_nodes,
+            "node_pids": node_pids,
+            "deaths": cnt["deaths"],
+            "joins": cnt["joins"],
+            "respawns": cnt["respawns"],
+            "straggles": cnt["straggles"],
+            "recoveries": cnt["recoveries"],
+            "replans": cnt["replans"],
+            "recovered_tasks": cnt["recovered_tasks"],
+            "recovery_seconds": recovery_seconds[0],
+            "speculated": cnt["speculated"],
+            "spec_wins": cnt["spec_wins"],
+            "dup_done": cnt["dup_done"],
+            "xfers": cnt["xfers"],
+            "xfer_bytes": cnt["xfer_bytes"],
+            "xfer_retries": cnt["xfer_retries"],
+            "buffers_freed": sum(s["buffers_freed"]
+                                 for s in self._node_stats.values()),
+            "peak_buffer_bytes": sum(s["peak_buffer_bytes"]
+                                     for s in self._node_stats.values()),
+            "cur_buffer_bytes": sum(s["cur_buffer_bytes"]
+                                    for s in self._node_stats.values()),
+        }
+        return assemble(vals, g.result_shape, plan.tile,
+                        g.result_tiles[0].tensor)
+
+    # -- cleanup --------------------------------------------------------------
+    def _reap_segments(self, node: Optional[int] = None) -> None:
+        """Best-effort unlink of shm segments left behind by dead
+        incarnations (a SIGKILLed worker never unlinks its arena),
+        found via the run-scoped name prefix."""
+        from multiprocessing import resource_tracker
+        if not os.path.isdir("/dev/shm"):       # pragma: no cover
+            return
+        reaped = []
+        for f in os.listdir("/dev/shm"):
+            if not f.startswith(self._prefix):
+                continue
+            if node is not None and f"n{node}_" not in f:
+                continue
+            try:
+                # plain unlink (= shm_unlink): attaching would fail on a
+                # segment whose creator was SIGKILLed mid-create (zero
+                # size), and existing mappings survive the unlink anyway
+                os.unlink(os.path.join("/dev/shm", f))
+                reaped.append(f)
+            except OSError:
+                pass
+        # the dead worker registered its creates with the (shared) tracker
+        # process and died before unlinking; retract the stale entries or
+        # the tracker warns about leaks at exit.  register-then-unregister
+        # nets to removal whether or not the registration arrived before
+        # the SIGKILL (the tracker cache is a set — bpo-39959)
+        for f in reaped:
+            try:
+                resource_tracker.register("/" + f, "shared_memory")
+                resource_tracker.unregister("/" + f, "shared_memory")
+            except Exception:       # pragma: no cover
+                pass
+
+    def _terminate_all(self) -> None:
+        for p in self._procs.values():
+            if p is not None and p.is_alive():
+                p.terminate()
+        for p in self._procs.values():
+            if p is not None:
+                p.join(timeout=5)
+        self._reap_segments()

@@ -1,0 +1,223 @@
+"""Master-side membership service for the elastic cluster runtime.
+
+The paper's cluster story is dynamic — "automatic configuration of
+communication and worker processes ... automatically scale up for
+clusters of heterogeneous nodes" — so the control plane must treat the
+node set as a *stream of membership events*, not a frozen ``ClusterSpec``.
+This module is the pure-logic half of that control plane (no processes,
+no queues — unit-testable with a fake clock, same style as
+``runtime/fault.py`` whose EWMA/patience policy shapes it reuses):
+
+* **liveness** — each node carries a heartbeat timestamp, refreshed by
+  worker ``hb`` messages (sent over the existing per-node queues) and by
+  task-completion events; a node whose heartbeat goes stale past
+  ``heartbeat_timeout_s``, or whose worker process is observed dead, is
+  declared DEAD exactly once;
+* **stragglers** — per-node EWMA of task service time; a node whose EWMA
+  exceeds ``straggler_factor`` x the live-fleet median for
+  ``straggler_patience`` consecutive sweeps raises one STRAGGLE event,
+  which the executor answers with frontier re-planning away from the
+  node plus speculative duplicate execution of its in-flight tasks; when
+  the EWMA returns under the bar a RECOVER event re-arms the detector
+  and lifts the re-planning penalty;
+* **elasticity** — ``add_node`` registers a node that joined mid-run
+  (scale-up) and returns the JOIN event for the re-planning loop.
+
+The master node is exempt from eviction: it hosts result gathering and
+the ``takecopy`` pins, so its loss is a run failure, not a membership
+event (``MembershipService.mark_dead`` refuses it).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional
+
+
+@dataclass
+class MembershipConfig:
+    """Policy knobs — defaults sized for a real cluster; tests shrink them."""
+
+    #: how often workers emit heartbeats (the executor forwards this to
+    #: the worker loop)
+    heartbeat_interval_s: float = 0.25
+    #: heartbeat staleness after which a node is presumed dead
+    heartbeat_timeout_s: float = 10.0
+    #: EWMA smoothing for per-task service times
+    ewma_alpha: float = 0.2
+    #: straggler bar: EWMA > factor x live-fleet median
+    straggler_factor: float = 3.0
+    #: consecutive flagged sweeps before a STRAGGLE event fires
+    straggler_patience: int = 8
+    #: minimum seconds between straggler sweeps — ``poll()`` may be called
+    #: every master-loop iteration (milliseconds apart), so patience must
+    #: be counted against wall time, not call count (None: heartbeat
+    #: interval)
+    straggler_poll_interval_s: Optional[float] = None
+    #: tasks a node must have served before its EWMA is trusted
+    straggler_min_tasks: int = 5
+    #: survivors required to keep running after a death
+    min_nodes: int = 1
+
+
+#: membership event kinds
+DEATH, JOIN, STRAGGLE, RECOVER = "death", "join", "straggle", "recover"
+
+
+@dataclass(frozen=True)
+class ClusterEvent:
+    kind: str          # death | join | straggle
+    node: int
+    reason: str = ""
+
+
+@dataclass
+class NodeHealth:
+    node: int
+    last_heartbeat: float = 0.0
+    task_ewma: float = 0.0
+    tasks_done: int = 0
+    flagged: int = 0
+    straggling: bool = False
+    alive: bool = True
+
+
+class MembershipService:
+    """Tracks node liveness + service-time health, emits membership events.
+
+    Pure bookkeeping: the caller (the elastic executor's event loop) feeds
+    it heartbeats, task timings and process-liveness observations, and
+    drains ``poll()`` for the DEATH/STRAGGLE events it must react to.
+    """
+
+    def __init__(self, nodes, master: int = 0,
+                 cfg: Optional[MembershipConfig] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg or MembershipConfig()
+        self.master = master
+        self.clock = clock
+        now = clock()
+        self.nodes: Dict[int, NodeHealth] = {
+            int(n): NodeHealth(int(n), now) for n in nodes}
+        if master not in self.nodes:
+            raise ValueError(f"master node {master} not in initial set")
+        self._last_sweep = now
+
+    # -- signals -------------------------------------------------------------
+    def heartbeat(self, node: int) -> None:
+        st = self.nodes.get(node)
+        if st is not None and st.alive:
+            st.last_heartbeat = self.clock()
+
+    def record_task(self, node: int, seconds: float) -> None:
+        """A task finished on ``node`` after ``seconds`` of service time
+        (doubles as a heartbeat)."""
+        st = self.nodes.get(node)
+        if st is None or not st.alive:
+            return
+        st.last_heartbeat = self.clock()
+        st.tasks_done += 1
+        a = self.cfg.ewma_alpha
+        st.task_ewma = (seconds if st.task_ewma == 0.0
+                        else a * seconds + (1 - a) * st.task_ewma)
+
+    # -- membership changes ---------------------------------------------------
+    def add_node(self, node: int) -> ClusterEvent:
+        """A node joined (or re-joined after a respawn) the cluster."""
+        self.nodes[node] = NodeHealth(node, self.clock())
+        return ClusterEvent(JOIN, node, "node joined")
+
+    def mark_dead(self, node: int, reason: str = "") -> Optional[ClusterEvent]:
+        """Declare ``node`` dead; returns the DEATH event the first time."""
+        if node == self.master:
+            raise RuntimeError(
+                f"master node {node} died ({reason or 'unknown'}): "
+                f"the run cannot be recovered")
+        st = self.nodes.get(node)
+        if st is None or not st.alive:
+            return None
+        st.alive = False
+        return ClusterEvent(DEATH, node, reason or "marked dead")
+
+    # -- detection ------------------------------------------------------------
+    def poll(self, liveness: Optional[Mapping[int, bool]] = None
+             ) -> List[ClusterEvent]:
+        """One detection sweep.
+
+        ``liveness`` carries direct process observations
+        (``Process.is_alive()``); a ``False`` entry declares the node dead
+        immediately, heartbeat staleness catches hung-but-running workers.
+        Returns each DEATH/STRAGGLE event exactly once.
+        """
+        out: List[ClusterEvent] = []
+        now = self.clock()
+        for st in list(self.nodes.values()):
+            if not st.alive:
+                continue
+            if liveness is not None and liveness.get(st.node) is False:
+                ev = self.mark_dead(st.node, "worker process exited")
+                if ev:
+                    out.append(ev)
+                continue
+            if now - st.last_heartbeat > self.cfg.heartbeat_timeout_s:
+                ev = self.mark_dead(
+                    st.node, f"heartbeat stale "
+                    f"({now - st.last_heartbeat:.1f}s)")
+                if ev:
+                    out.append(ev)
+        out.extend(self._poll_stragglers())
+        return out
+
+    def _poll_stragglers(self) -> List[ClusterEvent]:
+        now = self.clock()
+        interval = self.cfg.straggler_poll_interval_s
+        if interval is None:
+            interval = self.cfg.heartbeat_interval_s
+        if now - self._last_sweep < interval:
+            return []
+        self._last_sweep = now
+        live = [s for s in self.nodes.values()
+                if s.alive and s.task_ewma > 0.0
+                and s.tasks_done >= self.cfg.straggler_min_tasks]
+        if len(live) < 2:
+            return []
+        times = sorted(s.task_ewma for s in live)
+        # lower-middle median: on an even-sized fleet the upper-middle
+        # element IS the straggler (on 2 nodes it would be compared
+        # against itself and never flagged)
+        median = times[(len(times) - 1) // 2]
+        out = []
+        for st in live:
+            if st.task_ewma > self.cfg.straggler_factor * median:
+                st.flagged += 1
+                if st.flagged >= self.cfg.straggler_patience \
+                        and not st.straggling:
+                    st.straggling = True
+                    out.append(ClusterEvent(
+                        STRAGGLE, st.node,
+                        f"EWMA {st.task_ewma:.4f}s > "
+                        f"{self.cfg.straggler_factor}x median "
+                        f"{median:.4f}s"))
+            else:
+                st.flagged = 0
+                if st.straggling:
+                    # back under the bar: re-arm the detector and tell
+                    # the control plane to stop penalising the node
+                    st.straggling = False
+                    out.append(ClusterEvent(
+                        RECOVER, st.node,
+                        f"EWMA {st.task_ewma:.4f}s back under the "
+                        f"straggler bar"))
+        return out
+
+    # -- queries --------------------------------------------------------------
+    def alive_nodes(self) -> List[int]:
+        return sorted(n for n, s in self.nodes.items() if s.alive)
+
+    def is_alive(self, node: int) -> bool:
+        st = self.nodes.get(node)
+        return st is not None and st.alive
+
+    def ewma(self, node: int) -> float:
+        st = self.nodes.get(node)
+        return st.task_ewma if st is not None else 0.0
