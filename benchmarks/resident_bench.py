@@ -1,0 +1,163 @@
+"""Session residency benchmark + smoke gate -> BENCH_resident.json.
+
+Measures what the session engine (``core/session.py``) buys on the
+paper's iterative workloads, against the one-shot engine path that
+re-fills every leaf and gathers the full result on every ``compute()``:
+
+* **power-iteration leg** — ``u <- P u`` for k steps.  The one-shot
+  baseline re-FILLs P (n x n counter-based RNG generation) and gathers
+  ``u`` to the master on every step, feeding it forward as a fresh INPUT
+  leaf; the session persists P once and chains resident handles.
+* **markov leg** — the paper's Fig. 2 ``u' = P^3 u`` executed repeatedly
+  (3 chained GEMVs per call), same comparison.
+
+Per leg it reports **executed-task counts**, **bytes gathered to the
+master**, and **wall-clock**, and it GATES on the session contract:
+
+* ``ok_bitident``   — session final result is bit-identical to the
+  one-shot baseline (np.array_equal, dtype included);
+* ``ok_fewer_tasks`` — the session path executes strictly fewer tasks
+  per step (RESIDENT binds replace FILLs; no TAKECOPYs on persisted
+  steps);
+* ``ok_fewer_gather`` — strictly fewer master-gather bytes per step
+  (persisted steps gather nothing).
+
+Exit status is non-zero on any failed check — wired into CI as the
+``resident-smoke`` job (``--smoke``: small inputs, writes
+``BENCH_resident_smoke.json`` so the committed artifact is never
+clobbered, per repo convention).
+
+    PYTHONPATH=src python benchmarks/resident_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import ClusteredMatrix as CM, CMMEngine, analytic_time_model
+from repro.core.machine import local_spec
+from repro.core.session import CMMSession
+
+
+def _fresh_engine():
+    return CMMEngine(local_spec(1), analytic_time_model())
+
+
+def run_power_iteration(n: int, k: int, tile: int, steps_fn=None) -> dict:
+    """``u <- P u`` for k steps: per-call gather+refill vs residency."""
+    if steps_fn is None:
+        steps_fn = lambda P, u: P @ u                       # noqa: E731
+        case = "power_iteration"
+        step_cost = 1
+    else:
+        case = "markov_p3u"
+        step_cost = 3
+
+    # -- one-shot baseline: refill P + gather u on every step ------------
+    eng_b = _fresh_engine()
+    t0 = time.perf_counter()
+    u_arr = CM.rand(n, 1, seed=1).eager()
+    base_tasks = 0
+    base_gather = 0
+    for _ in range(k):
+        P = CM.rand(n, n, seed=0, name="P")
+        u_arr = eng_b.run(steps_fn(P, CM.from_array(u_arr)), tile=tile)
+        base_tasks += eng_b.last_exec_stats["tasks_run"]
+        base_gather += eng_b.last_exec_stats["gather_bytes"]
+    wall_base = time.perf_counter() - t0
+
+    # -- session: P resident once, u fed forward as a handle -------------
+    eng_s = _fresh_engine()
+    t0 = time.perf_counter()
+    sess_tasks = 0
+    sess_gather = 0
+    with CMMSession(eng_s, executor="local", tile=tile) as s:
+        P = s.persist(CM.rand(n, n, seed=0, name="P"))
+        u = s.persist(CM.rand(n, 1, seed=1))
+        sess_setup_tasks = s.stats["last_exec"]["tasks_run"]
+        for _ in range(k):
+            u = s.persist(steps_fn(P, u))
+            sess_tasks += s.stats["last_exec"]["tasks_run"]
+            sess_gather += s.stats["last_exec"]["gather_bytes"]
+        u_sess = u.to_numpy()
+    wall_sess = time.perf_counter() - t0
+
+    per_step_base_tasks = base_tasks / k
+    per_step_sess_tasks = sess_tasks / k
+    return {
+        "case": case, "n": n, "k": k, "tile": tile,
+        "matmuls_per_step": step_cost,
+        "baseline_tasks_total": base_tasks,
+        "session_tasks_total": sess_tasks,
+        "baseline_tasks_per_step": per_step_base_tasks,
+        "session_tasks_per_step": per_step_sess_tasks,
+        "baseline_gather_bytes": base_gather,
+        "session_gather_bytes": sess_gather,
+        "baseline_gather_bytes_per_step": base_gather / k,
+        "session_gather_bytes_per_step": sess_gather / k,
+        "wall_oneshot_s": wall_base,
+        "wall_session_s": wall_sess,
+        "session_speedup": wall_base / max(wall_sess, 1e-12),
+        "ok_bitident": bool(np.array_equal(u_arr, u_sess)),
+        "ok_fewer_tasks": per_step_sess_tasks < per_step_base_tasks,
+        "ok_fewer_gather": sess_gather / k < base_gather / k,
+        "_note": f"session setup (persist P + u0): {sess_setup_tasks} "
+                 f"tasks, amortised over the whole session",
+    }
+
+
+def run_markov(n: int, k: int, tile: int) -> dict:
+    """The paper's Fig. 2 chain u' = P (P (P u)), iterated k times."""
+    return run_power_iteration(
+        n, k, tile, steps_fn=lambda P, u: P @ (P @ (P @ u)))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small inputs (the CI resident-smoke gate)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        name = "BENCH_resident_smoke.json" if args.smoke \
+            else "BENCH_resident.json"
+        args.out = os.path.join(os.path.dirname(__file__), "..", name)
+
+    if args.smoke:
+        cases = [run_power_iteration(256, 4, 128),
+                 run_markov(192, 3, 96)]
+    else:
+        cases = [run_power_iteration(1024, 10, 512),
+                 run_markov(768, 6, 384)]
+
+    ok = True
+    for c in cases:
+        checks = [v for kk, v in c.items() if kk.startswith("ok_")]
+        ok &= all(checks)
+        print(f"[resident] {c['case']} n={c['n']} k={c['k']} "
+              f"tile={c['tile']} "
+              f"tasks/step {c['baseline_tasks_per_step']:.0f}->"
+              f"{c['session_tasks_per_step']:.0f} "
+              f"gather/step {c['baseline_gather_bytes_per_step']:.0f}->"
+              f"{c['session_gather_bytes_per_step']:.0f}B "
+              f"wall {c['wall_oneshot_s']:.3f}s->{c['wall_session_s']:.3f}s "
+              f"({c['session_speedup']:.2f}x) "
+              f"bitident={c['ok_bitident']} "
+              f"fewer_tasks={c['ok_fewer_tasks']} "
+              f"fewer_gather={c['ok_fewer_gather']}")
+        if not all(checks):
+            print(f"[resident] CHECK FAILED: {c['case']}", file=sys.stderr)
+
+    with open(args.out, "w") as f:
+        json.dump({"cases": cases}, f, indent=2)
+    print(f"[resident] wrote {os.path.abspath(args.out)}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,6 +10,8 @@ from .cache import NodeCache                                   # noqa: F401
 from .heft import heft_schedule, Schedule                      # noqa: F401
 from .simulator import simulate, SimResult                     # noqa: F401
 from .engine import CMMEngine, Plan                            # noqa: F401
+from .session import (CMMSession, ResidentHandle,              # noqa: F401
+                      ResidentMatrix, ResidentTilesLost)
 from .fusion import (FusionReport, eval_fused, optimize,       # noqa: F401
-                     structural_signature)
+                     optimize_many, structural_signature)
 from .autotune import tune_tile, argmin_search, tile_candidates  # noqa: F401

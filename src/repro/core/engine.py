@@ -26,14 +26,15 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .fusion import (FusionReport, leaves_in_order, optimize,
-                     structural_signature)
-from .graph import TaskGraph
+from .fusion import (FusionReport, leaves_in_order_many, optimize_many,
+                     residency_layout, structural_signature_many)
+from .graph import TaskGraph, TaskKind
 from .heft import DirectCost, Schedule, heft_schedule
-from .lazy import ClusteredMatrix, Op, topo_order
+from .lazy import ClusteredMatrix, Op, topo_order, topo_order_many
 from .machine import ClusterSpec, c5_9xlarge
 from .simulator import SimResult, simulate
-from .tiling import TiledProgram, normalize_tile, tile_expression
+from .tiling import (TiledProgram, normalize_tile, tile_expression,
+                     tile_expression_many)
 from .timemodel import CostCache, TimeModel, analytic_time_model
 
 
@@ -47,6 +48,10 @@ class Plan:
     spec: Optional[ClusterSpec] = None
     fusion: Optional[FusionReport] = None
     cache_hit: bool = False
+    #: per-run session residency view (``core.session.SessionResidency``):
+    #: resident-leaf tile lookups + retention sinks.  Set by the session
+    #: right before execution, never cached.
+    residency: Optional[object] = None
     #: dependency levels of the task graph (wave-batched execution order)
     waves: Optional[list] = None
     #: predicted wall-clock of the wave-batched executor strategy
@@ -175,39 +180,81 @@ class CMMEngine:
         return cls._default
 
     # -- planning -----------------------------------------------------------
-    def _fill_origins(self, root: ClusteredMatrix) -> Dict[int, str]:
+    def _fill_origins(self, roots: Sequence[ClusteredMatrix]
+                      ) -> Dict[int, str]:
         out = {}
-        for node in topo_order(root):
+        for node in topo_order_many(roots):
             if node.op is Op.INPUT:
                 out[node.uid] = "master"     # user data lives on the master
             elif node.op in (Op.RANDOM, Op.ZEROS, Op.EYE):
                 out[node.uid] = "local"      # generated in place (§3.3)
         return out
 
+    @staticmethod
+    def _resident_pins(prog: TiledProgram) -> Optional[Dict[int, int]]:
+        """RESIDENT task -> node whose arena holds that tile (the handle's
+        per-tile home) — location-pinned placement for the scheduler."""
+        pins: Dict[int, int] = {}
+        for t in prog.graph:
+            if t.kind is TaskKind.RESIDENT:
+                h = prog.leaf_nodes[t.payload].payload
+                pins[t.tid] = h.home.get((t.out.i, t.out.j), 0)
+        return pins or None
+
     def plan(self, root: ClusteredMatrix, tile=None,
              fuse: Optional[bool] = None,
              fast: Optional[bool] = None) -> Plan:
+        """Plan one root (the one-shot ``compute()`` path) — a thin wrapper
+        over the multi-root session planner."""
+        return self.plan_many((root,), tile=tile, fuse=fuse, fast=fast)
+
+    def plan_many(self, roots: Sequence[ClusteredMatrix], tile=None,
+                  fuse: Optional[bool] = None,
+                  fast: Optional[bool] = None,
+                  persist: Sequence[int] = ()) -> Plan:
+        """Plan a multi-root program with shared CSE.
+
+        ``persist`` lists root *positions* whose results stay resident in
+        the executor arenas (no takecopy gather); the session layer turns
+        them into ``ResidentMatrix`` handles.  The plan cache key covers
+        the union structure, the persist set and the **residency layout**
+        (tile size + per-tile home node of every resident leaf), so an
+        iterative workload re-planning the same step structure hits the
+        cache even though each step consumes fresh handles.
+        """
         t0 = time.perf_counter()
-        tile = normalize_tile(tile or self.tile or self._default_tile(root))
+        roots = list(roots)
+        tile = normalize_tile(tile or self.tile or self._default_tile(roots))
         fuse = self.fuse if fuse is None else fuse
         fast = self.fast_planning if fast is None else fast
+        persist_idx = frozenset(int(i) for i in persist)
+        bad = [i for i in persist_idx if not 0 <= i < len(roots)]
+        if bad:
+            raise ValueError(f"persist indices {bad} out of range for "
+                             f"{len(roots)} roots")
         report = None
         if fuse:
             # transposed-operand tile indexing needs a square tile on
             # ragged grids; keep explicit TRANSPOSE nodes otherwise
-            root, report = optimize(root, fold_transpose=tile[0] == tile[1])
+            roots, report = optimize_many(roots,
+                                          fold_transpose=tile[0] == tile[1])
 
         key = None
         if self.plan_cache:
             # the TimeModel fingerprint keys the cache too: in-place
             # recalibration (calibrate_ipc/contention/...) must invalidate
             # cached schedules + auto-selection verdicts, not replay them
-            key = (structural_signature(root), tile, self.spec,
-                   self.cache_aware, fuse, self.timemodel.to_json())
+            key = (structural_signature_many(roots), tile, self.spec,
+                   self.cache_aware, fuse, self.timemodel.to_json(),
+                   persist_idx, residency_layout(roots))
             hit = self._plans.get(key)
             if hit is not None:
                 self.plan_cache_hits += 1
-                prog = hit.program.rebound(leaves_in_order(root))
+                prog = hit.program.rebound(leaves_in_order_many(roots))
+                # the cached copy dropped its roots (they would pin user
+                # data); a served plan carries the CALLER's roots
+                prog.roots = list(roots)
+                prog.root = roots[0]
                 return Plan(prog, hit.schedule, hit.sim, hit.tile,
                             time.perf_counter() - t0, spec=self.spec,
                             fusion=report, cache_hit=True, waves=hit.waves,
@@ -216,15 +263,16 @@ class CMMEngine:
                             _elastic_pred=hit._elastic_pred)
             self.plan_cache_misses += 1
 
-        prog = tile_expression(root, tile)
+        prog = tile_expression_many(roots, tile, persist_idx)
         # one cost object shared by scheduling, simulation and wave costing:
         # memoized on the fast path, direct (naive-baseline) otherwise
         cost = CostCache(self.timemodel, self.spec) if fast \
             else DirectCost(self.timemodel, self.spec)
         sched = heft_schedule(prog.graph, self.spec, self.timemodel,
                               cache_aware=self.cache_aware,
-                              fill_origin=self._fill_origins(root),
-                              fast=fast, cost=cost)
+                              fill_origin=self._fill_origins(roots),
+                              fast=fast, cost=cost,
+                              pinned=self._resident_pins(prog))
         sim = simulate(prog.graph, sched, self.spec, self.timemodel,
                        cost=cost)
         from ..exec.batched import build_waves, predict_wave_makespan
@@ -252,28 +300,32 @@ class CMMEngine:
 
     @staticmethod
     def _cache_copy(plan: Plan) -> Plan:
-        """The cached entry must not pin user data: INPUT leaf payloads (and
-        the expression root) are dropped — a hit rebinds fresh leaves."""
+        """The cached entry must not pin user data: INPUT leaf payloads,
+        RESIDENT handles (they pin arena tiles) and the expression root are
+        dropped — a hit rebinds fresh leaves."""
         prog = plan.program
         stripped = []
         for uid in prog.leaf_order:
             n = prog.leaf_nodes[uid]
-            if n.op is Op.INPUT:
+            if n.op in (Op.INPUT, Op.RESIDENT):
                 n = ClusteredMatrix(n.op, n.shape, n.dtype, payload=None,
                                     name=n.name)
             stripped.append(n)
         p = prog.rebound(stripped)
         p.root = None
+        p.roots = []
         return Plan(p, plan.schedule, plan.sim, plan.tile, plan.plan_seconds,
                     spec=plan.spec, waves=plan.waves,
                     batched_makespan=plan.batched_makespan,
                     _cluster_pred=plan._cluster_pred,
                     _elastic_pred=plan._elastic_pred)
 
-    def _default_tile(self, root: ClusteredMatrix) -> int:
+    def _default_tile(self, roots: Sequence[ClusteredMatrix]) -> int:
         # paper finding: tile ~ n/2 is best for n=10k on 8 nodes (§3.3);
         # fall back to half the largest dimension.
-        dim = max(max(n.shape) for n in topo_order(root))
+        if isinstance(roots, ClusteredMatrix):
+            roots = (roots,)
+        dim = max(max(n.shape) for n in topo_order_many(roots))
         return max(1, dim // 2)
 
     def autotune_tile(self, root: ClusteredMatrix,
@@ -306,22 +358,40 @@ class CMMEngine:
           per-task, wave-batched and cluster strategies for this plan
           (churn-priced, and routed through ``"elastic"``, when the
           engine runs with ``elastic=True``).
+
+        ``run`` is the thin ONE-SHOT wrapper over the session execution
+        path (``execute_plan``): plan, execute with an ephemeral executor,
+        gather everything to the master and discard all executor state.
+        Iterative workloads that want results to stay resident between
+        calls should use :class:`repro.core.session.CMMSession` instead.
         """
         plan = plan or self.plan(root, tile=tile)
-        if executor == "auto":
-            executor = self.choose_executor(plan)
-        if executor == "elastic" and "timemodel" not in exec_kw:
-            # frontier re-planning inside the executor must price nodes
-            # with the same model the original schedule used
-            exec_kw["timemodel"] = self.timemodel
-        from ..exec import make_executor
-        ex = make_executor(executor, **exec_kw)
-        out = ex.execute(plan)
-        self.last_exec_stats = dict(ex.stats)
-        self.last_exec_stats["executor"] = executor
+        out = self.execute_plan(plan, executor=executor, **exec_kw)
         if validate:
             ref = root.eager()
             np.testing.assert_allclose(out, ref, rtol=1e-8, atol=1e-8)
+        return out
+
+    def execute_plan(self, plan: Plan, executor: str = "local",
+                     executor_obj=None, **exec_kw):
+        """Execute a prepared plan — the engine half shared by one-shot
+        ``run()`` and the session engine.  ``executor_obj`` lets a session
+        pass its *long-lived* executor instance (resident arenas survive
+        across calls); otherwise an ephemeral backend is built from the
+        registry."""
+        if executor == "auto":
+            executor = self.choose_executor(plan)
+        if executor == "elastic" and executor_obj is None \
+                and "timemodel" not in exec_kw:
+            # frontier re-planning inside the executor must price nodes
+            # with the same model the original schedule used
+            exec_kw["timemodel"] = self.timemodel
+        if executor_obj is None:
+            from ..exec import make_executor
+            executor_obj = make_executor(executor, **exec_kw)
+        out = executor_obj.execute(plan)
+        self.last_exec_stats = dict(executor_obj.stats)
+        self.last_exec_stats["executor"] = executor
         return out
 
     def choose_executor(self, plan: Plan) -> str:

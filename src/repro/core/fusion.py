@@ -40,12 +40,13 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .lazy import ClusteredMatrix, EWISE_FNS, Op, apply_scale, topo_order
+from .lazy import (ClusteredMatrix, EWISE_FNS, Op, apply_scale, topo_order,
+                   topo_order_many)
 
 #: expression ops that are elementwise over same-shaped operands
 ELEMENTWISE_OPS = {Op.ADD, Op.SUB, Op.EWMUL, Op.SCALE, Op.EWISE}
 
-LEAF_OPS = {Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE}
+LEAF_OPS = {Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE, Op.RESIDENT}
 
 
 @dataclass
@@ -79,12 +80,22 @@ def _is_eye(n: ClusteredMatrix) -> bool:
 def fold_identities(root: ClusteredMatrix, report: FusionReport,
                     fold_transpose: bool = True) -> ClusteredMatrix:
     """Algebraic identity folding + transpose-into-matmul flag folding."""
+    return fold_identities_many((root,), report,
+                                fold_transpose=fold_transpose)[0]
+
+
+def fold_identities_many(roots: Sequence[ClusteredMatrix],
+                         report: FusionReport,
+                         fold_transpose: bool = True
+                         ) -> List[ClusteredMatrix]:
+    """Multi-root twin of :func:`fold_identities` (shared subexpressions
+    are rewritten once)."""
     new: Dict[int, ClusteredMatrix] = {}
 
     def rewritten(node: ClusteredMatrix) -> ClusteredMatrix:
         return new[node.uid]
 
-    for node in topo_order(root):
+    for node in topo_order_many(roots):
         parents = tuple(rewritten(p) for p in node.parents)
         out: Optional[ClusteredMatrix] = None
 
@@ -139,7 +150,7 @@ def fold_identities(root: ClusteredMatrix, report: FusionReport,
                                 parents=parents, payload=node.payload,
                                 name=node.name)
         new[node.uid] = out
-    return new[root.uid]
+    return [new[r.uid] for r in roots]
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +166,10 @@ def _value_payload_key(node: ClusteredMatrix):
         return ("input", id(node.payload))
     if node.op is Op.RANDOM:
         return ("seed", node.payload)
+    if node.op is Op.RESIDENT:
+        # a resident leaf's value is its handle: two uses of one handle
+        # are the same tiles, two handles are distinct values
+        return ("resident", node.payload.hid)
     if node.op is Op.FUSED:
         return node.payload
     if isinstance(node.payload, (str, int, float, tuple, type(None))):
@@ -165,10 +180,18 @@ def _value_payload_key(node: ClusteredMatrix):
 def cse(root: ClusteredMatrix, report: FusionReport) -> ClusteredMatrix:
     """Merge structurally identical subexpressions (structural hashing of
     ``(op, parents, payload)``)."""
+    return cse_many((root,), report)[0]
+
+
+def cse_many(roots: Sequence[ClusteredMatrix],
+             report: FusionReport) -> List[ClusteredMatrix]:
+    """CSE over the union DAG of several roots — the shared-CSE half of
+    ``compute_many``: a subexpression common to two roots is computed
+    once in the merged program."""
     canon: Dict[tuple, ClusteredMatrix] = {}
     new: Dict[int, ClusteredMatrix] = {}
 
-    for node in topo_order(root):
+    for node in topo_order_many(roots):
         parents = tuple(new[p.uid] for p in node.parents)
         key = (node.op, node.shape, str(node.dtype),
                _value_payload_key(node), tuple(p.uid for p in parents))
@@ -182,16 +205,16 @@ def cse(root: ClusteredMatrix, report: FusionReport) -> ClusteredMatrix:
                             payload=node.payload, name=node.name)
         canon[key] = out
         new[node.uid] = out
-    return new[root.uid]
+    return [new[r.uid] for r in roots]
 
 
 # ---------------------------------------------------------------------------
 # pass 3: elementwise-chain fusion
 # ---------------------------------------------------------------------------
 
-def _consumers(root: ClusteredMatrix) -> Dict[int, Set[int]]:
-    cons: Dict[int, Set[int]] = {root.uid: set()}
-    for node in topo_order(root):
+def _consumers(roots: Sequence[ClusteredMatrix]) -> Dict[int, Set[int]]:
+    cons: Dict[int, Set[int]] = {r.uid: set() for r in roots}
+    for node in topo_order_many(roots):
         cons.setdefault(node.uid, set())
         for p in node.parents:
             cons.setdefault(p.uid, set()).add(node.uid)
@@ -201,9 +224,19 @@ def _consumers(root: ClusteredMatrix) -> Dict[int, Set[int]]:
 def fuse_elementwise(root: ClusteredMatrix,
                      report: FusionReport) -> ClusteredMatrix:
     """Collapse single-consumer elementwise chains into FUSED nodes."""
-    order = topo_order(root)
+    return fuse_elementwise_many((root,), report)[0]
+
+
+def fuse_elementwise_many(roots: Sequence[ClusteredMatrix],
+                          report: FusionReport) -> List[ClusteredMatrix]:
+    """Multi-root elementwise fusion.  A root's value is an OUTPUT of the
+    merged program, so a root node is never inlined into a consumer's
+    region (it may still root its own region and swallow its upstream
+    chain)."""
+    order = topo_order_many(roots)
     by_uid = {n.uid: n for n in order}
-    cons = _consumers(root)
+    cons = _consumers(roots)
+    root_uids = {r.uid for r in roots}
 
     # region_of[uid] = uid of the region root this node is inlined into
     region_of: Dict[int, int] = {}
@@ -211,7 +244,7 @@ def fuse_elementwise(root: ClusteredMatrix,
         if node.op not in ELEMENTWISE_OPS:
             continue
         cs = cons[node.uid]
-        if len(cs) == 1:
+        if len(cs) == 1 and node.uid not in root_uids:
             (c,) = cs
             if by_uid[c].op in ELEMENTWISE_OPS:
                 # inline into the consumer's region
@@ -277,7 +310,7 @@ def fuse_elementwise(root: ClusteredMatrix,
         report.fused_ops += len(region)
         new[node.uid] = fused
 
-    return new[root.uid]
+    return [new[r.uid] for r in roots]
 
 
 # ---------------------------------------------------------------------------
@@ -292,13 +325,26 @@ def optimize(root: ClusteredMatrix, fold_transpose: bool = True,
     tile is non-square, where transposed tile indexing is ill-defined on
     ragged grids).
     """
-    report = FusionReport(nodes_before=len(topo_order(root)))
-    root = fold_identities(root, report, fold_transpose=fold_transpose)
-    root = cse(root, report)
+    roots, report = optimize_many((root,), fold_transpose=fold_transpose,
+                                  fuse=fuse)
+    return roots[0], report
+
+
+def optimize_many(roots: Sequence[ClusteredMatrix],
+                  fold_transpose: bool = True, fuse: bool = True
+                  ) -> Tuple[List[ClusteredMatrix], FusionReport]:
+    """Optimize several roots as ONE program: every pass (identity folds,
+    CSE, elementwise fusion) runs over the union DAG, so subexpressions
+    shared *across* roots are merged — the ``compute_many`` shared-CSE
+    contract."""
+    report = FusionReport(nodes_before=len(topo_order_many(roots)))
+    roots = fold_identities_many(roots, report,
+                                 fold_transpose=fold_transpose)
+    roots = cse_many(roots, report)
     if fuse:
-        root = fuse_elementwise(root, report)
-    report.nodes_after = len(topo_order(root))
-    return root, report
+        roots = fuse_elementwise_many(roots, report)
+    report.nodes_after = len(topo_order_many(roots))
+    return list(roots), report
 
 
 # ---------------------------------------------------------------------------
@@ -423,9 +469,13 @@ def _structure_payload_key(node: ClusteredMatrix):
 
     Unlike the CSE key this deliberately ignores leaf VALUES (input array
     identity, random seed): the tiled program and schedule depend only on
-    structure and shapes, and a cache hit rebinds the leaves.
+    structure and shapes, and a cache hit rebinds the leaves.  RESIDENT
+    leaves ignore the handle identity too — the *layout* (tile grid +
+    per-tile home nodes) is keyed separately (``residency_layout``), so a
+    power-iteration step hits the cache even though each step holds a
+    fresh handle.
     """
-    if node.op in (Op.INPUT, Op.RANDOM):
+    if node.op in (Op.INPUT, Op.RANDOM, Op.RESIDENT):
         return None
     if isinstance(node.payload, (str, int, float, tuple, type(None))):
         return node.payload
@@ -434,17 +484,42 @@ def _structure_payload_key(node: ClusteredMatrix):
 
 def structural_signature(root: ClusteredMatrix) -> tuple:
     """Canonical hashable description of the DAG's structure + shapes."""
+    return structural_signature_many((root,))
+
+
+def structural_signature_many(roots: Sequence[ClusteredMatrix]) -> tuple:
+    """Structural signature of a multi-root program: the union DAG's
+    node signature plus each root's index into it (two programs match
+    only if they compute the same outputs of the same structure)."""
     index: Dict[int, int] = {}
     sig: List[tuple] = []
-    for i, node in enumerate(topo_order(root)):
+    for i, node in enumerate(topo_order_many(roots)):
         index[node.uid] = i
         sig.append((node.op.value, node.shape, str(node.dtype),
                     _structure_payload_key(node),
                     tuple(index[p.uid] for p in node.parents)))
-    return tuple(sig)
+    return tuple(sig) + (("roots",) + tuple(index[r.uid] for r in roots),)
+
+
+def residency_layout(roots: Sequence[ClusteredMatrix]) -> tuple:
+    """The plan-cache key component for resident leaves: per RESIDENT leaf
+    (in topo order), its handle's tile size and per-tile home nodes.  Two
+    structurally equal programs share a schedule only when their resident
+    tiles sit on the same nodes — pinned placements depend on it."""
+    out: List[tuple] = []
+    for i, node in enumerate(topo_order_many(roots)):
+        if node.op is Op.RESIDENT:
+            h = node.payload
+            out.append((i, h.tile, tuple(sorted(h.home.items()))))
+    return tuple(out)
 
 
 def leaves_in_order(root: ClusteredMatrix) -> List[ClusteredMatrix]:
     """Leaves in canonical topo order — the rebinding contract between two
     DAGs with equal structural signatures."""
-    return [n for n in topo_order(root) if n.op in LEAF_OPS]
+    return leaves_in_order_many((root,))
+
+
+def leaves_in_order_many(roots: Sequence[ClusteredMatrix]
+                         ) -> List[ClusteredMatrix]:
+    return [n for n in topo_order_many(roots) if n.op in LEAF_OPS]

@@ -35,6 +35,9 @@ class TaskKind(enum.Enum):
     TAKECOPY = "takecopy"
     SEND = "send"
     RECV = "recv"
+    RESIDENT = "resident"  # bind a session-resident tile into this run's
+                           # buffer namespace (zero-cost alias, no data
+                           # generation or movement; payload = leaf uid)
 
 
 #: kinds that do arithmetic (appear in the compute time model)
@@ -121,6 +124,10 @@ class TaskGraph:
         self.result_tiles: List[TileRef] = []
         self.result_grid: Tuple[int, int] = (0, 0)
         self.result_shape: Tuple[int, int] = (0, 0)
+        #: per-root outputs of a multi-root program (``tiling.ResultSet``);
+        #: empty for hand-built graphs — executors fall back to the single
+        #: result_tiles/grid/shape view above
+        self.result_sets: List[object] = []
 
     # -- construction ------------------------------------------------------
     def add(self, kind: TaskKind, ins: Sequence[TileRef],

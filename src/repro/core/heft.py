@@ -166,8 +166,8 @@ def upward_rank(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     rank: Dict[int, float] = {}
     w: Dict[int, float] = {}
     for t in g:
-        if t.kind is TaskKind.CALLOC:
-            w[t.tid] = 1e-6  # async, near-free (§3.3)
+        if t.kind in (TaskKind.CALLOC, TaskKind.RESIDENT):
+            w[t.tid] = 1e-6  # async / already-resident, near-free (§3.3)
         else:
             w[t.tid] = cost.avg(t)
     comm_memo: Dict[int, float] = {}
@@ -273,7 +273,8 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
                   lazy_fill: bool = True,
                   fill_origin: Optional[Mapping[int, str]] = None,
                   fast: bool = True,
-                  cost: Optional[CostCache] = None) -> Schedule:
+                  cost: Optional[CostCache] = None,
+                  pinned: Optional[Mapping[int, int]] = None) -> Schedule:
     """Schedule ``g`` on ``spec`` under time model ``tm``.
 
     ``cache_aware=False`` disables the node-level-cache modification (the
@@ -299,11 +300,16 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     benchmarking baseline).  ``cost`` lets the caller share one
     :class:`CostCache` across scheduling and simulation.
 
+    ``pinned`` maps task id -> node for location-pinned tasks (session
+    RESIDENT tasks must run on the node whose arena holds their tile;
+    consumers elsewhere pay the normal cache-aware transfer).
+
     NOTE: ``replan_frontier`` mirrors this function's EFT-insertion
     policy (tie-break epsilon, cache accounting, CALLOC duration) —
     keep the two in sync when changing placement rules.
     """
     origin = _FILL_ORIGIN if fill_origin is None else fill_origin
+    pinned = pinned or {}
     if cost is None:
         cost = CostCache(tm, spec) if fast else DirectCost(tm, spec)
     rank = upward_rank(g, spec, tm, cost=cost)
@@ -332,6 +338,13 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
         raise ValueError("the master node is drained; cannot schedule")
 
     def allowed_nodes(t: Task) -> Sequence[int]:
+        pin = pinned.get(t.tid)
+        if pin is not None:
+            if spec.workers_at(pin) <= 0:
+                raise ValueError(
+                    f"task {t.tid} ({t.kind.value}) is pinned to drained "
+                    f"node {pin}")
+            return (pin,)
         if t.kind is TaskKind.TAKECOPY:
             return (spec.master,)
         if t.kind is TaskKind.FILL and isinstance(t.payload, int):
@@ -438,7 +451,7 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
 
         best = None  # (eft, node, dur)
         for node in allowed_nodes(t):
-            dur = (1e-6 if t.kind is TaskKind.CALLOC
+            dur = (1e-6 if t.kind in (TaskKind.CALLOC, TaskKind.RESIDENT)
                    else cost.time(t, node))
             eft, *_ = eval_on_node(t, node, dur)
             if best is None or eft < best[0] - 1e-15 or \
@@ -479,7 +492,8 @@ def replan_frontier(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
                     cache_aware: bool = True,
                     fill_origin: Optional[Mapping[int, str]] = None,
                     fast: bool = True,
-                    cost: Optional[CostCache] = None) -> Schedule:
+                    cost: Optional[CostCache] = None,
+                    pinned: Optional[Mapping[int, int]] = None) -> Schedule:
     """Incremental re-plan after a cluster-membership change.
 
     The elastic runtime calls this on node death/join/straggle: ``done``
@@ -505,6 +519,7 @@ def replan_frontier(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     plans and elastic re-plans will place tasks under different rules.
     """
     origin = fill_origin if fill_origin is not None else {}
+    pinned = pinned or {}
     if cost is None:
         cost = CostCache(tm, spec) if fast else DirectCost(tm, spec)
     live = spec.alive_nodes()
@@ -554,6 +569,13 @@ def replan_frontier(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
     cache = NodeCache(spec.n_nodes)
 
     def allowed(t: Task) -> Sequence[int]:
+        pin = pinned.get(t.tid)
+        if pin is not None:
+            if spec.workers_at(pin) <= 0:
+                raise ValueError(
+                    f"task {t.tid} ({t.kind.value}) is pinned to drained "
+                    f"node {pin}")
+            return (pin,)
         if t.kind is TaskKind.TAKECOPY:
             return (spec.master,)
         if t.kind is TaskKind.FILL and isinstance(t.payload, int):
@@ -592,7 +614,7 @@ def replan_frontier(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
         t = g.tasks[tid]
         best = None
         for node in allowed(t):
-            dur = (1e-6 if t.kind is TaskKind.CALLOC
+            dur = (1e-6 if t.kind in (TaskKind.CALLOC, TaskKind.RESIDENT)
                    else cost.time(t, node))
             eft, si, st, transfers = eval_on(t, node, dur)
             if best is None or eft < best[0] - 1e-15 or \

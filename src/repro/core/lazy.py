@@ -36,6 +36,9 @@ class Op(enum.Enum):
     TRANSPOSE = "transpose"
     FUSED = "fused"          # optimizer-generated elementwise region
                              # (payload: instruction tuple, see core.fusion)
+    RESIDENT = "resident"    # session-resident leaf: tiles already live in
+                             # the executor's arenas (payload: ResidentHandle,
+                             # see core.session) — no FILL, no data movement
 
 
 #: unary elementwise functions supported by Op.EWISE (Table 1 row 3)
@@ -137,11 +140,31 @@ class ClusteredMatrix:
     def __rmul__(self, other):
         return self._binop(other, Op.SCALE)
 
+    def __rsub__(self, other):
+        """``s - M`` — scalar-minus-matrix (Table 1 row 4, reflected)."""
+        if isinstance(other, ClusteredMatrix):    # pragma: no cover — __sub__
+            return other._binop(self, Op.SUB)     # handles matrix - matrix
+        return ClusteredMatrix(Op.SCALE, self.shape, self.dtype,
+                               parents=(self,), payload=("rsub", float(other)))
+
     def __truediv__(self, other):
         if isinstance(other, ClusteredMatrix):
             raise TypeError("matrix / matrix is not a CMM operator")
         return ClusteredMatrix(Op.SCALE, self.shape, self.dtype,
                                parents=(self,), payload=("div", float(other)))
+
+    def __rtruediv__(self, other):
+        """``s / M`` — elementwise scalar-over-matrix."""
+        if isinstance(other, ClusteredMatrix):    # pragma: no cover
+            raise TypeError("matrix / matrix is not a CMM operator")
+        return ClusteredMatrix(Op.SCALE, self.shape, self.dtype,
+                               parents=(self,), payload=("rdiv", float(other)))
+
+    def __neg__(self):
+        """``-M`` == ``M * -1.0`` (bitwise: IEEE-754 negation is exactly a
+        sign-bit flip, and so is multiplication by -1.0)."""
+        return ClusteredMatrix(Op.SCALE, self.shape, self.dtype,
+                               parents=(self,), payload=("scale", -1.0))
 
     def __matmul__(self, other: "ClusteredMatrix") -> "ClusteredMatrix":
         if not isinstance(other, ClusteredMatrix):
@@ -203,6 +226,13 @@ class ClusteredMatrix:
 
 def topo_order(root: ClusteredMatrix) -> Sequence[ClusteredMatrix]:
     """Deterministic post-order DFS over the expression DAG."""
+    return topo_order_many((root,))
+
+
+def topo_order_many(roots: Sequence[ClusteredMatrix]
+                    ) -> Sequence[ClusteredMatrix]:
+    """Post-order DFS over the union of several roots' DAGs (shared
+    subexpressions appear once) — the multi-root ``compute_many`` order."""
     seen, order = set(), []
 
     def visit(node: ClusteredMatrix):
@@ -213,7 +243,8 @@ def topo_order(root: ClusteredMatrix) -> Sequence[ClusteredMatrix]:
             visit(p)
         order.append(node)
 
-    visit(root)
+    for root in roots:
+        visit(root)
     return order
 
 
@@ -269,6 +300,10 @@ def leaf_slice(node: ClusteredMatrix, r0: int, r1: int,
         for k in range(max(r0, c0), min(r1, c1)):
             t[k - r0, k - c0] = 1
         return t
+    if node.op is Op.RESIDENT:
+        # fallback path only (session-gathered value sliced); the tiled
+        # pipeline never FILLs a resident leaf — tiles are arena-bound
+        return np.asarray(node.to_numpy())[r0:r1, c0:c1]
     raise ValueError(f"{node.op} is not a leaf")
 
 
@@ -283,6 +318,8 @@ def materialize_leaf(node: ClusteredMatrix) -> np.ndarray:
         return np.zeros(node.shape, node.dtype)
     if node.op is Op.EYE:
         return np.eye(node.shape[0], dtype=node.dtype)
+    if node.op is Op.RESIDENT:
+        return np.asarray(node.to_numpy())
     raise ValueError(f"{node.op} is not a leaf")
 
 
@@ -291,10 +328,14 @@ def apply_scale(kind: str, x: np.ndarray, s: float) -> np.ndarray:
         return x + s
     if kind in ("sub",):
         return x - s
+    if kind == "rsub":
+        return s - x
     if kind in ("scale", "mul", "ewmul"):
         return x * s
     if kind == "div":
         return x / s
+    if kind == "rdiv":
+        return s / x
     raise ValueError(f"unknown scalar op {kind}")
 
 
@@ -302,7 +343,7 @@ def eager_eval(root: ClusteredMatrix) -> np.ndarray:
     """Pure-NumPy oracle used to validate the tiled/scheduled execution."""
     vals = {}
     for node in topo_order(root):
-        if node.op in (Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE):
+        if node.op in (Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE, Op.RESIDENT):
             vals[node.uid] = materialize_leaf(node)
         elif node.op is Op.ADD:
             vals[node.uid] = vals[node.parents[0].uid] + vals[node.parents[1].uid]

@@ -1,0 +1,507 @@
+"""CMMSession: resident distributed tiles across ``compute()`` calls.
+
+The one-shot engine path (``CMMEngine.run``) re-fills every leaf, executes,
+gathers the full ndarray to the master and discards all executor state —
+so iterative workloads (power iteration, the paper's Markov chain) pay
+scatter/gather and re-fill on every step that a resident cluster never
+pays.  numpywren keeps intermediates in remote storage between stages and
+DistStat.jl's distributed arrays stay resident across calls; this module
+brings that to CMM:
+
+* :class:`CMMSession` owns a **long-lived executor** (worker processes and
+  their shared-memory arenas survive across runs for the cluster/elastic
+  backends) and a **residency table** mapping handles to live tiles;
+* :meth:`CMMSession.persist` computes an expression and leaves the result
+  **tiled in the executor's arenas** (local slab / per-node SharedMemory),
+  returning a :class:`ResidentMatrix`;
+* a ``ResidentMatrix`` re-enters later expressions as a zero-cost,
+  location-pinned leaf: tiling maps its tiles one-for-one onto RESIDENT
+  tasks (no FILL, no gather), HEFT pins each RESIDENT task to the node
+  whose arena holds the tile, and the simulator prices it at ~0 so
+  ``auto`` verdicts stay honest;
+* :meth:`ResidentMatrix.to_numpy` gathers on demand;
+* on the **elastic** backend a resident tile lost to a node death is a
+  *recomputable root*: every handle carries the expression (lineage) that
+  produced it, and the session transparently re-derives lost handles from
+  lineage — numpywren-style recovery extended across runs.
+
+Bit-identity contract: a persisted k-step chain is bitwise identical to
+the equivalent one-shot expression on every backend, because each step
+executes the same tiled kernels on the same bits and tile movement is
+bit-copying (asserted in ``tests/test_session.py``).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .engine import CMMEngine, Plan
+from .lazy import ClusteredMatrix, Op, topo_order_many
+from .tiling import normalize_tile, grid_of, tile_slices, result_sets_of
+
+_hid_counter = itertools.count(1)
+_hid_lock = threading.Lock()
+
+
+def _next_hid() -> int:
+    with _hid_lock:
+        return next(_hid_counter)
+
+
+class ResidentTilesLost(RuntimeError):
+    """Raised by an elastic executor when tiles of a resident handle were
+    on a node that died (and no live copy remains).  The session catches
+    it, re-derives the named handles from lineage and retries the run."""
+
+    def __init__(self, hids: Sequence[int], msg: str = ""):
+        self.hids = tuple(sorted(set(hids)))
+        super().__init__(msg or f"resident tiles lost for handles "
+                                f"{self.hids}")
+
+
+@dataclass
+class ResidentHandle:
+    """Identity + location of one persisted result's tiles.
+
+    Pure data (no session/executor references) so it can cross a process
+    boundary if it ever needs to; all tile *storage* lives in the session
+    (ndarrays for in-process backends, (node, segment, dtype) triples for
+    the multi-process ones).
+    """
+
+    hid: int
+    shape: Tuple[int, int]
+    dtype: "np.dtype"
+    tile: Tuple[int, int]
+    grid: Tuple[int, int]
+    #: (i, j) -> node whose arena holds that tile (0 for in-process)
+    home: Dict[Tuple[int, int], int] = field(default_factory=dict)
+    name: str = ""
+    #: the expression that produced this handle — the recompute lineage.
+    #: May itself reference other ResidentMatrix leaves (lineage chains).
+    lineage: Optional[ClusteredMatrix] = None
+    alive: bool = True
+    #: tiles lost to a node death; next use re-derives from lineage
+    lost: bool = False
+
+    def tiles(self):
+        gm, gn = self.grid
+        for i in range(gm):
+            for j in range(gn):
+                yield (i, j)
+
+
+class ResidentMatrix(ClusteredMatrix):
+    """A persisted result as a lazy leaf: composes with every
+    ``ClusteredMatrix`` operator, but its tiles are already resident in
+    the session executor's arenas — re-entering an expression costs no
+    FILL and no gather."""
+
+    def __init__(self, handle: ResidentHandle, session: "CMMSession",
+                 name: str = ""):
+        super().__init__(Op.RESIDENT, handle.shape, handle.dtype,
+                         payload=handle, name=name or handle.name)
+        self._session = session
+
+    @property
+    def handle(self) -> ResidentHandle:
+        return self.payload
+
+    def to_numpy(self) -> np.ndarray:
+        """Gather the resident tiles into one ndarray (on demand — the
+        only point where resident data crosses back to the master)."""
+        return self._session.gather(self.handle)
+
+    def free(self) -> None:
+        """Release this handle's tiles from the executor arenas."""
+        self._session.free(self.handle)
+
+
+class SessionResidency:
+    """Per-run residency view handed to the executor via ``plan.residency``:
+    read access to resident input tiles and retention sinks for persisted
+    outputs.  All storage lives on the session; this object scopes one run's
+    leaf-uid / root-uid namespaces onto it."""
+
+    def __init__(self, session: "CMMSession",
+                 handles: Dict[int, ResidentHandle],
+                 retain: Dict[int, ResidentHandle]):
+        self._session = session
+        #: leaf expr uid -> handle (resident INPUTS of this run)
+        self.handles = handles
+        #: root expr uid -> handle (persisted OUTPUTS of this run)
+        self.retain = retain
+
+    # -- executor read path (in-process backends) ---------------------------
+    def tile(self, leaf_uid: int, i: int, j: int) -> np.ndarray:
+        h = self.handles[leaf_uid]
+        return self._session._tiles[(h.hid, i, j)]
+
+    # -- executor read path (multi-process backends) ------------------------
+    def seg(self, leaf_uid: int, i: int, j: int) -> Tuple[int, str, str]:
+        h = self.handles[leaf_uid]
+        return self._session._segs[(h.hid, i, j)]
+
+    def resident_ids(self) -> Dict[int, int]:
+        """leaf uid -> handle id (what cluster workers need to resolve a
+        RESIDENT task against their retained arena store)."""
+        return {uid: h.hid for uid, h in self.handles.items()}
+
+    # -- executor retention sinks -------------------------------------------
+    def retain_local(self, root_uid: int, i: int, j: int,
+                     arr: np.ndarray) -> None:
+        h = self.retain[root_uid]
+        self._session._tiles[(h.hid, i, j)] = arr
+        h.home[(i, j)] = 0
+
+    def retain_seg(self, root_uid: int, i: int, j: int, node: int,
+                   segname: str, dtype_str: str) -> None:
+        h = self.retain[root_uid]
+        self._session._segs[(h.hid, i, j)] = (node, segname, dtype_str)
+        h.home[(i, j)] = node
+
+
+#: executor registry names that run inside the master process (tile storage
+#: is plain ndarrays owned by the session)
+_INPROC = ("local", "kernel", "batched", "batched-pallas")
+
+
+class CMMSession:
+    """The session engine: plan-cache-backed compute over a long-lived
+    executor whose arenas persist between calls.
+
+    ::
+
+        with CMMSession(engine, executor="cluster", tile=32) as s:
+            P = s.persist(CM.rand(n, n, seed=0))      # tiles stay remote
+            u = s.persist(CM.rand(n, 1, seed=1))
+            for _ in range(k):
+                u = s.persist(P @ u)                  # no gather, no refill
+            result = u.to_numpy()                     # one gather, at the end
+
+    ``executor`` is a registry name; for ``"cluster"``/``"elastic"`` the
+    worker processes are spawned once and survive across runs, and
+    persisted tiles live in the workers' shared-memory arenas.  ``close()``
+    frees every live handle, audits the worker arenas for leaks (refcount
+    audit) and shuts the workers down; the session is also a context
+    manager.
+    """
+
+    def __init__(self, engine: Optional[CMMEngine] = None,
+                 executor: str = "local", tile=None, **exec_kw):
+        self.engine = engine or CMMEngine()
+        self.executor = executor
+        self.tile = tile if tile is not None else self.engine.tile
+        self._tiles: Dict[Tuple[int, int, int], np.ndarray] = {}
+        self._segs: Dict[Tuple[int, int, int], Tuple[int, str, str]] = {}
+        self._handles: Dict[int, ResidentHandle] = {}
+        self._closed = False
+        self.stats: Dict[str, object] = {}
+        if executor in _INPROC:
+            from ..exec import make_executor
+            self._exec = make_executor(executor, **exec_kw)
+        elif executor == "cluster":
+            from ..exec.cluster import ClusterExecutor
+            self._exec = ClusterExecutor(session=True, **exec_kw)
+        elif executor == "elastic":
+            from ..exec.elastic import ElasticClusterExecutor
+            exec_kw.setdefault("timemodel", self.engine.timemodel)
+            self._exec = ElasticClusterExecutor(session=True, **exec_kw)
+        else:
+            raise ValueError(f"unknown session executor {executor!r}")
+
+    # -- public API ----------------------------------------------------------
+    def compute(self, expr: ClusteredMatrix, tile=None) -> np.ndarray:
+        """Materialise one expression (resident leaves enter at zero cost)."""
+        return self._run([expr], persist=(), tile=tile)[0]
+
+    def compute_many(self, exprs: Sequence[ClusteredMatrix],
+                     tile=None) -> List[np.ndarray]:
+        """Materialise several roots as ONE program: subexpressions shared
+        across roots are planned and executed once (shared CSE)."""
+        return self._run(list(exprs), persist=(), tile=tile)
+
+    def persist(self, expr: ClusteredMatrix, name: str = "",
+                tile=None) -> ResidentMatrix:
+        """Compute ``expr`` and keep the result tiled in the executor's
+        arenas; returns the handle as a reusable lazy leaf."""
+        if isinstance(expr, ResidentMatrix) and expr._session is self \
+                and expr.handle.alive and not expr.handle.lost:
+            return expr                     # already resident here
+        (rm,) = self._run([expr], persist=(0,), tile=tile, names=(name,))
+        return rm
+
+    def gather(self, handle: ResidentHandle) -> np.ndarray:
+        """Assemble a resident handle's tiles into one master ndarray."""
+        self._check_handle(handle)
+        if handle.lost:
+            self._recompute(handle)
+        rows = tile_slices(handle.shape[0], handle.tile[0])
+        cols = tile_slices(handle.shape[1], handle.tile[1])
+        out = np.empty(handle.shape, dtype=handle.dtype)
+        for (i, j) in handle.tiles():
+            key = (handle.hid, i, j)
+            if key in self._tiles:
+                t = self._tiles[key]
+            else:
+                t = self._attach_tile(key)
+            (r0, r1), (c0, c1) = rows[i], cols[j]
+            out[r0:r1, c0:c1] = t
+        return out
+
+    def free(self, handle: ResidentHandle) -> None:
+        """Drop a handle's tiles from the arenas (its ResidentMatrix
+        leaves become unusable; dependents lose their recompute lineage)."""
+        if not handle.alive:
+            return
+        handle.alive = False
+        self._handles.pop(handle.hid, None)
+        for (i, j) in handle.tiles():
+            self._tiles.pop((handle.hid, i, j), None)
+            ent = self._segs.pop((handle.hid, i, j), None)
+            if ent is not None:
+                self._drop_seg(handle.hid, i, j, ent)
+
+    def close(self) -> Dict[str, object]:
+        """Free every live handle, audit the executor arenas for leaks and
+        shut down the long-lived executor.  Raises ``RuntimeError`` if the
+        refcount audit finds stranded buffers (a retained tile the session
+        no longer tracks, or a run that leaked arena segments)."""
+        if self._closed:
+            return self.stats
+        for h in list(self._handles.values()):
+            self.free(h)
+        audit: Dict[str, object] = {"handles_leaked": len(self._handles),
+                                    "local_tiles_leaked": len(self._tiles)}
+        if hasattr(self._exec, "close_session"):
+            audit["arena"] = self._exec.close_session()
+        self._closed = True
+        self.stats["audit"] = audit
+        leaked = audit["local_tiles_leaked"] or audit["handles_leaked"]
+        arena = audit.get("arena") or {}
+        for node, st in arena.items():
+            leaked = leaked or st.get("live_buffers", 0) \
+                or st.get("retained", 0)
+        if leaked:
+            raise RuntimeError(f"session arena audit failed: {audit}")
+        return audit
+
+    def __enter__(self) -> "CMMSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+        else:                    # don't mask the original error
+            try:
+                self.close()
+            except Exception:
+                pass
+
+    # -- internals -----------------------------------------------------------
+    def _sync_spec(self) -> None:
+        """After an elastic run, membership may have changed (deaths drain
+        nodes, joins append them).  Future plans must target the executor's
+        current spec, or they would place tasks on nodes that left — and
+        EVERY handle with tiles homed on a departed node is lost, not just
+        the ones the failed run happened to read (their next use
+        re-derives them from lineage)."""
+        cur = getattr(self._exec, "current_spec", None)
+        if cur is None:
+            return
+        if cur != self.engine.spec:
+            self.engine.spec = cur
+        alive = set(cur.alive_nodes())
+        for h in self._handles.values():
+            if not h.lost and any(n not in alive for n in h.home.values()):
+                h.lost = True
+
+    def _check_handle(self, handle: ResidentHandle) -> None:
+        if not handle.alive:
+            raise ValueError(f"resident handle #{handle.hid} "
+                             f"({handle.name!r}) was freed")
+        if handle.hid not in self._handles:
+            raise ValueError(f"resident handle #{handle.hid} does not "
+                             f"belong to this session")
+
+    def _attach_tile(self, key) -> np.ndarray:
+        """Read one tile out of a worker arena segment (cluster backends)."""
+        node, sname, dt = self._segs[key]
+        from ..exec.cluster import _attach_shm
+        hid, i, j = key
+        h = self._handles[hid]
+        from .tiling import tile_shape
+        shp = tile_shape(h.shape, h.tile, i, j)
+        seg = _attach_shm(sname)
+        try:
+            view = np.ndarray(shp, dtype=np.dtype(dt), buffer=seg.buf)
+            return view.copy()
+        finally:
+            seg.close()
+
+    def _drop_seg(self, hid: int, i: int, j: int, ent) -> None:
+        """Tell the owning worker to drop a retained segment."""
+        drop = getattr(self._exec, "drop_retained", None)
+        if drop is not None:
+            drop(ent[0], (hid, i, j))
+
+    def _prepare(self, roots: Sequence[ClusteredMatrix], tile
+                 ) -> List[ClusteredMatrix]:
+        """Validate/normalise resident leaves for this run: foreign or
+        freed handles are errors; lost handles are re-derived from lineage;
+        a handle persisted at a different tile size is transparently
+        gathered and re-enters as an INPUT leaf (correct, just not
+        zero-cost)."""
+        t = normalize_tile(tile)
+        subst: Dict[int, ClusteredMatrix] = {}
+        for node in topo_order_many(roots):
+            if node.op is not Op.RESIDENT:
+                continue
+            if not isinstance(node, ResidentMatrix) or node._session is not \
+                    self:
+                raise ValueError(
+                    f"resident leaf #{node.uid} does not belong to this "
+                    f"session (persist() it here first)")
+            h = node.handle
+            self._check_handle(h)
+            if h.lost:
+                self._recompute(h)
+            if tuple(h.tile) != t:
+                subst[node.uid] = ClusteredMatrix.from_array(
+                    self.gather(h), name=h.name or node.name)
+        if not subst:
+            return list(roots)
+        new: Dict[int, ClusteredMatrix] = {}
+        for node in topo_order_many(roots):
+            if node.uid in subst:
+                new[node.uid] = subst[node.uid]
+                continue
+            parents = tuple(new[p.uid] for p in node.parents)
+            new[node.uid] = node if parents == node.parents else \
+                ClusteredMatrix(node.op, node.shape, node.dtype,
+                                parents=parents, payload=node.payload,
+                                name=node.name)
+        return [new[r.uid] for r in roots]
+
+    def _tile_for(self, roots: Sequence[ClusteredMatrix], tile):
+        if tile is not None:
+            return normalize_tile(tile)
+        if self.tile is not None:
+            return normalize_tile(self.tile)
+        return normalize_tile(self.engine._default_tile(roots))
+
+    def _run(self, roots: List[ClusteredMatrix], persist: Sequence[int],
+             tile=None, names: Sequence[str] = (), _retries: int = 2):
+        if self._closed:
+            raise RuntimeError("session is closed")
+        t = self._tile_for(roots, tile)
+        prepared = self._prepare(roots, t)
+        plan = self.engine.plan_many(prepared, tile=t, persist=persist)
+        prog = plan.program
+
+        handles: Dict[int, ResidentHandle] = {
+            uid: n.payload for uid, n in prog.leaf_nodes.items()
+            if n.op is Op.RESIDENT}
+        retain: Dict[int, ResidentHandle] = {}
+        new_handles: List[Tuple[int, ResidentHandle]] = []
+        rsets = result_sets_of(prog.graph)
+        for rs in rsets:
+            if rs.gather:
+                continue
+            name = names[rs.index] if rs.index < len(names) else ""
+            h = ResidentHandle(_next_hid(), rs.shape,
+                               np.dtype(prog.dtypes.get(rs.uid, np.float64)),
+                               t, rs.grid, name=name,
+                               lineage=roots[rs.index])
+            retain[rs.uid] = h
+            new_handles.append((rs.index, h))
+
+        plan.residency = SessionResidency(self, handles, retain)
+        try:
+            gathered = self.engine.execute_plan(plan, executor=self.executor,
+                                                executor_obj=self._exec)
+        except ResidentTilesLost as e:
+            # a node died holding resident input tiles: re-derive the lost
+            # handles from lineage, then retry the whole run (deterministic
+            # tasks -> the retry is bit-identical)
+            self._sync_spec()
+            if _retries <= 0:
+                raise
+            for (_idx, h) in new_handles:     # abandon half-retained runs
+                self.free(h)
+            for hid in e.hids:
+                h = self._handles.get(hid)
+                if h is not None:
+                    h.lost = True
+            return self._run(roots, persist, tile=tile, names=names,
+                             _retries=_retries - 1)
+        self._sync_spec()
+        self.stats["last_exec"] = dict(self._exec.stats)
+
+        for (_idx, h) in new_handles:
+            missing = [ij for ij in h.tiles()
+                       if (h.hid,) + ij not in self._tiles
+                       and (h.hid,) + ij not in self._segs]
+            if missing:                       # pragma: no cover — defensive
+                raise RuntimeError(f"executor retained no tile for "
+                                   f"{missing[:4]} of handle #{h.hid}")
+            self._handles[h.hid] = h
+
+        # outputs in root order: gathered ndarrays for computed roots,
+        # ResidentMatrix for persisted ones
+        n_gather = sum(1 for rs in rsets if rs.gather)
+        if gathered is None:
+            garr: List[np.ndarray] = []
+        elif isinstance(gathered, list):
+            garr = gathered
+        else:
+            garr = [gathered]
+        if len(garr) != n_gather:             # pragma: no cover — defensive
+            raise RuntimeError(f"executor returned {len(garr)} results for "
+                               f"{n_gather} gathered roots")
+        out: List[object] = [None] * len(roots)
+        gi = iter(garr)
+        by_index = {idx: h for idx, h in new_handles}
+        for rs in rsets:
+            if rs.gather:
+                out[rs.index] = next(gi)
+            else:
+                out[rs.index] = ResidentMatrix(by_index[rs.index], self)
+        return out
+
+    def _recompute(self, handle: ResidentHandle) -> None:
+        """Re-derive a lost handle's tiles from its lineage expression,
+        writing them back under the SAME hid so existing ResidentMatrix
+        leaves stay valid."""
+        if handle.lineage is None:
+            raise ResidentTilesLost(
+                (handle.hid,),
+                f"resident handle #{handle.hid} lost its tiles and has no "
+                f"lineage to recompute from")
+        # drop stale locations, then persist the lineage into this handle.
+        # Surviving nodes may still hold retained segments of the old
+        # incarnation — tell them to release (a dead node's queue is gone
+        # and its segments were reaped with it).
+        for (i, j) in handle.tiles():
+            self._tiles.pop((handle.hid, i, j), None)
+            ent = self._segs.pop((handle.hid, i, j), None)
+            if ent is not None:
+                self._drop_seg(handle.hid, i, j, ent)
+        handle.home.clear()
+        handle.lost = False                  # set before the run so nested
+        prepared = self._prepare([handle.lineage], handle.tile)
+        plan = self.engine.plan_many(prepared, tile=handle.tile,
+                                     persist=(0,))
+        prog = plan.program
+        handles = {uid: n.payload for uid, n in prog.leaf_nodes.items()
+                   if n.op is Op.RESIDENT}
+        rs = next(r for r in result_sets_of(prog.graph) if not r.gather)
+        plan.residency = SessionResidency(self, handles, {rs.uid: handle})
+        self.engine.execute_plan(plan, executor=self.executor,
+                                 executor_obj=self._exec)
+        self.stats["recomputed_handles"] = \
+            self.stats.get("recomputed_handles", 0) + 1

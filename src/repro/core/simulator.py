@@ -227,9 +227,12 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
             while ready[n]:
                 _, tid = ready[n][0]
                 t = g.tasks[tid]
-                if t.kind is TaskKind.CALLOC:
+                if t.kind in (TaskKind.CALLOC, TaskKind.RESIDENT):
                     heapq.heappop(ready[n])
-                    dur = 1e-6  # async (§3.3): no worker slot occupied
+                    # CALLOC is async (§3.3); RESIDENT binds an
+                    # already-materialised session tile — zero-cost
+                    # inputs, so `auto` verdicts stay honest
+                    dur = 1e-6  # no worker slot occupied
                     intervals.append(Interval(tid, t.kind.value, n, -1,
                                               now, now + dur))
                     push(now + dur, "task_done", tid)

@@ -10,10 +10,11 @@ structure of Fig. 2.
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .graph import Task, TaskGraph, TaskKind, TileRef
-from .lazy import ClusteredMatrix, Op, topo_order
+from .lazy import ClusteredMatrix, Op, topo_order, topo_order_many
 
 
 def cld(a: int, b: int) -> int:
@@ -45,16 +46,37 @@ def normalize_tile(tile) -> Tuple[int, int]:
     return (int(tm), int(tn))
 
 
+@dataclass
+class ResultSet:
+    """One root's output tiles in the (possibly multi-root) tiled program.
+
+    ``gather=True`` roots get TAKECOPY tasks and are assembled on the
+    master; ``gather=False`` roots are session-persisted — their tiles
+    stay in the executor arenas (``producers`` maps each tile to the task
+    that writes its final value, whose placement is the tile's home)."""
+
+    uid: int                              # root expr-node uid
+    index: int                            # position in the roots list
+    shape: Tuple[int, int]
+    grid: Tuple[int, int]
+    tiles: List[TileRef] = field(default_factory=list)
+    producers: Dict[TileRef, int] = field(default_factory=dict)
+    gather: bool = True
+
+
 class TiledProgram:
     """Result of tiling: the task graph plus tile bookkeeping for execution."""
 
     def __init__(self, graph: TaskGraph, tile: Tuple[int, int],
                  root: ClusteredMatrix,
                  leaf_nodes: Dict[int, ClusteredMatrix],
-                 dtypes: Optional[Dict[int, "object"]] = None):
+                 dtypes: Optional[Dict[int, "object"]] = None,
+                 roots: Optional[Sequence[ClusteredMatrix]] = None):
         self.graph = graph
         self.tile = tile
         self.root = root
+        #: every root of the (multi-root) program, in caller order
+        self.roots = list(roots) if roots is not None else [root]
         #: expr-node uid -> leaf ClusteredMatrix (for FILL materialisation)
         self.leaf_nodes = leaf_nodes
         #: expr-node uid -> np.dtype (CALLOC must allocate in the expression
@@ -71,17 +93,32 @@ class TiledProgram:
             raise ValueError("leaf count mismatch on plan-cache rebind")
         leaf_nodes = dict(zip(self.leaf_order, new_leaves))
         p = TiledProgram(self.graph, self.tile, self.root, leaf_nodes,
-                         self.dtypes)
+                         self.dtypes, roots=self.roots)
         p.leaf_order = list(self.leaf_order)
         return p
 
 
 def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
-    """Expand the expression DAG into a tiled TaskGraph.
+    """Expand one expression DAG into a tiled TaskGraph (single-root
+    wrapper over :func:`tile_expression_many`)."""
+    return tile_expression_many((root,), tile)
+
+
+def tile_expression_many(roots: Sequence[ClusteredMatrix], tile,
+                         persist_idx: frozenset = frozenset()
+                         ) -> TiledProgram:
+    """Expand one or more expression DAGs into ONE tiled TaskGraph.
 
     Per node we keep ``producer[(i, j)]`` — the task id that last wrote tile
     ``(i, j)`` of that node's output — so consumers depend on exactly the
     right task (for matmul that is the *last* addmul of the k-chain).
+
+    Roots whose *position* is in ``persist_idx`` are session-persisted:
+    they get NO takecopy tasks — their tiles stay wherever their final
+    producers ran (the ``ResultSet.producers`` map records which task that
+    is per tile).  RESIDENT leaves expand to one zero-cost RESIDENT task
+    per tile instead of FILLs: the tile is already bound in an executor
+    arena and just re-enters this run's buffer namespace.
     """
     t = normalize_tile(tile)
     g = TaskGraph()
@@ -93,12 +130,27 @@ def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
     def ref(node: ClusteredMatrix, i: int, j: int) -> TileRef:
         return TileRef(node.uid, i, j, tile_shape(node.shape, t, i, j))
 
-    for node in topo_order(root):
+    for node in topo_order_many(roots):
         gm, gn = grid_of(node.shape, t)
         entry: Dict[Tuple[int, int], Tuple[TileRef, int]] = {}
         dtypes[node.uid] = node.dtype
 
-        if node.op in (Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE):
+        if node.op is Op.RESIDENT:
+            h = node.payload
+            if h is None or tuple(h.tile) != t:
+                raise ValueError(
+                    f"resident leaf #{node.uid} holds tiles of size "
+                    f"{None if h is None else h.tile}, but this program "
+                    f"tiles at {t}; gather + re-ingest (the session does "
+                    f"this automatically) or re-plan at the handle's tile")
+            leaf_nodes[node.uid] = node
+            for i in range(gm):
+                for j in range(gn):
+                    r = ref(node, i, j)
+                    task = g.add(TaskKind.RESIDENT, (), r, payload=node.uid)
+                    entry[(i, j)] = (r, task.tid)
+
+        elif node.op in (Op.INPUT, Op.RANDOM, Op.ZEROS, Op.EYE):
             leaf_nodes[node.uid] = node
             for i in range(gm):
                 for j in range(gn):
@@ -224,18 +276,44 @@ def tile_expression(root: ClusteredMatrix, tile) -> TiledProgram:
 
         tiles[node.uid] = entry
 
-    # takecopy: gather every result tile to the master node.  Each takecopy
-    # depends only on its own producer chain (§3.3 optimisation: originally
-    # serialised behind *all* jobs; CMM made it depend only on its subtree).
-    gm, gn = grid_of(root.shape, t)
-    for i in range(gm):
-        for j in range(gn):
-            r, p = tiles[root.uid][(i, j)]
-            g.add(TaskKind.TAKECOPY, (r,), r, deps=(p,))
-            g.result_tiles.append(r)
-    g.result_grid = (gm, gn)
-    g.result_shape = root.shape
-    return TiledProgram(g, t, root, leaf_nodes, dtypes)
+    # takecopy: gather every result tile of a non-persisted root to the
+    # master node.  Each takecopy depends only on its own producer chain
+    # (§3.3 optimisation: originally serialised behind *all* jobs; CMM made
+    # it depend only on its subtree).  Persisted roots skip the gather —
+    # their tiles are retained in place by the executor.
+    g.result_sets = []
+    for idx, root in enumerate(roots):
+        gm, gn = grid_of(root.shape, t)
+        rs = ResultSet(root.uid, idx, root.shape, (gm, gn),
+                       gather=idx not in persist_idx)
+        for i in range(gm):
+            for j in range(gn):
+                r, p = tiles[root.uid][(i, j)]
+                rs.tiles.append(r)
+                rs.producers[r] = p
+                if rs.gather:
+                    g.add(TaskKind.TAKECOPY, (r,), r, deps=(p,))
+        g.result_sets.append(rs)
+    # backward-compatible single-root view: the first gathered root
+    first = next((rs for rs in g.result_sets if rs.gather),
+                 g.result_sets[0] if g.result_sets else None)
+    if first is not None:
+        g.result_tiles = list(first.tiles)
+        g.result_grid = first.grid
+        g.result_shape = first.shape
+    return TiledProgram(g, t, roots[0], leaf_nodes, dtypes, roots=roots)
+
+
+def result_sets_of(g) -> List[ResultSet]:
+    """The graph's per-root output sets, synthesizing the legacy single
+    ``result_tiles`` view for hand-built graphs (tests, benchmarks)."""
+    rs = getattr(g, "result_sets", None)
+    if rs:
+        return rs
+    tiles = list(g.result_tiles)
+    uid = tiles[0].tensor if tiles else -1
+    return [ResultSet(uid, 0, g.result_shape, g.result_grid, tiles,
+                      {}, True)]
 
 
 def assemble(tile_values: Dict[TileRef, "object"],

@@ -55,6 +55,8 @@ KIND_FAMILY = {
     TaskKind.CALLOC: "ewise",
     TaskKind.FILL: "ewise",
     TaskKind.TAKECOPY: "ewise",
+    TaskKind.RESIDENT: "ewise",   # backstop only: planning special-cases
+                                  # RESIDENT to ~0 like CALLOC
 }
 
 
@@ -135,6 +137,9 @@ class TimeModel:
         kind = task.kind
         if kind in (TaskKind.SEND, TaskKind.RECV):
             raise ValueError("comm tasks are costed by comm_time()")
+        if kind is TaskKind.RESIDENT:
+            # binding an already-resident tile is a dict lookup, not work
+            return 1e-9
         family = KIND_FAMILY[kind]
         model = self.models.get(kind.value) or self.models.get(family)
         if model is None:

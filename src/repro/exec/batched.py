@@ -49,7 +49,7 @@ from ..core.graph import Task, TaskGraph, TaskKind, TileRef, matmul_flags
 from ..core.lazy import EWISE_FNS, Op, apply_scale, leaf_slice
 from ..core.machine import ClusterSpec
 from ..core.timemodel import CostCache, TimeModel
-from ..core.tiling import assemble, tile_slices
+from ..core.tiling import assemble, result_sets_of, tile_slices
 
 
 def build_waves(g: TaskGraph) -> List[List[int]]:
@@ -90,6 +90,8 @@ def _group_key(t: Task, dtypes: Dict[int, object]) -> tuple:
     if k is TaskKind.CALLOC:
         return (k, t.out.shape, dt(t.out))
     if k is TaskKind.FILL:
+        return (k, t.out.shape, dt(t.out))
+    if k is TaskKind.RESIDENT:
         return (k, t.out.shape, dt(t.out))
     if k in (TaskKind.ADD, TaskKind.SUB, TaskKind.EWMUL):
         return (k, t.out.shape, dt(t.ins[0]), dt(t.ins[1]))
@@ -216,11 +218,18 @@ class WaveExecutor:
 
     # -- group kernels -----------------------------------------------------
     def _run_group(self, kind: TaskKind, tasks: List[Task], buffers, arena,
-                   leaf_nodes, dtypes, tile) -> None:
+                   leaf_nodes, dtypes, tile, residency=None) -> None:
         self.stats["batched_calls"] += 1
         outs = [t.out for t in tasks]
 
         if kind is TaskKind.TAKECOPY:
+            return
+
+        if kind is TaskKind.RESIDENT:
+            # session-resident tiles: zero-copy aliases into this run's
+            # buffer namespace; NOT registered in the arena (session-owned)
+            for t in tasks:
+                buffers[t.out] = residency.tile(t.payload, t.out.i, t.out.j)
             return
 
         if kind is TaskKind.CALLOC:
@@ -328,6 +337,8 @@ class WaveExecutor:
         tile = plan.tile
         leaf_nodes = plan.program.leaf_nodes
         dtypes = plan.program.dtypes
+        residency = getattr(plan, "residency", None)
+        rsets = result_sets_of(g)
         waves = getattr(plan, "waves", None) or build_waves(g)
 
         buffers: Dict[TileRef, np.ndarray] = {}
@@ -335,13 +346,16 @@ class WaveExecutor:
         self.stats = {"zero_copy_gathers": 0, "copied_gathers": 0,
                       "batched_calls": 0}
 
-        # readers per tile (+1 keeps result tiles alive for assembly)
+        # readers per tile (+1 keeps result tiles alive for assembly and
+        # persisted tiles alive for session retention — retained tiles are
+        # excluded from slab refcount freeing)
         refcnt: Dict[TileRef, int] = {}
         for t in g:
             for r in t.ins:
                 refcnt[r] = refcnt.get(r, 0) + 1
-        for r in g.result_tiles:
-            refcnt[r] = refcnt.get(r, 0) + 1
+        for rs in rsets:
+            for r in rs.tiles:
+                refcnt[r] = refcnt.get(r, 0) + 1
         # an ADDMUL chain rewrites its C tile: every chain step after the
         # slab's CALLOC holds the tile alive even though it is not in `ins`
         for t in g:
@@ -353,7 +367,8 @@ class WaveExecutor:
         for wave in waves:
             for (key, tasks) in group_wave(g, wave, dtypes):
                 self._run_group(key[0], tasks, buffers, arena,
-                                leaf_nodes, dtypes, tile)
+                                leaf_nodes, dtypes, tile,
+                                residency=residency)
                 tasks_run += len(tasks)
                 if not self.free_buffers:
                     continue
@@ -369,6 +384,28 @@ class WaveExecutor:
                             arena.release_tile(r)
                             buffers.pop(r, None)
 
+        # retention: persisted roots' tiles move to the session store.
+        # Wave tiles are views into per-wave SLABS — retaining the view
+        # would pin the whole slab (every same-wave tile) for the
+        # handle's lifetime, and INPUT-leaf views alias the user's array
+        # — so view-backed tiles are copied out; only standalone arrays
+        # transfer zero-copy.
+        retained = 0
+        outs = []
+        gather_bytes = 0
+        for rs in rsets:
+            if rs.gather:
+                vals = {r: buffers[r] for r in rs.tiles}
+                gather_bytes += sum(r.bytes for r in rs.tiles)
+                outs.append(assemble(vals, rs.shape, tile, rs.uid))
+            else:
+                for r in rs.tiles:
+                    buf = buffers[r]
+                    if buf.base is not None:
+                        buf = np.ascontiguousarray(buf)
+                    residency.retain_local(rs.uid, r.i, r.j, buf)
+                    retained += 1
+
         self.stats.update({
             "peak_buffer_bytes": arena.peak_bytes,
             "cur_buffer_bytes": arena.cur_bytes,
@@ -376,9 +413,12 @@ class WaveExecutor:
             "buffers_freed": arena.slabs_freed,
             "tasks_run": tasks_run,
             "waves": len(waves),
+            "gather_bytes": gather_bytes,
+            "retained_tiles": retained,
         })
-        vals = {r: buffers[r] for r in g.result_tiles}
-        return assemble(vals, g.result_shape, tile, g.result_tiles[0].tensor)
+        if not outs:
+            return None
+        return outs[0] if len(outs) == 1 else outs
 
 
 def predict_wave_makespan(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
@@ -406,8 +446,8 @@ def predict_wave_makespan(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
             kind = key[0]
             if kind is TaskKind.TAKECOPY:
                 continue
-            if kind is TaskKind.CALLOC:
-                total += 1e-6      # calloc slab: zero pages, near-free
+            if kind in (TaskKind.CALLOC, TaskKind.RESIDENT):
+                total += 1e-6      # calloc slab / resident bind: near-free
                 continue
             kern = sum(cost.kernel(t) for t in tasks)
             total += tm.batch_dispatch_overhead + kern / par

@@ -61,7 +61,7 @@ import numpy as np
 from ..core.fusion import eval_fused
 from ..core.graph import TaskGraph, TaskKind, TileRef, matmul_flags
 from ..core.heft import Schedule, edge_bytes
-from ..core.lazy import EWISE_FNS, apply_scale, leaf_slice
+from ..core.lazy import EWISE_FNS, Op, apply_scale, leaf_slice
 from ..core.machine import ClusterSpec
 from ..core.timemodel import TimeModel
 from ..core.tiling import assemble, tile_slices
@@ -110,18 +110,33 @@ def _release_seg(seg, unlink: bool = True) -> None:
 
 class _NodeArena:
     """One node's shared-memory tile arena: a segment per live buffer,
-    with exec/local.py-style owned-bytes accounting."""
+    with exec/local.py-style owned-bytes accounting.
+
+    Session residency adds two orthogonal states to a binding:
+
+    * **retained** — a segment moved out of the per-run ref namespace into
+      the session store (keyed by ``(handle id, i, j)``); it survives
+      end-of-run freeing and later runs, until the session drops it;
+    * **alias** — a ref bound onto a retained segment by a RESIDENT task
+      (zero-copy re-entry).  Freeing or rebinding an alias drops only the
+      binding, never the underlying retained segment.
+    """
 
     def __init__(self, prefix: str, node: int):
         self._lock = threading.Lock()
         self._segs: Dict[TileRef, object] = {}
         self._arrs: Dict[TileRef, np.ndarray] = {}
+        #: session-retained segments: (hid, i, j) -> (seg, arr)
+        self._retained: Dict[Tuple[int, int, int], Tuple[object, object]] = {}
+        #: refs whose binding aliases a retained segment (not owned)
+        self._alias: set = set()
         self._count = itertools.count()
         self._prefix = f"{prefix}n{node}"
         self.cur = 0
         self.peak = 0
         self.freed = 0
         self.allocs = 0
+        self.retained_bytes = 0
 
     def _new_seg(self, nbytes: int):
         from multiprocessing import shared_memory
@@ -157,11 +172,14 @@ class _NodeArena:
             # duplicate-producer rebind sees the old or new buffer, both
             # holding the same tile value)
             old = self._segs.get(ref)
+            was_alias = ref in self._alias
+            self._alias.discard(ref)
             self._segs[ref] = seg
             self._arrs[ref] = arr
-            if old is not None:
+            if old is not None and not was_alias:
                 # rebind over a superseded version: release the old
-                # allocation's bytes (the exec/local.py drift fix)
+                # allocation's bytes (the exec/local.py drift fix).
+                # An alias binding owned neither bytes nor the segment.
                 self.cur -= old.size
                 self.freed += 1
                 _release_seg(old)
@@ -180,10 +198,65 @@ class _NodeArena:
         with self._lock:
             seg = self._segs.pop(ref, None)
             self._arrs.pop(ref, None)
+            if ref in self._alias:
+                # alias of a retained segment: drop the binding only
+                self._alias.discard(ref)
+                return
             if seg is not None:
                 self.cur -= seg.size
                 self.freed += 1
                 _release_seg(seg)
+
+    # -- session residency ---------------------------------------------------
+    def retain(self, key: Tuple[int, int, int], ref: TileRef) -> None:
+        """Move ``ref``'s segment into the retained (session) store under
+        ``key`` — it leaves this run's byte accounting and survives until
+        ``drop_retained``.  An alias binding (persist of an expression that
+        folded to a resident leaf) is deep-copied so every retained key
+        owns its segment exclusively."""
+        with self._lock:
+            seg = self._segs.pop(ref, None)
+            arr = self._arrs.pop(ref, None)
+            if seg is None:
+                raise KeyError(f"retain of unbound ref {ref}")
+            if ref in self._alias:
+                self._alias.discard(ref)
+                src = arr
+                seg = self._new_seg(src.nbytes)
+                arr = np.ndarray(src.shape, dtype=src.dtype, buffer=seg.buf)
+                arr[...] = src
+            else:
+                self.cur -= seg.size
+            old = self._retained.get(key)
+            if old is not None:         # re-retention under the same key
+                self.retained_bytes -= old[0].size
+                _release_seg(old[0])
+            self._retained[key] = (seg, arr)
+            self.retained_bytes += seg.size
+
+    def bind_retained(self, ref: TileRef,
+                      key: Tuple[int, int, int]) -> None:
+        """Alias ``ref`` onto a retained segment (RESIDENT task): zero-copy
+        re-entry of a session tile into this run's namespace."""
+        with self._lock:
+            ent = self._retained.get(key)
+            if ent is None:
+                raise KeyError(f"no retained tile {key} in this arena "
+                               f"(resident tile lost?)")
+            old = self._segs.get(ref)
+            if old is not None and ref not in self._alias:
+                self.cur -= old.size
+                self.freed += 1
+                _release_seg(old)
+            self._segs[ref], self._arrs[ref] = ent
+            self._alias.add(ref)
+
+    def drop_retained(self, key: Tuple[int, int, int]) -> None:
+        with self._lock:
+            ent = self._retained.pop(key, None)
+            if ent is not None:
+                self.retained_bytes -= ent[0].size
+                _release_seg(ent[0])
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
@@ -191,18 +264,26 @@ class _NodeArena:
                     "cur_buffer_bytes": self.cur,
                     "buffers_freed": self.freed,
                     "buffers_alloc": self.allocs,
-                    "live_buffers": len(self._segs)}
+                    "live_buffers": len(self._segs),
+                    "retained": len(self._retained),
+                    "retained_bytes": self.retained_bytes}
 
     def destroy(self) -> None:
         with self._lock:
-            for seg in self._segs.values():
-                _release_seg(seg)
+            for ref, seg in self._segs.items():
+                if ref not in self._alias:
+                    _release_seg(seg)
             self._segs.clear()
             self._arrs.clear()
+            self._alias.clear()
+            for (seg, _arr) in self._retained.values():
+                _release_seg(seg)
+            self._retained.clear()
 
 
 def _execute_task(t, arena: _NodeArena, leaf_nodes, dtypes,
-                  tile) -> Tuple[Optional[str], Optional[str]]:
+                  tile, resident_ids=None
+                  ) -> Tuple[Optional[str], Optional[str]]:
     """Run one task against the node arena; mirrors the per-task executor's
     kernels exactly (bit-identity contract).  Returns the output buffer's
     (segment name, dtype str)."""
@@ -213,6 +294,12 @@ def _execute_task(t, arena: _NodeArena, leaf_nodes, dtypes,
     if k is TaskKind.TAKECOPY:
         # gather to master: the tile already sits in the master node's
         # arena (produced here or XFER'd in) — nothing to compute
+        return arena.seg_of(t.out)
+    if k is TaskKind.RESIDENT:
+        # session-resident tile: alias the retained segment into this
+        # run's ref namespace (zero-copy, this node is the tile's home)
+        hid = (resident_ids or {})[t.payload]
+        arena.bind_retained(t.out, (hid, t.out.i, t.out.j))
         return arena.seg_of(t.out)
     if k in _CHAIN_KINDS:
         ta, tb = matmul_flags(t.payload)
@@ -269,6 +356,11 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
     ``threads_per_worker``): without it one worker process can saturate
     every host core through OpenBLAS threading, which hides the
     process-level scaling the cluster model is about.
+
+    Session mode spawns the worker with ``g=None`` and ships the run
+    context (graph, tile, leaves, dtypes, resident-leaf handle ids) per
+    run via a ``("run", ...)`` op — the process and its arena (with the
+    session's retained tiles) survive across runs.
     """
     if blas_threads:
         try:
@@ -279,14 +371,17 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
     arena = _NodeArena(prefix, node)
     pid = os.getpid()
     throttle = [0.0]
+    ctx = {"g": g, "tile": tile, "leaf_nodes": leaf_nodes,
+           "dtypes": dtypes, "resident_ids": {}}
 
     def run_task(tid: int) -> None:
         try:
             t0 = time.perf_counter()
             if throttle[0] > 0.0:
                 time.sleep(throttle[0])
-            seg, dt = _execute_task(g.tasks[tid], arena, leaf_nodes,
-                                    dtypes, tile)
+            seg, dt = _execute_task(ctx["g"].tasks[tid], arena,
+                                    ctx["leaf_nodes"], ctx["dtypes"],
+                                    ctx["tile"], ctx["resident_ids"])
             outq.put(("done", node, tid, seg, dt, pid,
                       time.perf_counter() - t0))
         except BaseException:
@@ -325,6 +420,22 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                 pool.submit(run_xfer, msg[1], msg[2], msg[3], msg[4])
             elif op == "free":
                 arena.free(msg[1])
+            elif op == "run":
+                # session mode: (re)bind this worker to a new run's
+                # graph/leaves — the arena (incl. retained tiles) persists
+                ctx["g"], ctx["tile"] = msg[1], msg[2]
+                ctx["leaf_nodes"], ctx["dtypes"] = msg[3], msg[4]
+                ctx["resident_ids"] = msg[5]
+            elif op == "retain":
+                # move a persisted output tile into the session store
+                try:
+                    arena.retain(msg[2], msg[1])
+                except BaseException:
+                    outq.put(("error", node, -1, traceback.format_exc()))
+            elif op == "drop":
+                arena.drop_retained(msg[1])
+            elif op == "audit":
+                outq.put(("audit", node, arena.stats()))
             elif op == "throttle":
                 throttle[0] = float(msg[1])
             elif op == "stop":
@@ -344,17 +455,33 @@ class ClusterExecutor:
     method (default ``fork`` where available — workers inherit the plan
     instead of re-pickling it); ``timeout`` bounds each wait on worker
     events so a dead worker raises instead of hanging.
+
+    ``session=True`` turns this into a session backend: the worker
+    processes (and their arenas, holding the session's retained tiles)
+    are spawned on the first ``execute()`` and SURVIVE across runs — each
+    run ships its graph to the workers via a ``("run", ...)`` op.
+    ``close_session()`` shuts the workers down and returns a per-node
+    arena audit (live/retained buffer counts for the session's refcount
+    audit).
     """
 
     def __init__(self, workers_per_node: Optional[int] = None,
                  free_buffers: bool = True,
                  mp_context: Optional[str] = None,
-                 timeout: float = 300.0):
+                 timeout: float = 300.0,
+                 session: bool = False):
         self.workers_per_node = workers_per_node
         self.free_buffers = free_buffers
         self.mp_context = mp_context
         self.timeout = timeout
+        self.session = session
         self.stats: Dict[str, object] = {}
+        self._procs: Optional[List] = None
+        self._inqs: Optional[List] = None
+        self._outq = None
+        self._spec: Optional[ClusterSpec] = None
+        self._prefix = ""
+        self._broken = False
 
     # -- driver --------------------------------------------------------------
     def execute(self, plan) -> np.ndarray:
@@ -365,6 +492,16 @@ class ClusterExecutor:
         if spec is None:
             raise ValueError("ClusterExecutor needs plan.spec "
                              "(a ClusterSpec) to spawn node processes")
+        residency = getattr(plan, "residency", None)
+        from ..core.tiling import result_sets_of
+        rsets = result_sets_of(g)
+        if self.session and self._broken:
+            raise RuntimeError("session cluster executor is broken "
+                               "(a previous run failed); open a new session")
+        if self.session and self._spec is not None and self._spec != spec:
+            raise ValueError("a session cluster executor is bound to one "
+                             "ClusterSpec; plan was made for a different "
+                             "spec")
         sched: Schedule = plan.schedule
         node_of = {tid: p.node for tid, p in sched.placements.items()}
         missing = [tid for tid in g.tasks if tid not in node_of]
@@ -398,23 +535,52 @@ class ClusterExecutor:
         for p, dsts in xfer_by_producer.items():
             reads[(node_of[p], g.tasks[p].out)] += len(dsts)
         master_node = spec.master
-        for r in g.result_tiles:
-            reads[(master_node, r)] += 1
+        # gather holds for takecopy'd roots; retention holds pin each
+        # persisted tile on its final producer's node so end-of-run
+        # refcount freeing can never free a tile the session retains
+        retained_refs: Dict[TileRef, Tuple[int, int]] = {}
+        for rs in rsets:
+            if rs.gather:
+                for r in rs.tiles:
+                    reads[(master_node, r)] += 1
+            else:
+                for r in rs.tiles:
+                    home = node_of[rs.producers[r]]
+                    reads[(home, r)] += 1
+                    retained_refs[r] = (rs.uid, home)
 
-        # -- spawn one worker process per node ------------------------------
-        outq = ctx.Queue()
-        inqs = [ctx.Queue() for _ in range(spec.n_nodes)]
-        procs = []
-        for n in range(spec.n_nodes):
-            nthreads = self.workers_per_node or spec.workers_at(n)
-            p = ctx.Process(
-                target=_node_worker,
-                args=(n, inqs[n], outq, g, plan.tile,
-                      plan.program.leaf_nodes, plan.program.dtypes,
-                      nthreads, prefix),
-                daemon=True)
-            p.start()
-            procs.append(p)
+        # -- spawn one worker process per node (session: reuse) -------------
+        if self.session and self._procs is not None:
+            outq, inqs, procs = self._outq, self._inqs, self._procs
+            prefix = self._prefix
+        else:
+            outq = ctx.Queue()
+            inqs = [ctx.Queue() for _ in range(spec.n_nodes)]
+            procs = []
+            for n in range(spec.n_nodes):
+                nthreads = self.workers_per_node or spec.workers_at(n)
+                args = (n, inqs[n], outq, None, None, None, None,
+                        nthreads, prefix) if self.session else \
+                    (n, inqs[n], outq, g, plan.tile,
+                     plan.program.leaf_nodes, plan.program.dtypes,
+                     nthreads, prefix)
+                p = ctx.Process(target=_node_worker, args=args, daemon=True)
+                p.start()
+                procs.append(p)
+            if self.session:
+                self._procs, self._inqs, self._outq = procs, inqs, outq
+                self._spec, self._prefix = spec, prefix
+        if self.session:
+            # ship this run's context; RESIDENT leaves are resolved worker-
+            # side via their handle ids (the handles stay master-side)
+            worker_leafs = {uid: n for uid, n in
+                            plan.program.leaf_nodes.items()
+                            if n.op is not Op.RESIDENT}
+            rids = residency.resident_ids() if residency is not None else {}
+            run_msg = ("run", g, plan.tile, worker_leafs,
+                       plan.program.dtypes, rids)
+            for q in inqs:
+                q.put(run_msg)
 
         seg_info: Dict[Tuple[int, TileRef], Tuple[str, str]] = {}
         exec_nodes: Dict[int, int] = {}
@@ -509,33 +675,63 @@ class ClusterExecutor:
                         f"failed on node {msg[1]}:\n{msg[4]}")
 
             # -- gather result tiles from the master node's arena ----------
-            vals: Dict[TileRef, np.ndarray] = {}
-            for r in g.result_tiles:
-                sname, dt = seg_info[(master_node, r)]
-                seg = _attach_shm(sname)
-                try:
-                    view = np.ndarray(r.shape, dtype=np.dtype(dt),
-                                      buffer=seg.buf)
-                    vals[r] = view.copy()
-                finally:
-                    seg.close()
-                dec_read(master_node, r)
+            outs: List[np.ndarray] = []
+            gather_bytes = 0
+            retained = 0
+            for rs in rsets:
+                if not rs.gather:
+                    continue
+                vals: Dict[TileRef, np.ndarray] = {}
+                for r in rs.tiles:
+                    sname, dt = seg_info[(master_node, r)]
+                    seg = _attach_shm(sname)
+                    try:
+                        view = np.ndarray(r.shape, dtype=np.dtype(dt),
+                                          buffer=seg.buf)
+                        vals[r] = view.copy()
+                    finally:
+                        seg.close()
+                    gather_bytes += r.bytes
+                    dec_read(master_node, r)
+                outs.append(assemble(vals, rs.shape, plan.tile, rs.uid))
+
+            # -- retention: persisted tiles move to the session store -------
+            for r, (uid, home) in retained_refs.items():
+                sname, dt = seg_info[(home, r)]
+                h = residency.retain[uid]
+                inqs[home].put(("retain", r, (h.hid, r.i, r.j)))
+                residency.retain_seg(uid, r.i, r.j, home, sname, dt)
+                retained += 1
 
             # -- orderly shutdown + per-node stats --------------------------
             node_stats: Dict[int, Dict[str, int]] = {}
-            for q in inqs:
-                q.put(("stop",))
-            while len(node_stats) < spec.n_nodes:
-                msg = next_event()
-                if msg[0] == "stats":
-                    node_stats[msg[1]] = msg[2]
-                    node_pids.setdefault(msg[1], msg[3])
-                elif msg[0] == "error":     # pragma: no cover
-                    raise RuntimeError(f"cluster worker error during "
-                                       f"shutdown:\n{msg[3]}")
-            for p in procs:
-                p.join(timeout=self.timeout)
+            if self.session:
+                # workers survive; audit instead of stop (the audit reply
+                # also confirms every retain op above was processed)
+                for q in inqs:
+                    q.put(("audit",))
+                while len(node_stats) < spec.n_nodes:
+                    msg = next_event()
+                    if msg[0] == "audit":
+                        node_stats[msg[1]] = msg[2]
+                    elif msg[0] == "error":     # pragma: no cover
+                        raise RuntimeError(f"cluster worker error during "
+                                           f"retention:\n{msg[3]}")
+            else:
+                for q in inqs:
+                    q.put(("stop",))
+                while len(node_stats) < spec.n_nodes:
+                    msg = next_event()
+                    if msg[0] == "stats":
+                        node_stats[msg[1]] = msg[2]
+                        node_pids.setdefault(msg[1], msg[3])
+                    elif msg[0] == "error":     # pragma: no cover
+                        raise RuntimeError(f"cluster worker error during "
+                                           f"shutdown:\n{msg[3]}")
+                for p in procs:
+                    p.join(timeout=self.timeout)
         except BaseException:
+            self._broken = True
             for p in procs:
                 if p.is_alive():
                     p.terminate()
@@ -567,10 +763,11 @@ class ClusterExecutor:
                      resource_tracker.unregister) = orig
             raise
         finally:
-            for p in procs:
-                if p.is_alive():        # pragma: no cover
-                    p.terminate()
-                    p.join(timeout=5)
+            if not self.session or self._broken:
+                for p in procs:
+                    if p.is_alive():        # pragma: no cover
+                        p.terminate()
+                        p.join(timeout=5)
 
         self.stats = {
             "tasks_run": total,
@@ -579,17 +776,58 @@ class ClusterExecutor:
             "nodes": spec.n_nodes,
             "xfers": counters["xfers"],
             "xfer_bytes": counters["xfer_bytes"],
+            "gather_bytes": gather_bytes,
+            "retained_tiles": retained,
             "peak_buffer_bytes": sum(s["peak_buffer_bytes"]
                                      for s in node_stats.values()),
             "cur_buffer_bytes": sum(s["cur_buffer_bytes"]
                                     for s in node_stats.values()),
             "buffers_freed": sum(s["buffers_freed"]
                                  for s in node_stats.values()),
+            "live_buffers": sum(s.get("live_buffers", 0)
+                                for s in node_stats.values()),
+            "retained_total": sum(s.get("retained", 0)
+                                  for s in node_stats.values()),
             "exec_nodes": exec_nodes,
             "node_pids": node_pids,
         }
-        return assemble(vals, g.result_shape, plan.tile,
-                        g.result_tiles[0].tensor)
+        if not outs:
+            return None
+        return outs[0] if len(outs) == 1 else outs
+
+    # -- session lifecycle ----------------------------------------------------
+    def drop_retained(self, node: int, key) -> None:
+        """Session free path: drop one retained tile from ``node``'s arena."""
+        if self._inqs is not None and not self._broken:
+            self._inqs[node].put(("drop", key))
+
+    def close_session(self) -> Dict[int, Dict[str, int]]:
+        """Stop the long-lived workers; returns the per-node arena stats
+        collected at shutdown (live/retained buffer counts — the session's
+        refcount audit input)."""
+        audit: Dict[int, Dict[str, int]] = {}
+        if self._procs is None:
+            return audit
+        if not self._broken:
+            for q in self._inqs:
+                q.put(("stop",))
+            deadline = time.monotonic() + min(self.timeout, 30.0)
+            while len(audit) < len(self._procs) and \
+                    time.monotonic() < deadline:
+                try:
+                    msg = self._outq.get(timeout=0.5)
+                except _queue.Empty:
+                    if all(not p.is_alive() for p in self._procs):
+                        break
+                    continue
+                if msg[0] == "stats":
+                    audit[msg[1]] = msg[2]
+        for p in self._procs:
+            p.join(timeout=5)
+            if p.is_alive():                     # pragma: no cover
+                p.terminate()
+        self._procs = self._inqs = self._outq = None
+        return audit
 
 
 #: unique per-execute() shm namespace within this master process

@@ -63,8 +63,9 @@ from ..core.graph import TaskGraph, TaskKind, TileRef
 from ..core.heft import Placement, Schedule, replan_frontier
 from ..core.lazy import Op
 from ..core.machine import ClusterSpec
+from ..core.session import ResidentTilesLost
 from ..core.timemodel import CostCache, TimeModel, analytic_time_model
-from ..core.tiling import assemble
+from ..core.tiling import assemble, result_sets_of
 from ..runtime.membership import (DEATH, RECOVER, STRAGGLE,
                                   MembershipConfig, MembershipService)
 from .cluster import _CHAIN_KINDS, _RUN_IDS, _attach_shm, _node_worker
@@ -112,7 +113,8 @@ class ElasticClusterExecutor:
                  respawn_dead: bool = False,
                  speculate: bool = True,
                  gc_interval: int = 64,
-                 blas_threads: Optional[int] = None):
+                 blas_threads: Optional[int] = None,
+                 session: bool = False):
         self.workers_per_node = workers_per_node
         self.free_buffers = free_buffers
         self.mp_context = mp_context
@@ -126,7 +128,30 @@ class ElasticClusterExecutor:
         #: per-worker BLAS thread cap (machine model: threads_per_worker);
         #: None leaves the BLAS pool at its library default
         self.blas_threads = blas_threads
+        #: session mode: workers + arenas + membership survive across
+        #: ``execute()`` calls; resident tiles lost to churn raise
+        #: ``ResidentTilesLost`` for the session's lineage-recompute path
+        self.session = session
+        if session and respawn_dead:
+            # a respawned worker returns with an EMPTY arena but an
+            # unchanged spec, which would hide retained-tile loss from
+            # the session's home-vs-alive-nodes check
+            raise ValueError("respawn_dead is not supported in session "
+                             "mode; lost resident tiles recompute from "
+                             "lineage on the survivors instead")
+        self._started = False
+        self._broken = False
+        self._run_msg = None
+        self._ms: Optional[MembershipService] = None
+        self._cur_spec: Optional[ClusterSpec] = None
         self.stats: Dict[str, object] = {}
+
+    @property
+    def current_spec(self) -> Optional[ClusterSpec]:
+        """The membership-adjusted spec after the last run (session mode):
+        dead nodes drained, joined nodes appended — what the session's
+        engine must plan the NEXT run against."""
+        return self._cur_spec
 
     # -- setup helpers --------------------------------------------------------
     def _derive_fill_origin(self, prog) -> Dict[int, str]:
@@ -154,6 +179,11 @@ class ElasticClusterExecutor:
         self._procs[node] = p
         self._inqs[node] = inq
         self._outqs[node] = outq
+        if self._run_msg is not None:
+            # session mode: hand the newcomer the CURRENT run's context
+            # (graph + resident-leaf handle ids) — fork-inherited state
+            # may predate it
+            inq.put(self._run_msg)
 
     # -- the run --------------------------------------------------------------
     def execute(self, plan) -> np.ndarray:
@@ -163,6 +193,25 @@ class ElasticClusterExecutor:
         spec: Optional[ClusterSpec] = getattr(plan, "spec", None)
         if spec is None:
             raise ValueError("ElasticClusterExecutor needs plan.spec")
+        if self.session and self._broken:
+            raise RuntimeError("session elastic executor is broken "
+                               "(a previous run failed); open a new session")
+        if self.session and self._started and spec != self._cur_spec:
+            raise ValueError(
+                "session elastic executor: the plan's spec does not match "
+                "the membership-adjusted current_spec; re-plan against "
+                "executor.current_spec")
+        residency = getattr(plan, "residency", None)
+        rsets = result_sets_of(g)
+        #: RESIDENT task tid -> home node (pinned placement for replans)
+        #: and home coverage per handle (loss detection on node death)
+        resident_pins: Dict[int, int] = {}
+        if residency is not None:
+            for t in g:
+                if t.kind is TaskKind.RESIDENT:
+                    h = residency.handles[t.payload]
+                    resident_pins[t.tid] = h.home.get(
+                        (t.out.i, t.out.j), 0)
         sched: Schedule = plan.schedule
         n_joins = sum(1 for c in self.chaos if c.join_workers is not None)
         for c in self.chaos:
@@ -178,14 +227,24 @@ class ElasticClusterExecutor:
 
         tm = self.timemodel or analytic_time_model()
         self._mcfg = self.membership_cfg or MembershipConfig()
-        method = self.mp_context or (
-            "fork" if "fork" in mp.get_all_start_methods() else "spawn")
-        self._ctx = mp.get_context(method)
-        self._prefix = f"cmm{os.getpid()}_{next(_RUN_IDS)}e"
-        self._incarnations = iter(range(1 << 30))
+        if not (self.session and self._started):
+            method = self.mp_context or (
+                "fork" if "fork" in mp.get_all_start_methods() else "spawn")
+            self._ctx = mp.get_context(method)
+            self._prefix = f"cmm{os.getpid()}_{next(_RUN_IDS)}e"
+            self._incarnations = iter(range(1 << 30))
         self._g, self._tile = g, plan.tile
-        self._leaf_nodes = plan.program.leaf_nodes
+        # RESIDENT leaves stay master-side (workers resolve them against
+        # their retained arena store via handle ids)
+        self._leaf_nodes = {uid: n for uid, n in
+                            plan.program.leaf_nodes.items()
+                            if n.op is not Op.RESIDENT}
         self._dtypes = plan.program.dtypes
+        if self.session:
+            self._run_msg = ("run", g, plan.tile, self._leaf_nodes,
+                             self._dtypes,
+                             residency.resident_ids()
+                             if residency is not None else {})
         origin = self._derive_fill_origin(plan.program)
 
         # -- value-version canonicalisation ---------------------------------
@@ -224,6 +283,17 @@ class ElasticClusterExecutor:
         # -- mutable control-plane state ------------------------------------
         cur_spec = spec
         master = spec.master
+        #: persisted output tiles of this run: ref -> owning root uid.
+        #: They are kept by the GC sweep and moved into the session store
+        #: (worker ``retain`` op) at the end of the run.
+        retained_refs: Dict[TileRef, int] = {}
+        for _rs in rsets:
+            if not _rs.gather:
+                for _r in _rs.tiles:
+                    retained_refs[_r] = _rs.uid
+        #: a resident-input loss pends an orderly abort (session retries
+        #: after lineage recompute); never set outside session mode
+        pending_abort: List[Optional[ResidentTilesLost]] = [None]
         assigned = {tid: p.node for tid, p in sched.placements.items()}
         missing = [tid for tid in g.tasks if tid not in assigned]
         if missing:
@@ -262,21 +332,41 @@ class ElasticClusterExecutor:
         recovery_seconds = [0.0]
         total = len(g)
 
-        ms = MembershipService(range(spec.n_nodes), master=master,
-                               cfg=self._mcfg)
-        # start the resource tracker BEFORE forking workers so every
-        # worker shares this process's tracker: a SIGKILLed worker's
-        # segment registrations then land where the master's post-mortem
-        # unregister (see _reap_segments) can retract them — otherwise
-        # each worker lazily spawns its own tracker, which outlives the
-        # kill and warns about "leaked" segments the master already reaped
-        from multiprocessing import resource_tracker
-        resource_tracker.ensure_running()
-        self._procs: Dict[int, object] = {}
-        self._inqs: Dict[int, object] = {}
-        self._outqs: Dict[int, object] = {}
-        for n in range(spec.n_nodes):
-            self._spawn(n, self.workers_per_node or spec.workers_at(n))
+        if self.session and self._started:
+            ms = self._ms
+            # hand every surviving worker the new run's context; drain
+            # idle-period heartbeats so they don't count as progress
+            for n in ms.alive_nodes():
+                if self._inqs.get(n) is not None:
+                    self._inqs[n].put(self._run_msg)
+            for n in ms.alive_nodes():
+                q = self._outqs.get(n)
+                while q is not None:
+                    try:
+                        msg = q.get_nowait()
+                    except _queue.Empty:
+                        break
+                    if msg[0] == "hb":
+                        ms.heartbeat(msg[1])
+        else:
+            ms = MembershipService(range(spec.n_nodes), master=master,
+                                   cfg=self._mcfg)
+            # start the resource tracker BEFORE forking workers so every
+            # worker shares this process's tracker: a SIGKILLed worker's
+            # segment registrations then land where the master's
+            # post-mortem unregister (see _reap_segments) can retract them
+            # — otherwise each worker lazily spawns its own tracker, which
+            # outlives the kill and warns about "leaked" segments the
+            # master already reaped
+            from multiprocessing import resource_tracker
+            resource_tracker.ensure_running()
+            self._procs: Dict[int, object] = {}
+            self._inqs: Dict[int, object] = {}
+            self._outqs: Dict[int, object] = {}
+            for n in range(spec.n_nodes):
+                self._spawn(n, self.workers_per_node or spec.workers_at(n))
+            self._ms = ms
+            self._started = True
 
         # -- control-plane actions ------------------------------------------
         def alive(n: int) -> bool:
@@ -408,7 +498,18 @@ class ElasticClusterExecutor:
                 for n in dispatched[t.tid]:
                     if t.out is not None:
                         keep.add((n, t.out))
-            for r in g.result_tiles:
+            # gather holds must cover EVERY gathered root of a multi-root
+            # program (g.result_tiles is only the first one)
+            for rs_ in rsets:
+                if not rs_.gather:
+                    continue
+                for r in rs_.tiles:
+                    for k in live_nodes:
+                        if (k, r) in avail:
+                            keep.add((k, r))
+            for r in retained_refs:
+                # persisted outputs: every live copy survives until the
+                # end-of-run retention picks its home
                 for k in live_nodes:
                     if (k, r) in avail:
                         keep.add((k, r))
@@ -468,7 +569,8 @@ class ElasticClusterExecutor:
             if frontier:
                 new_sched = replan_frontier(
                     g, cur_spec, tm, done_pl, frontier,
-                    fill_origin=origin, cost=CostCache(tm, cur_spec))
+                    fill_origin=origin, cost=CostCache(tm, cur_spec),
+                    pinned=resident_pins or None)
                 for tid in frontier:
                     cur_place[tid] = new_sched.placements[tid]
                     assigned[tid] = new_sched.placements[tid].node
@@ -523,6 +625,24 @@ class ElasticClusterExecutor:
                 cnt["respawns"] += 1
             else:
                 cur_spec = cur_spec.without_node(n)
+            # resident-input tiles homed on the dead node are gone (a
+            # respawned worker comes back with an EMPTY arena): they are
+            # not recomputable within THIS graph — they are its *inputs* —
+            # but they ARE recomputable roots of their own lineage.  Abort
+            # the run in an orderly way; the session re-derives the lost
+            # handles from lineage and retries (bit-identical, tasks are
+            # deterministic).
+            if residency is not None:
+                lost = {h.hid for h in residency.handles.values()
+                        if any(home == n for home in h.home.values())}
+                if pending_abort[0] is not None:
+                    lost |= set(pending_abort[0].hids)
+                if lost:
+                    pending_abort[0] = ResidentTilesLost(
+                        sorted(lost),
+                        f"node {n} died holding resident tiles of "
+                        f"handles {sorted(lost)}")
+                    return
             replan()
 
         def on_join(workers: int, slowdown: float) -> None:
@@ -694,6 +814,67 @@ class ElasticClusterExecutor:
             except OSError:             # pragma: no cover — racing a death
                 time.sleep(0.002)
 
+        def abandon_run() -> None:
+            """Orderly abort for a resident-tile loss: drain in-flight
+            worker activity (so stale `done` messages can't corrupt the
+            session's NEXT run), release this run's arena bindings, then
+            raise — workers stay alive for the retry."""
+            exc = pending_abort[0]
+            deadline = time.monotonic() + min(self.timeout, 30.0)
+            while (sum(inflight[k] for k in ms.alive_nodes())
+                   or any(k[0] in ms.alive_nodes()
+                          for k in xfer_inflight)) \
+                    and time.monotonic() < deadline:
+                moved = False
+                for n in list(ms.alive_nodes()):
+                    q = self._outqs.get(n)
+                    if q is None:
+                        continue
+                    try:
+                        msg = q.get_nowait()
+                    except _queue.Empty:
+                        continue
+                    moved = True
+                    k = msg[0]
+                    if k == "done":
+                        t = g.tasks[msg[2]]
+                        if t.out is not None and msg[3] is not None:
+                            avail[(msg[1], t.out)] = \
+                                (canon_of(msg[2]), msg[3], msg[4])
+                        dispatched[msg[2]].discard(msg[1])
+                        inflight[msg[1]] -= 1
+                    elif k in ("xfer_done", "xfer_fail"):
+                        xfer_inflight.pop((msg[1], msg[3]), None)
+                        if k == "xfer_done":
+                            avail[(msg[1], msg[3])] = \
+                                (msg[2], msg[4], msg[5])
+                    elif k == "hb":
+                        ms.heartbeat(msg[1])
+                    elif k == "error":
+                        t = g.tasks[msg[2]] if msg[2] in g.tasks else None
+                        dispatched[msg[2]].discard(msg[1])
+                        inflight[msg[1]] -= 1
+                if not moved:
+                    liveness = {n: self._procs[n].is_alive()
+                                for n in ms.alive_nodes()
+                                if self._procs.get(n) is not None}
+                    for ev in ms.poll(liveness):
+                        if ev.kind == DEATH:
+                            inflight[ev.node] = 0
+                            for (dst, ref) in list(xfer_inflight):
+                                if dst == ev.node:
+                                    del xfer_inflight[(dst, ref)]
+                            for key in [key for key in avail
+                                        if key[0] == ev.node]:
+                                del avail[key]
+                    wait_for_events(0.02)
+            if self.free_buffers:
+                for (n, ref) in list(avail):
+                    del avail[(n, ref)]
+                    if ms.is_alive(n) and self._inqs.get(n) is not None:
+                        self._inqs[n].put(("free", ref))
+            raise exc
+
         try:
             fire_chaos()                      # after_done=0 chaos
             scan_dispatch()
@@ -721,6 +902,8 @@ class ElasticClusterExecutor:
                         on_straggle(ev.node)
                     elif ev.kind == RECOVER:
                         on_recover(ev.node)
+                if pending_abort[0] is not None:
+                    abandon_run()
                 scan_dispatch()
                 now = time.monotonic()
                 if processed:
@@ -734,20 +917,54 @@ class ElasticClusterExecutor:
                 else:
                     wait_for_events(0.05)
 
-            # -- gather result tiles from the master node -------------------
-            vals: Dict[TileRef, np.ndarray] = {}
-            for r in g.result_tiles:
-                ent = avail.get((master, r))
-                if ent is None:       # pragma: no cover — takecopy pins
-                    raise RuntimeError(f"result tile {r} missing from "
-                                       f"the master arena")
-                seg = _attach_shm(ent[1])
-                try:
-                    view = np.ndarray(r.shape, dtype=np.dtype(ent[2]),
-                                      buffer=seg.buf)
-                    vals[r] = view.copy()
-                finally:
-                    seg.close()
+            # -- gather result tiles of non-persisted roots -----------------
+            outs: List[np.ndarray] = []
+            gather_bytes = 0
+            for rs in rsets:
+                if not rs.gather:
+                    continue
+                vals: Dict[TileRef, np.ndarray] = {}
+                for r in rs.tiles:
+                    ent = avail.get((master, r))
+                    if ent is None:   # pragma: no cover — takecopy pins
+                        raise RuntimeError(f"result tile {r} missing from "
+                                           f"the master arena")
+                    seg = _attach_shm(ent[1])
+                    try:
+                        view = np.ndarray(r.shape, dtype=np.dtype(ent[2]),
+                                          buffer=seg.buf)
+                        vals[r] = view.copy()
+                    finally:
+                        seg.close()
+                    gather_bytes += r.bytes
+                outs.append(assemble(vals, rs.shape, plan.tile, rs.uid))
+
+            # -- retention: persisted tiles into the session store ----------
+            # a tile's home is wherever its (canonical) value actually
+            # lives — under churn that may differ from the planned node
+            retained_count = 0
+            for rs in rsets:
+                if rs.gather:
+                    continue
+                h = residency.retain[rs.uid]
+                for r in rs.tiles:
+                    v = canon_of(rs.producers[r])
+                    holder = exec_nodes.get(rs.producers[r])
+                    if holder is None or not alive(holder) or \
+                            avail.get((holder, r), (None,))[0] != v:
+                        holder = next(
+                            (k for k in ms.alive_nodes()
+                             if avail.get((k, r), (None,))[0] == v), None)
+                    if holder is None:  # pragma: no cover — defensive
+                        raise RuntimeError(
+                            f"retention: no live holder for {r} "
+                            f"(version {v})")
+                    ent = avail.pop((holder, r))
+                    self._inqs[holder].put(("retain", r,
+                                            (h.hid, r.i, r.j)))
+                    residency.retain_seg(rs.uid, r.i, r.j, holder,
+                                         ent[1], ent[2])
+                    retained_count += 1
 
             # -- release every remaining binding before shutdown ------------
             if self.free_buffers:
@@ -756,38 +973,48 @@ class ElasticClusterExecutor:
                     if alive(n) and self._inqs.get(n) is not None:
                         self._inqs[n].put(("free", ref))
 
-            # -- orderly shutdown + per-node stats --------------------------
-            expect = [n for n in ms.alive_nodes()
-                      if self._inqs.get(n) is not None]
-            for n in expect:
-                self._inqs[n].put(("stop",))
-            deadline = time.monotonic() + min(self.timeout, 30.0)
-            while len(self._node_stats) < len(expect) \
-                    and time.monotonic() < deadline:
-                got = False
+            # -- orderly shutdown + per-node stats (one-shot mode only) -----
+            if not self.session:
+                expect = [n for n in ms.alive_nodes()
+                          if self._inqs.get(n) is not None]
                 for n in expect:
-                    try:
-                        msg = self._outqs[n].get_nowait()
-                    except _queue.Empty:
-                        continue
-                    if msg[0] == "stats":
-                        self._node_stats[msg[1]] = msg[2]
-                        node_pids.setdefault(msg[1], msg[3])
-                    got = True
-                if not got:
-                    time.sleep(0.005)
-            for n in expect:
-                p = self._procs.get(n)
-                if p is not None:
-                    p.join(timeout=5)
+                    self._inqs[n].put(("stop",))
+                deadline = time.monotonic() + min(self.timeout, 30.0)
+                while len(self._node_stats) < len(expect) \
+                        and time.monotonic() < deadline:
+                    got = False
+                    for n in expect:
+                        try:
+                            msg = self._outqs[n].get_nowait()
+                        except _queue.Empty:
+                            continue
+                        if msg[0] == "stats":
+                            self._node_stats[msg[1]] = msg[2]
+                            node_pids.setdefault(msg[1], msg[3])
+                        got = True
+                    if not got:
+                        time.sleep(0.005)
+                for n in expect:
+                    p = self._procs.get(n)
+                    if p is not None:
+                        p.join(timeout=5)
+        except ResidentTilesLost:
+            # orderly abort: workers (and their retained arenas) survive
+            # for the session's lineage recompute + retry
+            if not self.session:        # pragma: no cover — defensive
+                self._terminate_all()
+            raise
         except BaseException:
+            self._broken = True
             self._terminate_all()
             raise
         finally:
-            for p in self._procs.values():
-                if p is not None and p.is_alive():    # pragma: no cover
-                    p.terminate()
-                    p.join(timeout=5)
+            self._cur_spec = cur_spec
+            if not self.session or self._broken:
+                for p in self._procs.values():
+                    if p is not None and p.is_alive():  # pragma: no cover
+                        p.terminate()
+                        p.join(timeout=5)
 
         self.stats = {
             "tasks_run": total,
@@ -811,6 +1038,8 @@ class ElasticClusterExecutor:
             "xfers": cnt["xfers"],
             "xfer_bytes": cnt["xfer_bytes"],
             "xfer_retries": cnt["xfer_retries"],
+            "gather_bytes": gather_bytes,
+            "retained_tiles": retained_count,
             "buffers_freed": sum(s["buffers_freed"]
                                  for s in self._node_stats.values()),
             "peak_buffer_bytes": sum(s["peak_buffer_bytes"]
@@ -818,8 +1047,51 @@ class ElasticClusterExecutor:
             "cur_buffer_bytes": sum(s["cur_buffer_bytes"]
                                     for s in self._node_stats.values()),
         }
-        return assemble(vals, g.result_shape, plan.tile,
-                        g.result_tiles[0].tensor)
+        if not outs:
+            return None
+        return outs[0] if len(outs) == 1 else outs
+
+    # -- session lifecycle ----------------------------------------------------
+    def drop_retained(self, node: int, key) -> None:
+        """Session free path: drop one retained tile from ``node``'s
+        arena (no-op for nodes that already left the cluster)."""
+        if self._broken or self._ms is None:
+            return
+        if self._ms.is_alive(node) and self._inqs.get(node) is not None:
+            self._inqs[node].put(("drop", key))
+
+    def close_session(self) -> Dict[int, Dict[str, int]]:
+        """Stop the long-lived workers; returns per-node arena stats
+        collected at shutdown (live/retained counts — the refcount-audit
+        input; dead nodes are absent)."""
+        audit: Dict[int, Dict[str, int]] = {}
+        if not self._started:
+            return audit
+        if not self._broken and self._ms is not None:
+            expect = [n for n in self._ms.alive_nodes()
+                      if self._inqs.get(n) is not None]
+            for n in expect:
+                self._inqs[n].put(("stop",))
+            deadline = time.monotonic() + min(self.timeout, 30.0)
+            while len(audit) < len(expect) and \
+                    time.monotonic() < deadline:
+                got = False
+                for n in expect:
+                    q = self._outqs.get(n)
+                    if q is None:
+                        continue
+                    try:
+                        msg = q.get_nowait()
+                    except _queue.Empty:
+                        continue
+                    got = True
+                    if msg[0] == "stats":
+                        audit[msg[1]] = msg[2]
+                if not got:
+                    time.sleep(0.005)
+        self._terminate_all()
+        self._started = False
+        return audit
 
     # -- cleanup --------------------------------------------------------------
     def _reap_segments(self, node: Optional[int] = None) -> None:

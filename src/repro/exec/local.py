@@ -37,7 +37,7 @@ import numpy as np
 from ..core.fusion import eval_fused
 from ..core.graph import Task, TaskGraph, TaskKind, TileRef, matmul_flags
 from ..core.lazy import EWISE_FNS, apply_scale, leaf_slice
-from ..core.tiling import assemble, tile_slices
+from ..core.tiling import assemble, result_sets_of, tile_slices
 
 
 class LocalExecutor:
@@ -62,16 +62,21 @@ class LocalExecutor:
         tile = plan.tile
         leaf_nodes = plan.program.leaf_nodes
         dtypes = plan.program.dtypes
+        residency = getattr(plan, "residency", None)
+        rsets = result_sets_of(g)
         buffers: Dict[TileRef, np.ndarray] = {}
 
         # readers per tile buffer (+1 keeps every result tile alive for
-        # final assembly); freed at zero by the last reader
+        # final assembly, and every persisted tile alive for session
+        # retention — retained output tiles are thereby excluded from
+        # refcount freeing); freed at zero by the last reader
         refcnt: Dict[TileRef, int] = {}
         for t in g:
             for r in t.ins:
                 refcnt[r] = refcnt.get(r, 0) + 1
-        for r in g.result_tiles:
-            refcnt[r] = refcnt.get(r, 0) + 1
+        for rs in rsets:
+            for r in rs.tiles:
+                refcnt[r] = refcnt.get(r, 0) + 1
         mem = {"cur": 0, "peak": 0, "freed": 0}
         #: bytes currently accounted per tile ref — a task that REBINDS
         #: ``buffers[t.out]`` over an earlier allocation (ufunc output over
@@ -92,6 +97,11 @@ class LocalExecutor:
                 rs = tile_slices(node.shape[0], tile[0])[t.out.i]
                 cs = tile_slices(node.shape[1], tile[1])[t.out.j]
                 buffers[t.out] = leaf_slice(node, rs[0], rs[1], cs[0], cs[1])
+                return
+            if t.kind is TaskKind.RESIDENT:
+                # zero-copy: alias the session-resident tile into this
+                # run's buffer namespace (read-only downstream)
+                buffers[t.out] = residency.tile(t.payload, t.out.i, t.out.j)
                 return
             if t.kind is TaskKind.ADDMUL:
                 ta, tb = matmul_flags(t.payload)
@@ -149,7 +159,9 @@ class LocalExecutor:
 
         def account(t: Task):
             """Memory bookkeeping after a task ran (under cv)."""
-            if t.out is not None and t.kind is not TaskKind.TAKECOPY:
+            if t.out is not None and t.kind not in (TaskKind.TAKECOPY,
+                                                    TaskKind.RESIDENT):
+                # RESIDENT tiles are session-owned (not this run's memory)
                 buf = buffers.get(t.out)
                 if buf is not None:
                     # views (zero-copy INPUT slices) own no memory
@@ -210,11 +222,35 @@ class LocalExecutor:
         if errors:
             raise errors[0]
 
+        # retention: persisted roots' tiles move to the session store.
+        # Computed tiles transfer zero-copy (the run's array becomes the
+        # resident tile); VIEW-backed tiles (INPUT leaf slices into the
+        # user's array) are copied out — a resident handle must be a
+        # snapshot that owns its memory, not an alias the caller can
+        # mutate from under the session.
+        retained = 0
+        outs = []
+        gather_bytes = 0
+        for rs in rsets:
+            if rs.gather:
+                vals = {r: buffers[r] for r in rs.tiles}
+                gather_bytes += sum(r.bytes for r in rs.tiles)
+                outs.append(assemble(vals, rs.shape, tile, rs.uid))
+            else:
+                for r in rs.tiles:
+                    buf = buffers[r]
+                    if buf.base is not None:
+                        buf = np.ascontiguousarray(buf)
+                    residency.retain_local(rs.uid, r.i, r.j, buf)
+                    retained += 1
+
         self.stats = {"peak_buffer_bytes": mem["peak"],
                       "cur_buffer_bytes": mem["cur"],
                       "buffers_freed": mem["freed"],
                       "tasks_run": len(g),
-                      "workers": nworkers}
-        vals = {r: buffers[r] for r in g.result_tiles}
-        return assemble(vals, g.result_shape, tile,
-                        g.result_tiles[0].tensor)
+                      "workers": nworkers,
+                      "gather_bytes": gather_bytes,
+                      "retained_tiles": retained}
+        if not outs:
+            return None
+        return outs[0] if len(outs) == 1 else outs

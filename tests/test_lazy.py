@@ -32,6 +32,40 @@ def test_eager_matches_numpy():
     np.testing.assert_allclose(A.hadamard(A).eager(), a * a)
 
 
+def test_scalar_operand_orderings():
+    """Every scalar-matrix operator in BOTH orderings (Table 1 row 4) —
+    ``2 - M`` / ``2 / M`` used to raise TypeError — plus unary ``-M``.
+    Bitwise vs NumPy: these are single elementwise passes."""
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((5, 7)) + 2.0     # keep away from 0 for 2/M
+    M = CM.from_array(a)
+    np.testing.assert_array_equal((M + 2.0).eager(), a + 2.0)
+    np.testing.assert_array_equal((2.0 + M).eager(), 2.0 + a)
+    np.testing.assert_array_equal((M - 2.0).eager(), a - 2.0)
+    np.testing.assert_array_equal((2.0 - M).eager(), 2.0 - a)
+    np.testing.assert_array_equal((M * 2.0).eager(), a * 2.0)
+    np.testing.assert_array_equal((2.0 * M).eager(), 2.0 * a)
+    np.testing.assert_array_equal((M / 2.0).eager(), a / 2.0)
+    np.testing.assert_array_equal((2.0 / M).eager(), 2.0 / a)
+    np.testing.assert_array_equal((-M).eager(), -a)
+    np.testing.assert_array_equal((-(-M)).eager(), a)
+    with pytest.raises(TypeError):
+        _ = M / M                             # matrix / matrix stays illegal
+
+
+def test_reflected_and_unary_ops_through_the_engine():
+    """The new SCALE kinds (rsub/rdiv) and -M survive tiling, fusion
+    (FUSED regions interpret them through apply_scale) and execution."""
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((24, 24)) + 3.0
+    M = CM.from_array(a)
+    e = ((2.0 - M).relu() + (1.0 / M)) - (-M)
+    out = e.compute(tile=8)
+    ref = (np.maximum(2.0 - a, 0.0) + (1.0 / a)) - (-a)
+    np.testing.assert_allclose(out, ref, rtol=1e-12, atol=1e-12)
+    np.testing.assert_array_equal(e.eager(), ref)
+
+
 def test_star_is_matmul_between_matrices():
     """Paper semantics: x between matrices is matrix multiplication."""
     rng = np.random.default_rng(1)
