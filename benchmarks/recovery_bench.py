@@ -1,0 +1,276 @@
+"""Durable-session recovery benchmark + smoke gate -> BENCH_recovery.json.
+
+Measures what the durability layer (``runtime/durability.py`` +
+``CMMSession(checkpoint_dir=...)``) costs in steady state and buys on
+recovery:
+
+* **overhead leg** — the k persisted chain steps of a power-iteration
+  run twice, without and with checkpointing (incremental snapshots: only
+  the new handle's tiles are written per step, the disk write overlaps
+  the next compute and COALESCES under backpressure).  Each rep measures
+  the two legs back-to-back and the gate takes the best RATIO over reps
+  (wall noise on a shared host inflates both legs of a pair together).
+  Gated at **< 10 %**; skipped, per the repo's wall-clock policy, while
+  the 1-minute load average exceeds 1.25 per CPU — a loaded host cannot
+  measure the quantity.
+* **recovery leg** — time-to-recover the full residency table via
+  ``CMMSession.resume``: reload-from-disk (``policy="reload"``) vs pure
+  lineage recompute (``policy="recompute"``), on a chain whose recompute
+  replays k GEMMs.  Wall numbers are informational; what is GATED is the
+  contract: both restores are **bit-identical** to the uninterrupted
+  session.
+* **intact leg** — tears the newest snapshot (simulated crash mid-save)
+  and demands ``resume()`` fall back to the previous intact one and
+  still produce the exact bytes that snapshot held.
+
+Exit status is non-zero on any failed check — wired into CI as the
+``recovery-smoke`` job (``--smoke``: small inputs, writes
+``BENCH_recovery_smoke.json`` so the committed artifact is never
+clobbered, per repo convention).
+
+    PYTHONPATH=src python benchmarks/recovery_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import ClusteredMatrix as CM, CMMEngine, analytic_time_model
+from repro.core.machine import local_spec
+from repro.core.session import CMMSession
+
+REPS = 3          # best-of-N wall clocks (load spikes inflate, never deflate)
+LOAD_BAR = 1.25   # loadavg/cpu above which wall gates are skipped
+
+
+def _fresh_engine():
+    return CMMEngine(local_spec(1), analytic_time_model())
+
+
+def _host_load_per_cpu() -> float:
+    try:
+        return os.getloadavg()[0] / max(1, os.cpu_count() or 1)
+    except OSError:                     # pragma: no cover — non-POSIX
+        return 0.0
+
+
+def _chain(s: CMMSession, n: int, k: int):
+    """The benchmark workload: persist P once, chain U <- P U k times
+    (full GEMMs, so per-step compute is what a checkpoint must amortise
+    against; the paper's Markov chain with a matrix state)."""
+    P = s.persist(CM.rand(n, n, seed=0), name="P")
+    u = s.persist(CM.rand(n, n, seed=1), name="u")
+    for i in range(k):
+        u = s.persist(P @ u, name=f"u{i}")
+    return u
+
+
+def _run_chain_wall(n: int, k: int, tile: int, ckpt_dir=None):
+    """Wall of the STEADY-STATE window: the k persisted chain steps.
+    Session construction and the initial data-load persists are outside
+    the window (their snapshots are drained before it opens) — what is
+    measured is exactly the recurring per-step cost a long-running
+    session pays: the synchronous tile handoff plus whatever of the
+    asynchronous write the host cannot overlap."""
+    with CMMSession(_fresh_engine(), executor="local", tile=tile,
+                    checkpoint_dir=ckpt_dir) as s:
+        P = s.persist(CM.rand(n, n, seed=0), name="P")
+        u = s.persist(CM.rand(n, n, seed=1), name="u")
+        if ckpt_dir is not None:
+            s.flush_checkpoints()           # setup snapshots drained
+        t0 = time.perf_counter()
+        for i in range(k):
+            u = s.persist(P @ u, name=f"u{i}")
+        out = u.to_numpy()
+        wall = time.perf_counter() - t0
+        if ckpt_dir is not None:
+            s.flush_checkpoints()
+    return wall, out
+
+
+def run_overhead(n: int, k: int, tile: int, gate: bool = True) -> dict:
+    """Steady-state checkpoint overhead, best-of-REPS, gated < 10 %.
+
+    ``gate=False`` (the --smoke path) reports the number but does not
+    enforce the band: at smoke sizes per-step compute is too small for
+    the fixed per-snapshot costs to amortise, so only the full-size
+    committed artifact carries the gate.  Even when gating, the repo's
+    wall-clock policy applies: skipped while the host load exceeds
+    LOAD_BAR per CPU (a loaded host cannot measure the quantity)."""
+    # paired reps: each rep measures plain and checkpointed back-to-back,
+    # and the rep's RATIO is what matters — wall noise on a shared host
+    # inflates both legs of a pair together, so min-over-pairs of the
+    # ratio is far more stable than comparing two independent best-ofs
+    pairs = []
+    ref = got = None
+    for _ in range(REPS):
+        wp, ref = _run_chain_wall(n, k, tile)
+        d = tempfile.mkdtemp(prefix="cmm_recovery_bench_")
+        try:
+            wc, got = _run_chain_wall(n, k, tile, ckpt_dir=d)
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        pairs.append((wc / wp, wp, wc))
+    ratio, wall_plain, wall_ckpt = min(pairs)
+    overhead = ratio - 1.0
+    load = _host_load_per_cpu()
+    skipped = (not gate) or (overhead >= 0.10 and load > LOAD_BAR)
+    if not gate:
+        note = "overhead gate not enforced in --smoke (workload too " \
+               "small to amortise fixed snapshot costs); see the " \
+               "committed BENCH_recovery.json"
+    elif skipped:
+        note = (f"overhead gate SKIPPED: host load {load:.2f}/cpu > "
+                f"{LOAD_BAR} (wall-clock policy)")
+    else:
+        note = "gated < 10%"
+    return {
+        "case": "checkpoint_overhead", "n": n, "k": k, "tile": tile,
+        "reps": REPS,
+        "wall_plain_s": wall_plain,
+        "wall_checkpointed_s": wall_ckpt,
+        "overhead_pct": 100.0 * overhead,
+        "load_per_cpu": load,
+        "ok_bitident_ckpt": bool(np.array_equal(ref, got)),
+        "ok_overhead_lt_10pct": True if skipped else bool(overhead < 0.10),
+        "_note": note,
+    }
+
+
+def run_recovery(n: int, k: int, tile: int, reps: int = 1) -> dict:
+    """Time-to-recover via resume(): reload vs pure lineage recompute.
+    The GATE is bit-identity of both restores; the walls (and their
+    ratio) are informational, so one rep suffices at full size."""
+    d = tempfile.mkdtemp(prefix="cmm_recovery_bench_")
+    try:
+        with CMMSession(_fresh_engine(), executor="local", tile=tile,
+                        checkpoint_dir=d) as s:
+            u = _chain(s, n, k)
+            ref = u.to_numpy()
+            s.flush_checkpoints()
+        walls = {}
+        bitident = True
+        for policy in ("reload", "recompute"):
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                with CMMSession.resume(d, _fresh_engine(), executor="local",
+                                       tile=tile, policy=policy) as s2:
+                    wall = time.perf_counter() - t0   # table fully rebuilt
+                    got = s2.resident(f"u{k - 1}").to_numpy()
+                    rep = s2.stats["resume"]
+                    if policy == "reload":
+                        bitident &= not rep["recomputed"]
+                    else:
+                        bitident &= not rep["reloaded"]
+                bitident &= bool(np.array_equal(got, ref))
+                best = min(best, wall)
+            walls[policy] = best
+        return {
+            "case": "recovery_time", "n": n, "k": k, "tile": tile,
+            "reps": reps,
+            "recover_reload_s": walls["reload"],
+            "recover_recompute_s": walls["recompute"],
+            "reload_vs_recompute": walls["recompute"] /
+            max(walls["reload"], 1e-12),
+            "ok_bitident_resume": bool(bitident),
+        }
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def run_intact(n: int, k: int, tile: int) -> dict:
+    """Crash mid-save: tear the newest snapshot's shards, resume must
+    fall back to the previous intact one — exact bytes, no hang."""
+    from repro.runtime.durability import TileCheckpointStore
+    d = tempfile.mkdtemp(prefix="cmm_recovery_bench_")
+    try:
+        with CMMSession(_fresh_engine(), executor="local", tile=tile,
+                        checkpoint_dir=d) as s:
+            _chain(s, n, k)
+            s.flush_checkpoints()
+            prior = s.resident(f"u{k - 2}").to_numpy()
+            u = s.persist(s.resident("P") @ s.resident(f"u{k - 1}"),
+                          name=f"u{k}")
+            s.flush_checkpoints()
+        st = TileCheckpointStore(d)
+        newest = st.snaps()[-1]
+        for f in glob.glob(os.path.join(d, f"snap_{newest}", "*.npy")):
+            os.unlink(f)
+        with CMMSession.resume(d, _fresh_engine(), executor="local",
+                               tile=tile) as s2:
+            step = s2.stats["resume"]["step"]
+            fell_back = step < newest
+            names = sorted(h.name for h in s2._handles.values())
+            got = s2.resident(f"u{k - 2}").to_numpy()
+        return {
+            "case": "intact_fallback", "n": n, "k": k, "tile": tile,
+            "torn_step": newest, "restored_step": step,
+            "restored_handles": names,
+            "ok_intact": bool(fell_back and np.array_equal(got, prior)),
+        }
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small inputs (the CI recovery-smoke gate)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        name = "BENCH_recovery_smoke.json" if args.smoke \
+            else "BENCH_recovery.json"
+        args.out = os.path.join(os.path.dirname(__file__), "..", name)
+
+    if args.smoke:
+        cases = [run_overhead(256, 4, 128, gate=False),
+                 run_recovery(256, 4, 128),
+                 run_intact(256, 4, 128)]
+    else:
+        # overhead leg: per-step compute grows n^3 while checkpoint bytes
+        # grow n^2 — steady state needs GEMMs big enough to cover the
+        # writer's CPU share even on a host with no spare core.  The
+        # intact leg is a pure correctness check, so it runs small.
+        cases = [run_overhead(6144, 4, 1024),
+                 run_recovery(6144, 4, 1024),
+                 run_intact(1024, 4, 512)]
+
+    ok = True
+    for c in cases:
+        checks = {kk: v for kk, v in c.items() if kk.startswith("ok_")}
+        ok &= all(checks.values())
+        line = " ".join(f"{kk}={v}" for kk, v in checks.items())
+        if c["case"] == "checkpoint_overhead":
+            print(f"[recovery] overhead n={c['n']} k={c['k']} "
+                  f"wall {c['wall_plain_s']:.3f}s->"
+                  f"{c['wall_checkpointed_s']:.3f}s "
+                  f"(+{c['overhead_pct']:.1f}%) {line}")
+        elif c["case"] == "recovery_time":
+            print(f"[recovery] resume n={c['n']} k={c['k']} "
+                  f"reload {c['recover_reload_s']:.3f}s vs recompute "
+                  f"{c['recover_recompute_s']:.3f}s "
+                  f"({c['reload_vs_recompute']:.2f}x) {line}")
+        else:
+            print(f"[recovery] intact torn_step={c['torn_step']} "
+                  f"restored_step={c['restored_step']} {line}")
+        if not all(checks.values()):
+            print(f"[recovery] CHECK FAILED: {c['case']}", file=sys.stderr)
+
+    with open(args.out, "w") as f:
+        json.dump({"cases": cases}, f, indent=2)
+    print(f"[recovery] wrote {os.path.abspath(args.out)}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,8 +25,38 @@ import shutil
 import threading
 from typing import Any, Dict, Optional
 
-import jax
 import numpy as np
+
+
+def _device_get(arr):
+    """Host-side ndarray of a (possibly device-resident) array.  jax is
+    imported lazily: the tile-durability store (runtime/durability.py)
+    shares this module's publication helpers and must not pay the jax
+    import on the pure-NumPy session path."""
+    if type(arr).__module__.startswith("numpy"):
+        return np.asarray(arr)
+    import jax
+    return np.asarray(jax.device_get(arr))
+
+
+def fsync_json(path: str, obj) -> None:
+    """Write JSON with flush + fsync — the manifest durability barrier:
+    once this returns, the manifest survives a crash (the rename that
+    publishes it is atomic on POSIX)."""
+    with open(path, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def atomic_publish(tmp: str, final: str) -> None:
+    """Atomically publish a staged checkpoint directory.  A crash before
+    the rename leaves only the ``.tmp`` directory, which readers ignore —
+    the previous published checkpoint stays the newest intact one.
+    Shared by this store and ``runtime/durability.py``'s tile store."""
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
 
 
 def _escape(name: str) -> str:
@@ -58,23 +88,17 @@ class CheckpointStore:
         os.makedirs(tmp)
         manifest = {"step": step, "meta": meta or {}, "leaves": {}}
         for name, arr in tree.items():
-            a = np.asarray(jax.device_get(arr))
+            a = _device_get(arr)
             np.save(os.path.join(tmp, _escape(name) + ".npy"), a)
             manifest["leaves"][name] = {"shape": list(a.shape),
                                         "dtype": str(a.dtype)}
-        mpath = os.path.join(tmp, "manifest.json")
-        with open(mpath, "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+        fsync_json(os.path.join(tmp, "manifest.json"), manifest)
+        atomic_publish(tmp, final)
 
     def save_async(self, step: int, tree: Dict[str, Any],
                    meta: Optional[dict] = None):
         """Snapshot to host, then write in a background thread."""
-        snap = {k: np.asarray(jax.device_get(v)) for k, v in tree.items()}
+        snap = {k: _device_get(v) for k, v in tree.items()}
         self.wait()
         self._async_thread = threading.Thread(
             target=self.save, args=(step, snap, meta), daemon=True)
@@ -114,6 +138,7 @@ class CheckpointStore:
         for name in man["leaves"]:
             a = np.load(os.path.join(base, _escape(name) + ".npy"))
             if shardings and shardings.get(name) is not None:
+                import jax
                 out[name] = jax.device_put(a, shardings[name])
             else:
                 out[name] = a

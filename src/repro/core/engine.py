@@ -328,6 +328,17 @@ class CMMEngine:
         dim = max(max(n.shape) for n in topo_order_many(roots))
         return max(1, dim // 2)
 
+    def predict_recompute_seconds(self, roots: Sequence[ClusteredMatrix],
+                                  tile=None) -> float:
+        """Simulated wall-clock of re-deriving ``roots`` from scratch on
+        the current spec — the lineage-recompute leg of the durable
+        session's per-handle reload-vs-recompute pricing (the reload leg
+        is ``simulator.predict_reload_seconds`` on the same TimeModel)."""
+        roots = list(roots)
+        plan = self.plan_many(roots, tile=tile,
+                              persist=tuple(range(len(roots))))
+        return plan.sim.makespan
+
     def autotune_tile(self, root: ClusteredMatrix,
                       candidates: Sequence[int]) -> Tuple[int, Dict[int, float]]:
         """§3.3: pick the tile size with the best *simulated* makespan,

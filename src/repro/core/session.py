@@ -29,11 +29,22 @@ Bit-identity contract: a persisted k-step chain is bitwise identical to
 the equivalent one-shot expression on every backend, because each step
 executes the same tiled kernels on the same bits and tile movement is
 bit-copying (asserted in ``tests/test_session.py``).
+
+**Durable sessions**: constructed with ``checkpoint_dir=...`` the session
+snapshots every persisted handle's tiles to disk (asynchronously,
+incremental per handle — see ``runtime/durability.py``) together with its
+pickled lineage, and :meth:`CMMSession.resume` rebuilds the residency
+table from the newest intact snapshot after a full-cluster crash —
+SIGKILL of master and every worker mid-``compute()`` included.  Restore
+chooses reload-from-disk vs recompute-from-lineage per handle, priced
+through the ``TimeModel`` (``spill_read_bandwidth``); a corrupt shard
+degrades to lineage recompute instead of resurrecting wrong bytes.
 """
 from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -41,6 +52,7 @@ import numpy as np
 
 from .engine import CMMEngine, Plan
 from .lazy import ClusteredMatrix, Op, topo_order_many
+from .simulator import predict_reload_seconds
 from .tiling import normalize_tile, grid_of, tile_slices, result_sets_of
 
 _hid_counter = itertools.count(1)
@@ -52,6 +64,16 @@ def _next_hid() -> int:
         return next(_hid_counter)
 
 
+def _ensure_hid_floor(n: int) -> None:
+    """Advance the handle-id counter to at least ``n`` — resume() restores
+    handles under their checkpointed hids, and new handles made afterwards
+    must not collide with them."""
+    global _hid_counter
+    with _hid_lock:
+        cur = next(_hid_counter)
+        _hid_counter = itertools.count(max(cur, n))
+
+
 class ResidentTilesLost(RuntimeError):
     """Raised by an elastic executor when tiles of a resident handle were
     on a node that died (and no live copy remains).  The session catches
@@ -61,6 +83,17 @@ class ResidentTilesLost(RuntimeError):
         self.hids = tuple(sorted(set(hids)))
         super().__init__(msg or f"resident tiles lost for handles "
                                 f"{self.hids}")
+
+
+class SessionUnrecoverable(RuntimeError):
+    """The session exhausted its bounded retry budget (``max_retries``)
+    re-deriving lost resident tiles, or a restore found a handle with
+    neither intact shards nor lineage.  Carries the lost handle ids."""
+
+    def __init__(self, hids: Sequence[int], msg: str = ""):
+        self.hids = tuple(sorted(set(hids)))
+        super().__init__(msg or f"resident handles {self.hids} are "
+                                f"unrecoverable")
 
 
 @dataclass
@@ -192,7 +225,11 @@ class CMMSession:
     """
 
     def __init__(self, engine: Optional[CMMEngine] = None,
-                 executor: str = "local", tile=None, **exec_kw):
+                 executor: str = "local", tile=None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1,
+                 max_retries: int = 3,
+                 retry_backoff_s: float = 0.05, **exec_kw):
         self.engine = engine or CMMEngine()
         self.executor = executor
         self.tile = tile if tile is not None else self.engine.tile
@@ -200,7 +237,25 @@ class CMMSession:
         self._segs: Dict[Tuple[int, int, int], Tuple[int, str, str]] = {}
         self._handles: Dict[int, ResidentHandle] = {}
         self._closed = False
+        self._closing = False
         self.stats: Dict[str, object] = {}
+        #: bounded-retry policy for lost resident tiles (satellite of the
+        #: durability work: the old path recursed without backoff)
+        self.max_retries = max(0, int(max_retries))
+        self.retry_backoff_s = float(retry_backoff_s)
+        #: durability (None -> plain in-memory session, as before)
+        self._store = None
+        self.checkpoint_every = max(1, int(checkpoint_every))
+        self._dirty: Set[int] = set()
+        self._persists_since_ckpt = 0
+        self._ckpt_step = 0
+        if checkpoint_dir is not None:
+            from ..runtime.durability import TileCheckpointStore
+            self._store = TileCheckpointStore(checkpoint_dir)
+            # never renumber over snapshots an earlier incarnation left:
+            # snap_<N> publication rmtree's an existing snap_<N>, which
+            # would tear shards still referenced by newer manifests
+            self._ckpt_step = max(self._store.snaps(), default=0)
         if executor in _INPROC:
             from ..exec import make_executor
             self._exec = make_executor(executor, **exec_kw)
@@ -213,6 +268,9 @@ class CMMSession:
             self._exec = ElasticClusterExecutor(session=True, **exec_kw)
         else:
             raise ValueError(f"unknown session executor {executor!r}")
+        if self._store is not None \
+                and hasattr(self._exec, "corrupt_tile_hook"):
+            self._exec.corrupt_tile_hook = self._corrupt_shard
 
     # -- public API ----------------------------------------------------------
     def compute(self, expr: ClusteredMatrix, tile=None) -> np.ndarray:
@@ -259,12 +317,18 @@ class CMMSession:
         if not handle.alive:
             return
         handle.alive = False
-        self._handles.pop(handle.hid, None)
+        registered = self._handles.pop(handle.hid, None) is not None
         for (i, j) in handle.tiles():
             self._tiles.pop((handle.hid, i, j), None)
             ent = self._segs.pop((handle.hid, i, j), None)
             if ent is not None:
                 self._drop_seg(handle.hid, i, j, ent)
+        if registered and self._store is not None and not self._closing:
+            # a freed handle must not resurrect on resume: publish a
+            # snapshot without it (cheap — survivors carry over).  Only
+            # for handles that made it into the table: abandoning a
+            # half-retained run's outputs is not a durability event.
+            self.checkpoint()
 
     def close(self) -> Dict[str, object]:
         """Free every live handle, audit the executor arenas for leaks and
@@ -273,6 +337,9 @@ class CMMSession:
         no longer tracks, or a run that leaked arena segments)."""
         if self._closed:
             return self.stats
+        self._closing = True          # an orderly close keeps the last
+        if self._store is not None:   # snapshot resumable: free() must
+            self._store.wait()        # not republish without the handles
         for h in list(self._handles.values()):
             self.free(h)
         audit: Dict[str, object] = {"handles_leaked": len(self._handles),
@@ -395,9 +462,37 @@ class CMMSession:
         return normalize_tile(self.engine._default_tile(roots))
 
     def _run(self, roots: List[ClusteredMatrix], persist: Sequence[int],
-             tile=None, names: Sequence[str] = (), _retries: int = 2):
+             tile=None, names: Sequence[str] = ()):
+        """Bounded-retry driver around :meth:`_run_once`: each attempt that
+        fails with ``ResidentTilesLost`` marks the named handles lost (the
+        next attempt re-derives them from lineage inside ``_prepare``) and
+        backs off exponentially; after ``max_retries + 1`` attempts the
+        loss is declared :class:`SessionUnrecoverable`."""
         if self._closed:
             raise RuntimeError("session is closed")
+        last: Optional[ResidentTilesLost] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                time.sleep(min(self.retry_backoff_s * (2 ** (attempt - 1)),
+                               2.0))
+            try:
+                return self._run_once(roots, persist, tile, names)
+            except ResidentTilesLost as e:
+                self._sync_spec()
+                for hid in e.hids:
+                    h = self._handles.get(hid)
+                    if h is not None:
+                        h.lost = True
+                last = e
+        raise SessionUnrecoverable(
+            last.hids,
+            f"resident tiles for handles {last.hids} could not be "
+            f"restored after {self.max_retries + 1} attempts: "
+            f"{last}") from last
+
+    def _run_once(self, roots: List[ClusteredMatrix],
+                  persist: Sequence[int], tile=None,
+                  names: Sequence[str] = ()):
         t = self._tile_for(roots, tile)
         prepared = self._prepare(roots, t)
         plan = self.engine.plan_many(prepared, tile=t, persist=persist)
@@ -424,21 +519,14 @@ class CMMSession:
         try:
             gathered = self.engine.execute_plan(plan, executor=self.executor,
                                                 executor_obj=self._exec)
-        except ResidentTilesLost as e:
-            # a node died holding resident input tiles: re-derive the lost
-            # handles from lineage, then retry the whole run (deterministic
+        except ResidentTilesLost:
+            # a node died holding resident input tiles: abandon this
+            # attempt's half-retained outputs and let the bounded _run
+            # loop mark + re-derive the lost handles (deterministic
             # tasks -> the retry is bit-identical)
-            self._sync_spec()
-            if _retries <= 0:
-                raise
-            for (_idx, h) in new_handles:     # abandon half-retained runs
+            for (_idx, h) in new_handles:
                 self.free(h)
-            for hid in e.hids:
-                h = self._handles.get(hid)
-                if h is not None:
-                    h.lost = True
-            return self._run(roots, persist, tile=tile, names=names,
-                             _retries=_retries - 1)
+            raise
         self._sync_spec()
         self.stats["last_exec"] = dict(self._exec.stats)
 
@@ -450,6 +538,8 @@ class CMMSession:
                 raise RuntimeError(f"executor retained no tile for "
                                    f"{missing[:4]} of handle #{h.hid}")
             self._handles[h.hid] = h
+        if new_handles and self._store is not None:
+            self._note_persisted([h.hid for _i, h in new_handles])
 
         # outputs in root order: gathered ndarrays for computed roots,
         # ResidentMatrix for persisted ones
@@ -473,19 +563,18 @@ class CMMSession:
                 out[rs.index] = ResidentMatrix(by_index[rs.index], self)
         return out
 
-    def _recompute(self, handle: ResidentHandle) -> None:
-        """Re-derive a lost handle's tiles from its lineage expression,
-        writing them back under the SAME hid so existing ResidentMatrix
-        leaves stay valid."""
-        if handle.lineage is None:
-            raise ResidentTilesLost(
-                (handle.hid,),
-                f"resident handle #{handle.hid} lost its tiles and has no "
-                f"lineage to recompute from")
-        # drop stale locations, then persist the lineage into this handle.
-        # Surviving nodes may still hold retained segments of the old
-        # incarnation — tell them to release (a dead node's queue is gone
-        # and its segments were reaped with it).
+    def _persist_into(self, handle: ResidentHandle,
+                      expr: ClusteredMatrix) -> None:
+        """Execute ``expr`` and retain its tiles under ``handle``'s
+        EXISTING hid, rebinding residency into the current executor's
+        arenas — the shared machinery of lineage recompute and
+        checkpoint reload (both re-home a known handle, possibly onto a
+        differently-shaped cluster).
+
+        Drops stale locations first: surviving nodes may still hold
+        retained segments of the old incarnation — tell them to release
+        (a dead node's queue is gone and its segments were reaped with
+        it)."""
         for (i, j) in handle.tiles():
             self._tiles.pop((handle.hid, i, j), None)
             ent = self._segs.pop((handle.hid, i, j), None)
@@ -493,7 +582,7 @@ class CMMSession:
                 self._drop_seg(handle.hid, i, j, ent)
         handle.home.clear()
         handle.lost = False                  # set before the run so nested
-        prepared = self._prepare([handle.lineage], handle.tile)
+        prepared = self._prepare([expr], handle.tile)
         plan = self.engine.plan_many(prepared, tile=handle.tile,
                                      persist=(0,))
         prog = plan.program
@@ -503,5 +592,290 @@ class CMMSession:
         plan.residency = SessionResidency(self, handles, {rs.uid: handle})
         self.engine.execute_plan(plan, executor=self.executor,
                                  executor_obj=self._exec)
+        self._sync_spec()
+
+    def _recompute(self, handle: ResidentHandle) -> None:
+        """Re-derive a lost handle's tiles from its lineage expression,
+        writing them back under the SAME hid so existing ResidentMatrix
+        leaves stay valid."""
+        if handle.lineage is None:
+            raise ResidentTilesLost(
+                (handle.hid,),
+                f"resident handle #{handle.hid} lost its tiles and has no "
+                f"lineage to recompute from")
+        self._persist_into(handle, handle.lineage)
         self.stats["recomputed_handles"] = \
             self.stats.get("recomputed_handles", 0) + 1
+
+    # -- durability ----------------------------------------------------------
+    def _note_persisted(self, hids: Sequence[int]) -> None:
+        """New handles entered the residency table: mark them dirty and
+        snapshot once every ``checkpoint_every`` persists."""
+        self._dirty.update(hids)
+        self._persists_since_ckpt += 1
+        if self._persists_since_ckpt >= self.checkpoint_every:
+            self.checkpoint(wait=False)
+
+    def checkpoint(self, wait: bool = True) -> None:
+        """Snapshot the current residency table (asynchronously).
+
+        Dirty or never-checkpointed handles are written fresh; clean
+        handles carry over by reference.  A handle whose tiles cannot be
+        read (its node died between the run and this call) is marked lost
+        and skipped — durability degrades, the session keeps computing.
+
+        ``wait=False`` (the steady-state path) never blocks on the
+        writer: if the previous snapshot is still being written, this one
+        is skipped and the dirty handles COALESCE into the next — the
+        durability lag is bounded by one disk write, and a slow disk
+        costs throughput of snapshots, not of compute."""
+        if self._store is None or self._closed:
+            return
+        if not wait and self._store.busy():
+            return                       # coalesce: dirty set stays dirty
+        self._store.wait()                   # baseline = last real write
+        if self._store.write_errors:
+            errs = self.stats.setdefault("checkpoint_errors", [])
+            errs.extend(self._store.write_errors)
+            del self._store.write_errors[:]
+        fresh: Dict[int, dict] = {}
+        carry: List[int] = []
+        for hid in sorted(self._handles):
+            h = self._handles[hid]
+            if h.lost:
+                continue
+            if hid not in self._dirty and self._store.has_entry(hid):
+                carry.append(hid)
+                continue
+            try:
+                tiles = {(i, j): self._read_tile(hid, i, j)
+                         for (i, j) in h.tiles()}
+            except Exception:
+                h.lost = True                # next use re-derives it
+                continue
+            fresh[hid] = {"shape": h.shape, "dtype": h.dtype,
+                          "tile": h.tile, "grid": h.grid, "name": h.name,
+                          "lineage": self._pickle_lineage(h),
+                          "tiles": tiles}
+        if not fresh and set(carry) == self._store.baseline_hids():
+            return                       # nothing changed since last snap
+        self._ckpt_step += 1
+        self._store.save_async(self._ckpt_step, fresh, carry)
+        self._dirty.clear()
+        self._persists_since_ckpt = 0
+
+    def flush_checkpoints(self) -> None:
+        """Force a snapshot of the current residency table and block until
+        it is durably published; raises if the write failed."""
+        if self._store is None:
+            return
+        self.checkpoint()
+        self._store.wait()
+        if self._store.write_errors:
+            errs = list(self._store.write_errors)
+            del self._store.write_errors[:]
+            raise RuntimeError(f"checkpoint write failed:\n{errs[0]}")
+
+    def _read_tile(self, hid: int, i: int, j: int) -> np.ndarray:
+        """One resident tile as a master-side host array (checkpoint
+        source).  In-process tiles are handed to the writer WITHOUT a
+        copy: a registered handle's tiles are immutable for its lifetime
+        (``_persist_into`` replaces the dict entries, executors allocate
+        fresh outputs, ``to_numpy`` assembles into a new array) and the
+        writer's reference keeps the array alive past ``free()``.
+        Cluster tiles are assembled from arena segments — already fresh
+        arrays."""
+        key = (hid, i, j)
+        if key in self._tiles:
+            return self._tiles[key]
+        return self._attach_tile(key)
+
+    def _pickle_lineage(self, h: ResidentHandle) -> Optional[bytes]:
+        """Session-free pickle of a handle's lineage (ResidentMatrix
+        leaves carry the session — strip them down to their hid); None if
+        the expression is unpicklable (the handle is then reload-only)."""
+        if h.lineage is None:
+            return None
+        from ..runtime.durability import pickle_expr
+        try:
+            return pickle_expr(self._strip_lineage(h.lineage))
+        except Exception:
+            return None
+
+    def _strip_lineage(self, expr: ClusteredMatrix) -> ClusteredMatrix:
+        new: Dict[int, ClusteredMatrix] = {}
+        for node in topo_order_many([expr]):
+            if node.op is Op.RESIDENT:
+                new[node.uid] = ClusteredMatrix(
+                    Op.RESIDENT, node.shape, node.dtype,
+                    payload=int(node.payload.hid), name=node.name)
+                continue
+            parents = tuple(new[p.uid] for p in node.parents)
+            new[node.uid] = node if parents == node.parents else \
+                ClusteredMatrix(node.op, node.shape, node.dtype,
+                                parents=parents, payload=node.payload,
+                                name=node.name)
+        return new[expr.uid]
+
+    def _rebuild_lineage(self, raw: bytes) -> Optional[ClusteredMatrix]:
+        """Inverse of :meth:`_strip_lineage` against THIS session's
+        restored handles.  Every node is rebuilt (fresh uids — unpickled
+        uids could collide with this process's counter); None if a
+        referenced handle did not survive the restore."""
+        from ..runtime.durability import unpickle_expr
+        expr = unpickle_expr(raw)
+        new: Dict[int, ClusteredMatrix] = {}
+        for node in topo_order_many([expr]):
+            if node.op is Op.RESIDENT:
+                h = self._handles.get(int(node.payload))
+                if h is None or not h.alive:
+                    return None
+                new[node.uid] = ResidentMatrix(h, self, name=node.name)
+                continue
+            parents = tuple(new[p.uid] for p in node.parents)
+            new[node.uid] = ClusteredMatrix(
+                node.op, node.shape, node.dtype, parents=parents,
+                payload=node.payload, name=node.name)
+        return new[expr.uid]
+
+    def _corrupt_shard(self, hid: int) -> str:
+        """Fault-injection hook for ``ChaosEvent(corrupt_tile=hid)``:
+        flips one byte in the newest on-disk shard of ``hid``."""
+        if self._store is None:              # pragma: no cover — guarded
+            raise RuntimeError("corrupt_tile chaos needs a durable "
+                               "session (checkpoint_dir=...)")
+        self._store.wait()
+        return self._store.corrupt_shard(hid)
+
+    # -- resume ---------------------------------------------------------------
+    def resident(self, name: str) -> ResidentMatrix:
+        """Look up a live handle by its persist-time name (how resumed
+        sessions re-acquire their matrices); newest wins on duplicates."""
+        matches = [h for h in self._handles.values()
+                   if h.alive and h.name == name]
+        if not matches:
+            raise KeyError(f"no resident handle named {name!r}")
+        return ResidentMatrix(max(matches, key=lambda h: h.hid), self)
+
+    @classmethod
+    def resume(cls, checkpoint_dir: str,
+               engine: Optional[CMMEngine] = None,
+               executor: str = "local", tile=None,
+               policy: str = "price", **exec_kw) -> "CMMSession":
+        """Rebuild a session from the newest intact snapshot under
+        ``checkpoint_dir`` — after a crash (SIGKILL of the whole cluster
+        included) or an orderly close.
+
+        The new session may target a completely different cluster shape:
+        tiles are re-homed into the fresh executor's arenas.  Per handle
+        the restore chooses reload-from-disk vs recompute-from-lineage:
+
+        * ``policy="price"`` (default) — cheaper leg per the TimeModel
+          (``spill_read_bandwidth`` vs the lineage plan's simulated
+          makespan);
+        * ``policy="reload"`` / ``policy="recompute"`` — forced.
+
+        A corrupt shard degrades to lineage recompute; corrupt shards of
+        a lineage-less handle raise :class:`SessionUnrecoverable`.
+        Restored bytes are bit-identical to what was persisted."""
+        if policy not in ("price", "reload", "recompute"):
+            raise ValueError(f"unknown resume policy {policy!r}")
+        s = cls(engine, executor=executor, tile=tile,
+                checkpoint_dir=checkpoint_dir, **exec_kw)
+        try:
+            s._resume_from(policy)
+        except BaseException:
+            try:
+                s.close()
+            except Exception:
+                pass
+            raise
+        return s
+
+    def _resume_from(self, policy: str) -> None:
+        from ..runtime.durability import ShardCorrupt
+        man = self._store.latest_intact()
+        if man is None:
+            raise RuntimeError(
+                f"no intact checkpoint under {self._store.dir!r}")
+        entries = {int(hid): e for hid, e in man["handles"].items()}
+        # restored handles keep their checkpointed hids; hids are
+        # monotonic, so lineage only references EARLIER hids — restoring
+        # in sorted order makes every reference resolvable
+        _ensure_hid_floor(max(entries, default=0) + 1)
+        report: Dict[str, object] = {"step": int(man["step"]),
+                                     "reloaded": [], "recomputed": [],
+                                     "corrupt_shards": 0}
+        for hid in sorted(entries):
+            e = entries[hid]
+            h = ResidentHandle(hid, tuple(e["shape"]),
+                               np.dtype(e["dtype"]), tuple(e["tile"]),
+                               tuple(e["grid"]), name=e.get("name", ""))
+            self._handles[hid] = h
+            lineage = self._load_lineage(man, hid)
+            mode = policy
+            if mode == "price" and lineage is not None:
+                reload_s = predict_reload_seconds(
+                    self._store.handle_bytes(man, hid),
+                    self.engine.timemodel)
+                recompute_s = self.engine.predict_recompute_seconds(
+                    [lineage], tile=h.tile)
+                mode = "reload" if reload_s <= recompute_s \
+                    else "recompute"
+            if lineage is None:
+                mode = "reload"              # no recompute leg exists
+            if mode == "reload":
+                try:
+                    arr = self._assemble_shards(man, hid, h)
+                except ShardCorrupt as exc:
+                    report["corrupt_shards"] += 1
+                    if lineage is None:
+                        raise SessionUnrecoverable(
+                            (hid,),
+                            f"checkpoint shard of handle #{hid} "
+                            f"({h.name!r}) is corrupt and it has no "
+                            f"lineage: {exc}") from exc
+                    mode = "recompute"       # graceful degradation
+                else:
+                    h.lineage = lineage if lineage is not None else \
+                        ClusteredMatrix.from_array(arr, name=h.name)
+                    self._persist_into(
+                        h, ClusteredMatrix.from_array(arr, name=h.name))
+                    report["reloaded"].append(hid)
+            if mode == "recompute":
+                h.lineage = lineage
+                self._persist_into(h, lineage)
+                report["recomputed"].append(hid)
+        # recomputed tiles are bit-identical to the checkpointed ones
+        # (deterministic tasks), so the on-disk shards remain valid
+        # carry-over references for this session's own snapshots
+        self._store.adopt(man)
+        self._ckpt_step = max(self._ckpt_step, int(man["step"]))
+        self.stats["resume"] = report
+
+    def _load_lineage(self, man: dict, hid: int
+                      ) -> Optional[ClusteredMatrix]:
+        from ..runtime.durability import ShardCorrupt
+        try:
+            raw = self._store.load_lineage(man, hid)
+        except ShardCorrupt:
+            return None                      # reload leg may still work
+        if raw is None:
+            return None
+        try:
+            return self._rebuild_lineage(raw)
+        except Exception:
+            return None
+
+    def _assemble_shards(self, man: dict, hid: int,
+                         h: ResidentHandle) -> np.ndarray:
+        """The full checkpointed ndarray of one handle, every shard
+        CRC-validated (ShardCorrupt on any mismatch)."""
+        rows = tile_slices(h.shape[0], h.tile[0])
+        cols = tile_slices(h.shape[1], h.tile[1])
+        out = np.empty(h.shape, dtype=h.dtype)
+        for (i, j) in h.tiles():
+            t = self._store.load_tile(man, hid, i, j)
+            (r0, r1), (c0, c1) = rows[i], cols[j]
+            out[r0:r1, c0:c1] = t
+        return out

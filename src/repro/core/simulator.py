@@ -283,9 +283,26 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
 
 # -- churn pricing (elastic runtime) ----------------------------------------
 
+def predict_reload_seconds(nbytes: int, tm: TimeModel) -> float:
+    """Wall-clock to reload ``nbytes`` of checkpointed tiles from disk —
+    the reload leg of the durable session's per-handle reload-vs-recompute
+    choice (the recompute leg is ``CMMEngine.predict_recompute_seconds``,
+    simulated with the same TimeModel)."""
+    return float(nbytes) / max(tm.spill_read_bandwidth, 1.0)
+
+
+def predict_checkpoint_overhead(nbytes: int, tm: TimeModel) -> float:
+    """Steady-state cost one asynchronous tile snapshot adds to the
+    session path: the fixed writer handoff plus the host-side copy of the
+    dirty tiles, priced at the spill bandwidth (the disk write itself
+    overlaps the next compute)."""
+    return tm.checkpoint_write_overhead + predict_reload_seconds(nbytes, tm)
+
+
 def predict_recovery_cost(g: TaskGraph, sched: Schedule, spec: ClusterSpec,
                           tm: TimeModel, node: int,
-                          cost: Optional[CostCache] = None) -> float:
+                          cost: Optional[CostCache] = None,
+                          checkpoint_bytes: Optional[int] = None) -> float:
     """Predicted wall-clock cost of losing ``node`` mid-run.
 
     The elastic runtime recovers by lineage: every tile the dead node held
@@ -295,6 +312,11 @@ def predict_recovery_cost(g: TaskGraph, sched: Schedule, spec: ClusterSpec,
     half of that work in expectation; recomputation spreads over the
     surviving compute slots.  ``tm.respawn_overhead`` adds the fixed
     detection + re-plan + rewire cost of one recovery event.
+
+    ``checkpoint_bytes`` is the durable-session extension: when the lost
+    tiles also exist as checkpoint shards of that many bytes, recovery
+    takes the *cheaper* of lineage recompute and reload-from-disk — the
+    same per-tile choice ``CMMSession.resume`` makes.
     """
     surv = sum(spec.workers_at(k) for k in spec.alive_nodes() if k != node)
     if surv <= 0:
@@ -303,7 +325,11 @@ def predict_recovery_cost(g: TaskGraph, sched: Schedule, spec: ClusterSpec,
         cost = CostCache(tm, spec)
     lost = sum(cost.time(g.tasks[tid], node)
                for tid, p in sched.placements.items() if p.node == node)
-    return tm.respawn_overhead + 0.5 * lost / surv
+    recompute = 0.5 * lost / surv
+    if checkpoint_bytes is not None:
+        recompute = min(recompute,
+                        predict_reload_seconds(checkpoint_bytes, tm))
+    return tm.respawn_overhead + recompute
 
 
 def churn_adjusted_makespan(g: TaskGraph, sched: Schedule, spec: ClusterSpec,

@@ -130,6 +130,16 @@ class TimeModel:
     #: fixed wall-clock cost of one recovery event, seconds: failure
     #: detection (heartbeat patience) + frontier re-plan + respawn/rewire
     respawn_overhead: float = 0.5
+    #: sequential disk read bandwidth for reloading checkpointed tiles,
+    #: bytes/s — prices the reload-from-disk leg of the durable session's
+    #: restore path (``simulator.predict_reload_seconds``) against
+    #: lineage recompute
+    spill_read_bandwidth: float = 1e9
+    #: fixed steady-state cost one asynchronous tile snapshot adds to the
+    #: session path, seconds (the writer handoff — the host-side copy is
+    #: priced separately at ``spill_read_bandwidth`` and the disk write
+    #: itself overlaps the next compute)
+    checkpoint_write_overhead: float = 1e-3
 
     def _model_time(self, task: Task) -> float:
         """Raw interpolation-model prediction for one task (no contention,
@@ -194,6 +204,8 @@ class TimeModel:
             # Infinity literal; keep it explicit for readability
             "node_mtbf": self.node_mtbf,
             "respawn_overhead": self.respawn_overhead,
+            "spill_read_bandwidth": self.spill_read_bandwidth,
+            "checkpoint_write_overhead": self.checkpoint_write_overhead,
             "models": {k: {"family": m.family, "coef": m.coef.tolist()}
                        for k, m in self.models.items()},
         })
@@ -213,6 +225,9 @@ class TimeModel:
             ipc_latency=d.get("ipc_latency", 2e-4),
             node_mtbf=d.get("node_mtbf", float("inf")),
             respawn_overhead=d.get("respawn_overhead", 0.5),
+            spill_read_bandwidth=d.get("spill_read_bandwidth", 1e9),
+            checkpoint_write_overhead=d.get("checkpoint_write_overhead",
+                                            1e-3),
         )
 
     def save(self, path: str):

@@ -51,6 +51,7 @@ import queue as _queue
 import threading
 import time
 import traceback
+import zlib
 from collections import defaultdict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import replace
@@ -394,7 +395,18 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
             try:
                 src = np.ndarray(ref.shape, dtype=np.dtype(dtype_str),
                                  buffer=remote.buf)
-                arena.store(ref, src)
+                # CRC32 over the payload before and after the copy: a
+                # source segment vanishing or being rebound mid-copy (a
+                # torn read) lands here as a recoverable xfer_fail — the
+                # elastic master retries from a live holder — instead of
+                # silently propagating wrong bytes
+                want = zlib.crc32(src.data) & 0xFFFFFFFF
+                copied = arena.store(ref, src)
+                got = zlib.crc32(copied.data) & 0xFFFFFFFF
+                if got != want:
+                    raise RuntimeError(
+                        f"XFER payload CRC32 mismatch for {ref}: copied "
+                        f"{got:#010x} != source {want:#010x}")
             finally:
                 remote.close()
             seg, dt = arena.seg_of(ref)

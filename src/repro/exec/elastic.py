@@ -87,6 +87,21 @@ class ChaosEvent:
     throttle_seconds: float = 0.0
     #: bypass EWMA detection latency: raise STRAGGLE for this node now
     flag_straggler: Optional[int] = None
+    #: poison the next N master->worker XFER requests (each is sent with
+    #: an unattachable source segment, so the destination worker reports
+    #: ``xfer_fail`` — exercising the bounded-backoff retry path
+    #: end-to-end on real queues)
+    drop_xfer: Optional[int] = None
+    #: flip a byte in the newest checkpoint shard of this resident handle
+    #: id (needs a durable session — ``CMMSession(checkpoint_dir=...)``
+    #: wires ``corrupt_tile_hook``): the next resume fails that shard's
+    #: CRC and must degrade to lineage recompute
+    corrupt_tile: Optional[int] = None
+    #: SIGKILL the ENTIRE cluster — every worker, then the master process
+    #: itself.  Nothing survives to clean up (that is the point: the
+    #: durable session's ``resume()`` is what recovers) — only subprocess
+    #: test harnesses should arm this
+    kill_master: bool = False
 
 
 class ElasticClusterExecutor:
@@ -139,6 +154,9 @@ class ElasticClusterExecutor:
             raise ValueError("respawn_dead is not supported in session "
                              "mode; lost resident tiles recompute from "
                              "lineage on the survivors instead")
+        #: set by a durable session (CMMSession with checkpoint_dir):
+        #: called with a handle id when ChaosEvent(corrupt_tile=...) fires
+        self.corrupt_tile_hook = None
         self._started = False
         self._broken = False
         self._run_msg = None
@@ -224,6 +242,11 @@ class ElasticClusterExecutor:
                         f"{spec.n_nodes}-node spec (+{n_joins} joins)")
             if c.join_workers is not None and c.join_workers <= 0:
                 raise ValueError("join needs at least one worker")
+            if c.corrupt_tile is not None and self.corrupt_tile_hook is None:
+                raise ValueError(
+                    "ChaosEvent(corrupt_tile=...) needs a durable session "
+                    "(CMMSession(checkpoint_dir=...)) whose shards it can "
+                    "corrupt")
 
         tm = self.timemodel or analytic_time_model()
         self._mcfg = self.membership_cfg or MembershipConfig()
@@ -312,6 +335,14 @@ class ElasticClusterExecutor:
         src_busy: Dict[Tuple[int, TileRef], int] = defaultdict(int)
         xfer_inflight: Dict[Tuple[int, TileRef], Tuple[int, int]] = {}
         xfer_retries: Dict[Tuple[int, int], int] = defaultdict(int)
+        #: bounded retry-with-backoff for the hardened transfer path:
+        #: (node, ref) / tid -> monotonic time before which no new
+        #: attempt is issued (exponential in the attempt count, capped)
+        xfer_retry_at: Dict[Tuple[int, TileRef], float] = {}
+        task_retry_at: Dict[int, float] = {}
+        task_retries: Dict[int, int] = defaultdict(int)
+        #: remaining XFER requests to poison (ChaosEvent.drop_xfer)
+        chaos_drop = [0]
         spec_pending: Dict[int, int] = {}        # speculative node per tid
         ready: Set[int] = {t.tid for t in g.sources()}
         #: the sweep is O(tasks), so its cadence scales with graph size:
@@ -416,6 +447,8 @@ class ElasticClusterExecutor:
                 waiting = True
                 if (node, ref) in write_busy:
                     continue                  # a write is already in flight
+                if time.monotonic() < xfer_retry_at.get((node, ref), 0.0):
+                    continue                  # backing off a failed XFER
                 holder = pick_holder(p, ref)
                 if holder is None or holder == node:
                     if not value_secured(p):
@@ -427,6 +460,13 @@ class ElasticClusterExecutor:
                         return False
                     continue                  # value not yet obtainable
                 sname, sdt = avail[(holder, ref)][1], avail[(holder, ref)][2]
+                if chaos_drop[0] > 0:
+                    # fault injection: poison the request's source segment
+                    # so the destination worker reports xfer_fail and the
+                    # bounded-backoff retry re-issues it for real
+                    chaos_drop[0] -= 1
+                    cnt["chaos_dropped_xfers"] += 1
+                    sname = f"{self._prefix}chaos_dropped"
                 self._inqs[node].put(("xfer", p, ref, sname, sdt))
                 write_busy.add((node, ref))
                 xfer_inflight[(node, ref)] = (p, holder)
@@ -455,6 +495,8 @@ class ElasticClusterExecutor:
                 node = assigned[tid]
                 if not alive(node):
                     continue                  # replan is imminent
+                if time.monotonic() < task_retry_at.get(tid, 0.0):
+                    continue                  # backing off a failed dispatch
                 over = inflight[node] >= depth_cap(node)
                 if try_dispatch(tid, node, prefetch_only=over):
                     ready.discard(tid)
@@ -714,6 +756,25 @@ class ElasticClusterExecutor:
                 if c.flag_straggler is not None \
                         and alive(c.flag_straggler):
                     on_straggle(c.flag_straggler)
+                if c.drop_xfer is not None:
+                    # poison the source segment name of the next N
+                    # cross-node transfers: the destination worker fails
+                    # to attach, reports xfer_fail, and the bounded
+                    # retry path re-requests the tile for real
+                    chaos_drop[0] += int(c.drop_xfer)
+                if c.corrupt_tile is not None:
+                    self.corrupt_tile_hook(c.corrupt_tile)
+                if c.kill_master:
+                    # full-cluster crash: SIGKILL every worker FIRST
+                    # (they are daemonic children — a parent SIGKILL
+                    # alone leaves them running), then the master
+                    # itself; nothing gets to flush or clean up, which
+                    # is exactly the failure durable sessions recover
+                    for proc in self._procs.values():
+                        if proc is not None and proc.pid \
+                                and proc.is_alive():
+                            os.kill(proc.pid, signal.SIGKILL)
+                    os.kill(os.getpid(), signal.SIGKILL)
 
         def handle(msg) -> bool:
             """Process one worker message; returns True when it counts
@@ -760,11 +821,19 @@ class ElasticClusterExecutor:
                 if ent is not None and (ent[1], ref) in src_busy:
                     src_busy[(ent[1], ref)] -= 1
                 xfer_retries[(version, n)] += 1
+                tries = xfer_retries[(version, n)]
                 cnt["xfer_retries"] += 1
-                if xfer_retries[(version, n)] > 8:
+                if tries > self._mcfg.xfer_max_retries:
                     raise RuntimeError(
                         f"XFER of {ref} (version {version}) to node {n} "
-                        f"failed {xfer_retries[(version, n)]} times:\n{tb}")
+                        f"failed {tries} times (xfer_max_retries="
+                        f"{self._mcfg.xfer_max_retries}):\n{tb}")
+                # bounded exponential backoff before the dispatch scan
+                # re-requests the tile — from ANY live holder, so a
+                # vanished or corrupted source re-routes instead of
+                # hammering the same copy
+                xfer_retry_at[(n, ref)] = time.monotonic() + min(
+                    self._mcfg.retry_backoff_s * (2 ** (tries - 1)), 2.0)
             elif kind == "hb":
                 ms.heartbeat(msg[1])
                 node_pids.setdefault(msg[1], msg[2])
@@ -781,9 +850,29 @@ class ElasticClusterExecutor:
                     inflight[msg[1]] -= 1
                     cnt["dup_errors"] += 1
                     return True
-                raise RuntimeError(
-                    f"elastic task failed on node {msg[1]} "
-                    f"(task {msg[2]}):\n{msg[3]}")
+                tid = msg[2]
+                t = g.tasks.get(tid)
+                task_retries[tid] += 1
+                tries = task_retries[tid]
+                # in-place accumulate chains (ADDMUL/...) mutate their
+                # output buffer as they run: a crashed instance may have
+                # landed a partial update, so blindly re-running would
+                # double-accumulate — those stay fatal; pure tasks are
+                # retried with bounded exponential backoff
+                retryable = t is not None and t.kind not in _CHAIN_KINDS
+                if not retryable or tries > self._mcfg.task_max_retries:
+                    raise RuntimeError(
+                        f"elastic task failed on node {msg[1]} "
+                        f"(task {tid}, attempt {tries}):\n{msg[3]}")
+                if t.out is not None:
+                    write_busy.discard((msg[1], t.out))
+                dispatched[tid].discard(msg[1])
+                inflight[msg[1]] -= 1
+                cnt["task_retries"] += 1
+                task_retry_at[tid] = time.monotonic() + min(
+                    self._mcfg.retry_backoff_s * (2 ** (tries - 1)), 2.0)
+                if deps_left[tid] == 0 and not dispatched[tid]:
+                    ready.add(tid)
             elif kind == "stats":
                 self._node_stats[msg[1]] = msg[2]
             return True
@@ -1038,6 +1127,8 @@ class ElasticClusterExecutor:
             "xfers": cnt["xfers"],
             "xfer_bytes": cnt["xfer_bytes"],
             "xfer_retries": cnt["xfer_retries"],
+            "task_retries": cnt["task_retries"],
+            "chaos_dropped_xfers": cnt["chaos_dropped_xfers"],
             "gather_bytes": gather_bytes,
             "retained_tiles": retained_count,
             "buffers_freed": sum(s["buffers_freed"]

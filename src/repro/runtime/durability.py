@@ -1,0 +1,316 @@
+"""Tile-granular durability for CMM sessions: checkpointed resident tiles.
+
+The elastic runtime (exec/elastic.py) survives *node* churn by lineage
+recompute, but a master crash or a whole-cluster restart loses every
+persisted tile — the failure mode numpywren sidesteps by keeping tile
+state in a disaggregated store so workers are stateless.  This module is
+that store for :class:`repro.core.session.CMMSession`: each persisted
+handle's tiles are snapshotted to disk (asynchronously — the write
+overlaps the next compute), and ``CMMSession.resume()`` rebuilds the
+residency table from the newest intact snapshot after any crash,
+including SIGKILL of the master and every worker mid-``compute()``.
+
+It reuses ``checkpoint/store.py``'s publication idioms (stage into a
+``.tmp`` dir, fsync the manifest, atomic rename) at tile granularity:
+
+    <dir>/snap_<N>/
+        manifest.json           — step + per-handle metadata and shard refs
+        h<hid>_<i>_<j>.npy      — one shard per (re)written tile
+        h<hid>.lineage.pkl      — pickled session-free lineage expression
+
+Snapshots are **incremental per handle**: a handle whose tiles did not
+change since the previous snapshot is carried over by reference — its
+manifest entry points into the older ``snap_`` directory, nothing is
+rewritten.  ``rotate()`` therefore keeps every directory still referenced
+by a kept manifest.
+
+Every shard and lineage blob carries a CRC32 (same integrity check the
+hardened XFER path applies to cross-node payloads); ``load_tile`` raises
+:class:`ShardCorrupt` on mismatch so the restore path can degrade to
+lineage recompute instead of resurrecting wrong bytes.  A manifest is
+*intact* only if it parses and every file it references exists — a crash
+mid-save leaves a ``.tmp`` directory that readers never look at, so
+``latest_intact()`` always falls back to the previous good snapshot.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import shutil
+import threading
+import traceback
+import zlib
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from ..checkpoint.store import atomic_publish, fsync_json
+
+
+class ShardCorrupt(RuntimeError):
+    """A checkpoint shard failed its CRC32 / load — the restore path must
+    fall back to lineage recompute (or declare the handle unrecoverable)."""
+
+
+def _crc(buf) -> int:
+    return zlib.crc32(buf) & 0xFFFFFFFF
+
+
+class TileCheckpointStore:
+    """Atomic, incremental, CRC-validated snapshots of resident tiles.
+
+    ``save()`` takes *fresh* handles (metadata + tile ndarrays, already
+    master-side host copies) and *carry* handle ids whose entries are
+    inherited unchanged from the last published manifest.  ``save_async``
+    runs the disk write on a background thread; a failed write never
+    raises into the compute path — it is recorded in ``write_errors`` and
+    the previous snapshot stays the newest intact one (the same contract
+    a crash mid-save has).
+    """
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+        self._last_man: Optional[dict] = None
+        #: tracebacks of failed async writes (durability degrades, the
+        #: session keeps computing)
+        self.write_errors: List[str] = []
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, fresh: Dict[int, dict],
+             carry: Iterable[int] = ()) -> dict:
+        """Synchronous atomic snapshot.
+
+        ``fresh[hid]`` = ``{"shape", "dtype", "tile", "grid", "name",
+        "lineage" (pickled bytes or None), "tiles": {(i, j): ndarray}}``.
+        ``carry`` hids reuse their previous manifest entry (shards stay in
+        their older ``snap_`` directory).  Returns the published manifest.
+        """
+        prev = self._baseline()
+        tmp = os.path.join(self.dir, f"snap_{step}.tmp")
+        final = os.path.join(self.dir, f"snap_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        handles: Dict[str, dict] = {}
+        for hid, meta in fresh.items():
+            ent = {"shape": [int(x) for x in meta["shape"]],
+                   "dtype": str(np.dtype(meta["dtype"])),
+                   "tile": [int(x) for x in meta["tile"]],
+                   "grid": [int(x) for x in meta["grid"]],
+                   "name": meta.get("name", ""),
+                   "lineage": None,
+                   "tiles": {}}
+            for (i, j), arr in meta["tiles"].items():
+                a = np.ascontiguousarray(arr)
+                fn = f"h{hid}_{i}_{j}.npy"
+                np.save(os.path.join(tmp, fn), a)
+                ent["tiles"][f"{i},{j}"] = {
+                    "path": f"snap_{step}/{fn}",
+                    "crc32": _crc(a.data),
+                    "nbytes": int(a.nbytes)}
+            lb = meta.get("lineage")
+            if lb is not None:
+                fn = f"h{hid}.lineage.pkl"
+                with open(os.path.join(tmp, fn), "wb") as f:
+                    f.write(lb)
+                ent["lineage"] = {"path": f"snap_{step}/{fn}",
+                                  "crc32": _crc(lb),
+                                  "nbytes": len(lb)}
+            handles[str(hid)] = ent
+        for hid in carry:
+            if prev is None or str(hid) not in prev["handles"]:
+                raise KeyError(f"carry-over handle {hid} has no entry in "
+                               f"the previous manifest")
+            handles[str(hid)] = prev["handles"][str(hid)]
+        manifest = {"step": int(step), "handles": handles}
+        fsync_json(os.path.join(tmp, "manifest.json"), manifest)
+        atomic_publish(tmp, final)
+        self._last_man = manifest
+        return manifest
+
+    def save_async(self, step: int, fresh: Dict[int, dict],
+                   carry: Iterable[int] = ()) -> None:
+        """Publish on a background thread (tile arrays in ``fresh`` must
+        already be host-side copies the caller will not mutate)."""
+        self.wait()
+        carry = tuple(carry)
+
+        def _write():
+            try:
+                self.save(step, fresh, carry)
+            except BaseException:
+                self.write_errors.append(traceback.format_exc())
+
+        self._async_thread = threading.Thread(target=_write, daemon=True)
+        self._async_thread.start()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def busy(self) -> bool:
+        """A background write is still in flight.  The session's steady-
+        state path checks this to COALESCE instead of stall: when the disk
+        cannot keep up, dirty handles stay dirty and ride the next
+        snapshot rather than blocking compute on the writer."""
+        return self._async_thread is not None and \
+            self._async_thread.is_alive()
+
+    def _baseline(self) -> Optional[dict]:
+        """The manifest carry-over entries inherit from: the last one this
+        store published, else the newest intact one on disk."""
+        if self._last_man is None:
+            self._last_man = self.latest_intact()
+        return self._last_man
+
+    def adopt(self, manifest: dict) -> None:
+        """Make ``manifest`` the carry-over baseline (the resume path calls
+        this: recomputed tiles are bit-identical to the checkpointed ones —
+        deterministic tasks — so the old shards stay valid references)."""
+        self._last_man = manifest
+
+    def has_entry(self, hid: int) -> bool:
+        man = self._baseline()
+        return man is not None and str(hid) in man["handles"]
+
+    def baseline_hids(self) -> set:
+        """Handle ids in the carry-over baseline (see ``_baseline``)."""
+        man = self._baseline()
+        return set() if man is None else {int(h) for h in man["handles"]}
+
+    # -- read ---------------------------------------------------------------
+    def snaps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("snap_") and not d.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.dir, d,
+                                                "manifest.json")):
+                try:
+                    out.append(int(d.split("_", 1)[1]))
+                except ValueError:          # pragma: no cover — stray dir
+                    pass
+        return sorted(out)
+
+    def manifest(self, step: int) -> Optional[dict]:
+        """Parse one snapshot's manifest; None if unreadable/truncated."""
+        import json
+        try:
+            with open(os.path.join(self.dir, f"snap_{step}",
+                                   "manifest.json")) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def _complete(self, man: dict) -> bool:
+        """Every file the manifest references exists on disk (a rotated or
+        half-deleted snapshot is not intact)."""
+        for ent in man["handles"].values():
+            paths = [te["path"] for te in ent["tiles"].values()]
+            if ent.get("lineage"):
+                paths.append(ent["lineage"]["path"])
+            for p in paths:
+                if not os.path.exists(os.path.join(self.dir, p)):
+                    return False
+        return True
+
+    def latest_intact(self) -> Optional[dict]:
+        """The newest manifest that parses and references only existing
+        files — what ``CMMSession.resume`` rebuilds from.  Corrupt or
+        truncated snapshots are skipped, falling back to older ones."""
+        for step in reversed(self.snaps()):
+            man = self.manifest(step)
+            if man is not None and self._complete(man):
+                return man
+        return None
+
+    def load_tile(self, man: dict, hid: int, i: int, j: int) -> np.ndarray:
+        """One shard, CRC-validated — ShardCorrupt on any mismatch."""
+        ent = man["handles"][str(hid)]["tiles"][f"{i},{j}"]
+        path = os.path.join(self.dir, ent["path"])
+        try:
+            a = np.load(path)
+        except Exception as e:
+            raise ShardCorrupt(f"unreadable shard {ent['path']}: "
+                               f"{e}") from e
+        a = np.ascontiguousarray(a)
+        if _crc(a.data) != ent["crc32"]:
+            raise ShardCorrupt(f"CRC32 mismatch on shard {ent['path']} "
+                               f"(handle #{hid} tile ({i},{j}))")
+        return a
+
+    def load_lineage(self, man: dict, hid: int) -> Optional[bytes]:
+        """The pickled lineage blob, CRC-validated; None if the handle was
+        checkpointed without lineage."""
+        ent = man["handles"][str(hid)].get("lineage")
+        if ent is None:
+            return None
+        path = os.path.join(self.dir, ent["path"])
+        try:
+            with open(path, "rb") as f:
+                raw = f.read()
+        except OSError as e:
+            raise ShardCorrupt(f"unreadable lineage {ent['path']}: "
+                               f"{e}") from e
+        if _crc(raw) != ent["crc32"]:
+            raise ShardCorrupt(f"CRC32 mismatch on lineage {ent['path']} "
+                               f"(handle #{hid})")
+        return raw
+
+    def handle_bytes(self, man: dict, hid: int) -> int:
+        """Total checkpointed tile bytes of one handle — the numerator of
+        the reload-from-disk leg in the restore path's pricing."""
+        return sum(te["nbytes"]
+                   for te in man["handles"][str(hid)]["tiles"].values())
+
+    # -- rotation ------------------------------------------------------------
+    def rotate(self, keep: int = 3) -> None:
+        """Drop all but the newest ``keep`` snapshots — EXCEPT directories
+        still referenced by a kept manifest (incremental carry-over)."""
+        self.wait()
+        ids = self.snaps()
+        kept = set(ids[-max(1, keep):])
+        referenced = {f"snap_{s}" for s in kept}
+        for s in kept:
+            man = self.manifest(s)
+            if man is None:
+                continue
+            for ent in man["handles"].values():
+                for te in ent["tiles"].values():
+                    referenced.add(te["path"].split("/", 1)[0])
+                if ent.get("lineage"):
+                    referenced.add(ent["lineage"]["path"].split("/", 1)[0])
+        for d in os.listdir(self.dir):
+            if d.startswith("snap_") and d not in referenced:
+                shutil.rmtree(os.path.join(self.dir, d),
+                              ignore_errors=True)
+
+    # -- fault injection ------------------------------------------------------
+    def corrupt_shard(self, hid: int) -> str:
+        """Flip one byte in the newest shard of ``hid`` (the
+        ``ChaosEvent(corrupt_tile=...)`` hook): the next reload fails its
+        CRC and the restore path must degrade to lineage recompute."""
+        self.wait()
+        man = self.latest_intact()
+        if man is None or str(hid) not in man["handles"]:
+            raise KeyError(f"no checkpointed shards for handle {hid}")
+        ent = next(iter(man["handles"][str(hid)]["tiles"].values()))
+        path = os.path.join(self.dir, ent["path"])
+        with open(path, "r+b") as f:
+            f.seek(-1, os.SEEK_END)
+            b = f.read(1)
+            f.seek(-1, os.SEEK_END)
+            f.write(bytes([b[0] ^ 0xFF]))
+        return path
+
+
+def pickle_expr(expr) -> bytes:
+    """Stable pickling for lineage expressions (one place to change the
+    protocol if manifests ever need cross-version compatibility)."""
+    return pickle.dumps(expr, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def unpickle_expr(raw: bytes):
+    return pickle.loads(raw)

@@ -45,9 +45,12 @@ class PodState:
 class FleetMonitor:
     """Tracks heartbeats + per-step timings for every pod/slice."""
 
-    def __init__(self, n_pods: int, cfg: FaultConfig = FaultConfig(),
+    def __init__(self, n_pods: int, cfg: Optional[FaultConfig] = None,
                  clock: Callable[[], float] = time.monotonic):
-        self.cfg = cfg
+        # default constructed per instance: a default in the signature
+        # would be ONE shared FaultConfig across every monitor, so a
+        # config mutation on one monitor would leak into all others
+        self.cfg = cfg if cfg is not None else FaultConfig()
         self.clock = clock
         self.pods = {i: PodState(i, clock()) for i in range(n_pods)}
         self.restarts = 0

@@ -58,6 +58,15 @@ class MembershipConfig:
     straggler_min_tasks: int = 5
     #: survivors required to keep running after a death
     min_nodes: int = 1
+    #: bounded-retry policy for the hardened transfer/dispatch path
+    #: (exec/elastic.py): attempts per failed XFER destination before the
+    #: run is declared failed ...
+    xfer_max_retries: int = 8
+    #: ... re-dispatch attempts for a failed non-accumulating task
+    #: instance (in-place accumulate chains are never blindly re-run) ...
+    task_max_retries: int = 2
+    #: ... and the base of the exponential backoff between attempts
+    retry_backoff_s: float = 0.02
 
 
 #: membership event kinds

@@ -1,5 +1,6 @@
 """Checkpoint store/manager: atomicity, rotation, restart, elastic restore."""
 import os
+import threading
 
 import numpy as np
 import jax
@@ -141,3 +142,57 @@ def test_training_restart_bitwise(tmp_path):
     for k in pa:
         np.testing.assert_allclose(np.asarray(pa[k]), np.asarray(pb2[k]),
                                    rtol=1e-6, atol=1e-7)
+
+
+# -- crash mid-save ----------------------------------------------------------
+
+def test_crash_mid_save_leaves_prior_checkpoint_intact(tmp_path):
+    """A simulated crash mid-save (staged .tmp dir with a partial shard
+    set and no published rename) is invisible to readers: latest_step()
+    still returns the previous intact checkpoint."""
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, _tree())
+    tmp = tmp_path / "step_2.tmp"
+    tmp.mkdir()
+    np.save(tmp / "layers__w.npy", np.zeros((8, 8), np.float32))
+    # crash "after" the manifest too — still staged, never renamed
+    (tmp / "manifest.json").write_text('{"step": 2, "meta": {}, "leav')
+    assert store.steps() == [1]
+    assert store.latest_step() == 1
+    back = store.restore(1)
+    np.testing.assert_array_equal(np.asarray(_tree()["layers/w"]),
+                                  back["layers/w"])
+
+
+def test_async_save_thread_crash_keeps_prior_step(tmp_path, monkeypatch):
+    """The async save thread dying mid-write must not publish a torn
+    checkpoint: the .tmp directory stays unpublished and a later save of
+    the same step recovers (restages over the leftover .tmp)."""
+    store = CheckpointStore(str(tmp_path))
+    store.save(3, _tree())
+
+    real_save = np.save
+    calls = {"n": 0}
+
+    def dying_save(path, arr, *a, **k):
+        calls["n"] += 1
+        if calls["n"] == 2:            # die mid-shard-set
+            raise OSError("injected: disk gone")
+        return real_save(path, arr, *a, **k)
+
+    monkeypatch.setattr(np, "save", dying_save)
+    seen = []
+    monkeypatch.setattr(threading, "excepthook",
+                        lambda args: seen.append(args.exc_type))
+    store.save_async(4, _tree(1))
+    store.wait()
+    assert seen == [OSError]           # the thread died where injected
+    assert store.latest_step() == 3    # torn step 4 never published
+    assert (tmp_path / "step_4.tmp").exists()
+    assert not (tmp_path / "step_4").exists()
+
+    monkeypatch.setattr(np, "save", real_save)
+    store.save(4, _tree(1))            # recovery: re-save restages .tmp
+    assert store.latest_step() == 4
+    for k, v in store.restore(4).items():
+        np.testing.assert_array_equal(np.asarray(_tree(1)[k]), v)

@@ -101,3 +101,18 @@ def test_restart_budget():
     assert decide(m).action == "remesh"
     m.mark_failed(1)
     assert decide(m).action == "abort"
+
+
+def test_monitor_default_config_not_shared():
+    """Regression: ``FleetMonitor(n)`` used a mutable default
+    (``cfg=FaultConfig()`` evaluated once at def time), so mutating one
+    monitor's config leaked into every other default-constructed
+    monitor."""
+    a = FleetMonitor(2)
+    b = FleetMonitor(2)
+    assert a.cfg is not b.cfg
+    a.cfg.heartbeat_timeout_s = 0.001
+    assert b.cfg.heartbeat_timeout_s == FaultConfig().heartbeat_timeout_s
+    # an explicit config is still honoured by reference
+    shared = FaultConfig(min_pods=3)
+    assert FleetMonitor(4, shared).cfg is shared
