@@ -7,7 +7,11 @@ id — accumulation chains (addmul) create a new version per step, so stale
 partial sums are never reused.
 
 An optional byte-capacity turns the cache into an LRU (the paper's cache is
-unbounded main memory; capacity is exposed for experiments).
+unbounded main memory; capacity is exposed for experiments).  Byte totals are
+maintained incrementally — put/evict/invalidate update a running per-node
+counter instead of re-summing the table — and entries the planner has
+scheduled an XFER around can be ``pin``-ned eviction-exempt, mirroring the
+worker-arena pinning rules.
 """
 from __future__ import annotations
 
@@ -23,6 +27,8 @@ class NodeCache:
         self.capacity = capacity_bytes
         self._c: Dict[int, OrderedDict] = {n: OrderedDict()
                                            for n in range(n_nodes)}
+        self._bytes: Dict[int, int] = {n: 0 for n in range(n_nodes)}
+        self._pins: Dict[Hashable, int] = {}
         self.hits = 0
         self.misses = 0
 
@@ -41,20 +47,43 @@ class NodeCache:
 
     def put(self, node: int, key: Hashable, nbytes: int = 0):
         c = self._c[node]
+        old = c.pop(key, None)
+        if old is not None:
+            self._bytes[node] -= old
         c[key] = nbytes
-        c.move_to_end(key)
-        if self.capacity is not None:
-            total = sum(c.values())
-            while total > self.capacity and len(c) > 1:
-                _, evicted = c.popitem(last=False)
-                total -= evicted
+        self._bytes[node] += nbytes
+        if self.capacity is not None and self._bytes[node] > self.capacity:
+            for k in list(c.keys()):
+                if self._bytes[node] <= self.capacity or len(c) <= 1:
+                    break
+                if k == key or self._pins.get(k):
+                    continue  # never evict the fresh entry or pinned ones
+                self._bytes[node] -= c.pop(k)
+
+    def pin(self, key: Hashable):
+        """Exempt every node's copy of ``key`` from capacity eviction —
+        used for entries a scheduled XFER was planned around.  Refcounted;
+        pair with ``unpin``."""
+        self._pins[key] = self._pins.get(key, 0) + 1
+
+    def unpin(self, key: Hashable):
+        n = self._pins.get(key, 0) - 1
+        if n <= 0:
+            self._pins.pop(key, None)
+        else:
+            self._pins[key] = n
+
+    def pinned(self, key: Hashable) -> bool:
+        return bool(self._pins.get(key))
 
     def invalidate(self, key: Hashable):
-        for c in self._c.values():
-            c.pop(key, None)
+        for n, c in self._c.items():
+            old = c.pop(key, None)
+            if old is not None:
+                self._bytes[n] -= old
 
     def bytes_at(self, node: int) -> int:
-        return sum(self._c[node].values())
+        return self._bytes[node]
 
     def snapshot(self) -> Dict[int, int]:
         return {n: len(c) for n, c in self._c.items()}
@@ -63,4 +92,6 @@ class NodeCache:
         nc = NodeCache(self.n_nodes, self.capacity)
         for n, c in self._c.items():
             nc._c[n] = OrderedDict(c)
+            nc._bytes[n] = self._bytes[n]
+        nc._pins = dict(self._pins)
         return nc

@@ -31,7 +31,7 @@ from .fusion import (FusionReport, leaves_in_order_many, optimize_many,
 from .graph import TaskGraph, TaskKind
 from .heft import DirectCost, Schedule, heft_schedule
 from .lazy import ClusteredMatrix, Op, topo_order, topo_order_many
-from .machine import ClusterSpec, c5_9xlarge
+from .machine import ClusterSpec, MemoryBudgetExceeded, c5_9xlarge
 from .simulator import SimResult, simulate
 from .tiling import (TiledProgram, normalize_tile, tile_expression,
                      tile_expression_many)
@@ -65,6 +65,14 @@ class Plan:
     #: lazy churn-priced predictor for the elastic strategy (cluster
     #: prediction + expected recovery cost under ``tm.node_mtbf``)
     _elastic_pred: Optional[Callable[[], float]] = None
+    #: predicted peak arena bytes per node (admission check; None when no
+    #: node carries a ``mem_bytes`` budget)
+    peak_bytes: Optional[Dict[int, int]] = None
+    #: predicted bytes that must round-trip the spill tier to run this
+    #: plan within budget (0 = fits in RAM)
+    spill_bytes: int = 0
+    #: those bytes priced through the TimeModel's spill bandwidths
+    spill_seconds: float = 0.0
 
     @property
     def cluster_makespan(self) -> Optional[float]:
@@ -172,6 +180,9 @@ class CMMEngine:
         self._plans: Dict[tuple, Plan] = {}
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
+        #: how many times admission re-planned a too-big plan out-of-core
+        #: at a smaller tile
+        self.plan_shrinks = 0
 
     @classmethod
     def default(cls) -> "CMMEngine":
@@ -224,6 +235,7 @@ class CMMEngine:
         """
         t0 = time.perf_counter()
         roots = list(roots)
+        orig_roots = roots  # pre-optimization view, for admission re-plans
         tile = normalize_tile(tile or self.tile or self._default_tile(roots))
         fuse = self.fuse if fuse is None else fuse
         fast = self.fast_planning if fast is None else fast
@@ -260,7 +272,10 @@ class CMMEngine:
                             fusion=report, cache_hit=True, waves=hit.waves,
                             batched_makespan=hit.batched_makespan,
                             _cluster_pred=hit._cluster_pred,
-                            _elastic_pred=hit._elastic_pred)
+                            _elastic_pred=hit._elastic_pred,
+                            peak_bytes=hit.peak_bytes,
+                            spill_bytes=hit.spill_bytes,
+                            spill_seconds=hit.spill_seconds)
             self.plan_cache_misses += 1
 
         prog = tile_expression_many(roots, tile, persist_idx)
@@ -292,6 +307,46 @@ class CMMEngine:
                     spec=self.spec, fusion=report, waves=waves,
                     batched_makespan=batched, _cluster_pred=cluster_pred,
                     _elastic_pred=elastic_pred)
+
+        # -- admission: price the plan's peak footprint against mem_bytes.
+        # A plan that overflows a node's budget but whose minimum working
+        # set fits is ACCEPTED as spill-executable (the arena runs it
+        # out-of-core bit-identically, at the annotated spill price); a
+        # plan whose floor overflows is re-planned at a smaller tile, or
+        # rejected with a structured MemoryBudgetExceeded — never an OOM.
+        budgets = {n: self.spec.mem_at(n) for n in self.spec.alive_nodes()
+                   if self.spec.mem_at(n) is not None}
+        if budgets:
+            from .heft import min_resident_floor, peak_node_bytes
+            from .simulator import predict_spill_seconds
+            peaks = peak_node_bytes(prog.graph, sched)
+            spill_excess = 0
+            for n, b in sorted(budgets.items()):
+                p = peaks.get(n, 0)
+                if p <= b:
+                    continue
+                floor = min_resident_floor(prog.graph, sched, n)
+                if floor > b:
+                    # spilling cannot help: one task's working set (or the
+                    # retained baseline) alone overflows.  Resident-leaf
+                    # programs are tile-locked to their handles, so only
+                    # fresh-leaf programs can shrink.
+                    has_resident = any(t.kind is TaskKind.RESIDENT
+                                       for t in prog.graph.tasks.values())
+                    if tile > (1, 1) and not has_resident:
+                        self.plan_shrinks += 1
+                        return self.plan_many(
+                            orig_roots,
+                            tile=(max(1, tile[0] // 2),
+                                  max(1, tile[1] // 2)),
+                            fuse=fuse, fast=fast, persist=persist_idx)
+                    raise MemoryBudgetExceeded(n, floor, b)
+                spill_excess += p - b
+            sim.peak_bytes.update(peaks)
+            plan.peak_bytes = peaks
+            plan.spill_bytes = spill_excess
+            plan.spill_seconds = predict_spill_seconds(spill_excess,
+                                                       self.timemodel)
         if key is not None:
             if len(self._plans) >= 128:      # bound cache growth (FIFO)
                 self._plans.pop(next(iter(self._plans)))
@@ -318,7 +373,10 @@ class CMMEngine:
                     spec=plan.spec, waves=plan.waves,
                     batched_makespan=plan.batched_makespan,
                     _cluster_pred=plan._cluster_pred,
-                    _elastic_pred=plan._elastic_pred)
+                    _elastic_pred=plan._elastic_pred,
+                    peak_bytes=plan.peak_bytes,
+                    spill_bytes=plan.spill_bytes,
+                    spill_seconds=plan.spill_seconds)
 
     def _default_tile(self, roots: Sequence[ClusteredMatrix]) -> int:
         # paper finding: tile ~ n/2 is best for n=10k on 8 nodes (§3.3);

@@ -655,3 +655,110 @@ def register_fill_origin(mapping: Mapping[int, str]):
     """
     _FILL_ORIGIN.clear()
     _FILL_ORIGIN.update(mapping)
+
+
+# -- static memory-residency analysis (bounded-arena admission) -------------
+#
+# These post-passes price a schedule's *footprint* without touching EFT
+# placement (heft_schedule/replan_frontier stay byte-for-byte identical):
+# the engine's admission check compares them against ClusterSpec.mem_at to
+# decide fits-in-RAM / spill-executable / reject before any worker can OOM.
+
+def _retained_keys(g: TaskGraph,
+                   sched: Schedule) -> Set[Tuple[int, "TileRef"]]:
+    """(node, ref) pairs that occupy *unevictable* arena bytes: RESIDENT
+    session tiles and persisted (non-gather) outputs, which live in the
+    retained store and are exempt from spill eviction."""
+    keys: Set[Tuple[int, "TileRef"]] = set()
+    for tid, t in g.tasks.items():
+        p = sched.placements.get(tid)
+        if p is not None and t.kind is TaskKind.RESIDENT and t.out is not None:
+            keys.add((p.node, t.out))
+    for rs in getattr(g, "result_sets", ()) or ():
+        if getattr(rs, "gather", True):
+            continue
+        for r, tid in rs.producers.items():
+            p = sched.placements.get(tid)
+            if p is not None:
+                keys.add((p.node, r))
+    return keys
+
+
+def _held_keys(g: TaskGraph, sched: Schedule) -> Set[Tuple[int, "TileRef"]]:
+    """(node, ref) pairs held until end of run: the retained set plus
+    gathered result tiles (TAKECOPY outputs awaiting master assembly —
+    held, but spillable)."""
+    keys = _retained_keys(g, sched)
+    for tid, t in g.tasks.items():
+        p = sched.placements.get(tid)
+        if p is not None and t.kind is TaskKind.TAKECOPY and t.out is not None:
+            keys.add((p.node, t.out))
+    return keys
+
+
+def peak_node_bytes(g: TaskGraph, sched: Schedule) -> Dict[int, int]:
+    """Predicted peak arena bytes per node for running ``sched``.
+
+    Walks the schedule in start order: a task's output allocates at its
+    node, a cross-node input allocates its XFER copy at the consumer, and
+    a (node, ref) frees after its last scheduled use — except refs held to
+    the end of the run (gathered/persisted results, resident tiles).  This
+    mirrors the executors' refcount freeing closely enough for admission;
+    it is an upper-bound-flavoured estimate, not a simulation.
+    """
+    node_of = {tid: p.node for tid, p in sched.placements.items()}
+    order = [tid for tid in sched.order if tid in node_of]
+    held = _held_keys(g, sched)
+    last: Dict[Tuple[int, "TileRef"], int] = {}
+    for k, tid in enumerate(order):
+        t = g.tasks[tid]
+        n = node_of[tid]
+        for r in t.ins:
+            last[(n, r)] = k
+        if t.out is not None:
+            last[(n, t.out)] = k
+    release_at: Dict[int, List[Tuple[int, "TileRef"]]] = {}
+    for key, k in last.items():
+        if key not in held:
+            release_at.setdefault(k, []).append(key)
+    cur: Dict[int, int] = {}
+    peak: Dict[int, int] = {}
+    live: Set[Tuple[int, "TileRef"]] = set()
+    for k, tid in enumerate(order):
+        t = g.tasks[tid]
+        n = node_of[tid]
+        for r in t.ins:
+            if (n, r) not in live:
+                live.add((n, r))
+                cur[n] = cur.get(n, 0) + r.bytes
+        if t.out is not None and (n, t.out) not in live:
+            live.add((n, t.out))
+            cur[n] = cur.get(n, 0) + t.out.bytes
+        if cur.get(n, 0) > peak.get(n, 0):
+            peak[n] = cur[n]
+        for key in release_at.get(k, ()):
+            if key in live:
+                live.discard(key)
+                cur[key[0]] -= key[1].bytes
+    return peak
+
+
+def min_resident_floor(g: TaskGraph, sched: Schedule, node: int) -> int:
+    """The smallest arena ``node`` could possibly run ``sched`` with:
+    its unevictable retained bytes plus the largest single-task working
+    set (a task's deduplicated inputs + output must be hot at once).  A
+    budget below this cannot be met by spilling — the plan must shrink
+    its tile or be rejected."""
+    base = sum(r.bytes for (n, r) in _retained_keys(g, sched) if n == node)
+    worst = 0
+    for tid, p in sched.placements.items():
+        if p.node != node:
+            continue
+        t = g.tasks[tid]
+        refs = set(t.ins)
+        if t.out is not None:
+            refs.add(t.out)
+        s = sum(r.bytes for r in refs)
+        if s > worst:
+            worst = s
+    return base + worst

@@ -11,6 +11,25 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, Optional, Sequence, Tuple
 
 
+class MemoryBudgetExceeded(RuntimeError):
+    """A plan's (or a running node's) memory footprint cannot fit the
+    cluster's per-node ``mem_bytes`` budget even out-of-core: the minimum
+    resident working set — one task's operands plus the node's retained
+    session tiles — exceeds the budget, so no amount of spilling helps.
+    Raised by the engine's admission check (instead of planning a run that
+    would OOM) and by the executors when a worker arena overflows with
+    nothing left to evict.  Carries the offending node and bytes."""
+
+    def __init__(self, node: int, needed_bytes: int = 0,
+                 budget_bytes: int = 0, msg: str = ""):
+        self.node = int(node)
+        self.needed_bytes = int(needed_bytes)
+        self.budget_bytes = int(budget_bytes)
+        super().__init__(msg or (
+            f"node {self.node} needs {self.needed_bytes} resident bytes "
+            f"but its memory budget is {self.budget_bytes} bytes"))
+
+
 @dataclass(frozen=True)
 class ClusterSpec:
     n_nodes: int = 1
@@ -34,6 +53,15 @@ class ClusterSpec:
     #: per-node worker-process overrides (heterogeneous clusters: unequal
     #: slot counts per node).  Empty -> every node gets ``worker_procs``.
     node_workers: Tuple[int, ...] = ()
+    #: per-node arena memory budget in bytes.  ``None`` -> unbounded (the
+    #: pre-out-of-core behaviour).  When set, worker arenas spill cold
+    #: unpinned tiles to disk rather than exceeding it, and the engine's
+    #: admission check prices or rejects plans against it.
+    mem_bytes: Optional[float] = None
+    #: per-node overrides of ``mem_bytes`` (elastic ``with_mem`` deltas,
+    #: mid-run ``mem_squeeze`` chaos).  Entries < 0 fall back to
+    #: ``mem_bytes``; nodes beyond the tuple's length fall back too.
+    node_mem: Tuple[float, ...] = ()
 
     def comm_procs(self, node: int) -> int:
         return self.comm_procs_master if node == self.master \
@@ -68,6 +96,28 @@ class ClusterSpec:
         if self.slowdown and node < len(self.slowdown):
             return self.slowdown[node]
         return 1.0
+
+    def mem_at(self, node: int) -> Optional[int]:
+        """Arena byte budget of ``node``; ``None`` means unbounded."""
+        if self.node_mem and node < len(self.node_mem):
+            v = self.node_mem[node]
+            if v >= 0:
+                return int(v)
+        return None if self.mem_bytes is None else int(self.mem_bytes)
+
+    def with_mem(self, node: int, nbytes: Optional[float]) -> "ClusterSpec":
+        """The spec with ``node``'s memory budget replaced — how the
+        elastic runtime records a mid-run ``mem_squeeze`` so subsequent
+        plans are admitted against the shrunk budget.  ``None`` lifts
+        the per-node override (falling back to ``mem_bytes``)."""
+        if not 0 <= node < self.n_nodes:
+            raise ValueError(f"no node {node} in a {self.n_nodes}-node spec")
+        nm = []
+        for n in range(self.n_nodes):
+            cur = self.mem_at(n)
+            nm.append(-1.0 if cur is None else float(cur))
+        nm[node] = -1.0 if nbytes is None else float(nbytes)
+        return replace(self, node_mem=tuple(nm))
 
     def comm_time(self, nbytes: int, a: int, b: int) -> float:
         if a == b:

@@ -345,14 +345,21 @@ class CMMSession:
         audit: Dict[str, object] = {"handles_leaked": len(self._handles),
                                     "local_tiles_leaked": len(self._tiles)}
         if hasattr(self._exec, "close_session"):
-            audit["arena"] = self._exec.close_session()
+            arena_audit = self._exec.close_session()
+            # the executor's spill-file sweep rides along under a string
+            # key; split it out so arena stays strictly per-node
+            audit["spill"] = arena_audit.pop("spill",
+                                             {"leaked_spill_files": 0})
+            audit["arena"] = arena_audit
         self._closed = True
         self.stats["audit"] = audit
         leaked = audit["local_tiles_leaked"] or audit["handles_leaked"]
         arena = audit.get("arena") or {}
         for node, st in arena.items():
             leaked = leaked or st.get("live_buffers", 0) \
-                or st.get("retained", 0)
+                or st.get("retained", 0) or st.get("spill_files", 0)
+        spill = audit.get("spill") or {}
+        leaked = leaked or spill.get("leaked_spill_files", 0)
         if leaked:
             raise RuntimeError(f"session arena audit failed: {audit}")
         return audit

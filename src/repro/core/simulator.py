@@ -59,6 +59,10 @@ class SimResult:
     cache_hits: int
     cache_misses: int
     spec: ClusterSpec
+    #: predicted peak arena bytes per node (``heft.peak_node_bytes``);
+    #: filled in by the engine's admission check when any node carries a
+    #: ``mem_bytes`` budget, empty otherwise
+    peak_bytes: Dict[int, int] = field(default_factory=dict)
 
     def stats_by_kind(self) -> Dict[str, Tuple[int, float]]:
         acc: Dict[str, List[float]] = defaultdict(list)
@@ -289,6 +293,17 @@ def predict_reload_seconds(nbytes: int, tm: TimeModel) -> float:
     choice (the recompute leg is ``CMMEngine.predict_recompute_seconds``,
     simulated with the same TimeModel)."""
     return float(nbytes) / max(tm.spill_read_bandwidth, 1.0)
+
+
+def predict_spill_seconds(excess_bytes: int, tm: TimeModel) -> float:
+    """Wall-clock cost of running a plan out-of-core: every byte above
+    the arena budget is written to the spill tier once and faulted back
+    at least once, priced at the TimeModel's spill bandwidths.  Used by
+    the engine's admission check to annotate spill-executable plans so
+    degradation is chosen with its price known, not suffered."""
+    b = float(max(0, excess_bytes))
+    return (b / max(tm.spill_write_bandwidth, 1.0)
+            + b / max(tm.spill_read_bandwidth, 1.0))
 
 
 def predict_checkpoint_overhead(nbytes: int, tm: TimeModel) -> float:

@@ -135,6 +135,11 @@ class TimeModel:
     #: restore path (``simulator.predict_reload_seconds``) against
     #: lineage recompute
     spill_read_bandwidth: float = 1e9
+    #: sequential disk write bandwidth for evicting tiles from a bounded
+    #: arena to the spill tier, bytes/s — prices out-of-core execution
+    #: (``simulator.predict_spill_seconds``) so the engine's admission
+    #: check can *choose* spilling over rejection
+    spill_write_bandwidth: float = 1e9
     #: fixed steady-state cost one asynchronous tile snapshot adds to the
     #: session path, seconds (the writer handoff — the host-side copy is
     #: priced separately at ``spill_read_bandwidth`` and the disk write
@@ -205,6 +210,7 @@ class TimeModel:
             "node_mtbf": self.node_mtbf,
             "respawn_overhead": self.respawn_overhead,
             "spill_read_bandwidth": self.spill_read_bandwidth,
+            "spill_write_bandwidth": self.spill_write_bandwidth,
             "checkpoint_write_overhead": self.checkpoint_write_overhead,
             "models": {k: {"family": m.family, "coef": m.coef.tolist()}
                        for k, m in self.models.items()},
@@ -226,6 +232,7 @@ class TimeModel:
             node_mtbf=d.get("node_mtbf", float("inf")),
             respawn_overhead=d.get("respawn_overhead", 0.5),
             spill_read_bandwidth=d.get("spill_read_bandwidth", 1e9),
+            spill_write_bandwidth=d.get("spill_write_bandwidth", 1e9),
             checkpoint_write_overhead=d.get("checkpoint_write_overhead",
                                             1e-3),
         )

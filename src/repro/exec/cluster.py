@@ -48,6 +48,7 @@ from __future__ import annotations
 import itertools
 import os
 import queue as _queue
+import shutil
 import threading
 import time
 import traceback
@@ -63,9 +64,18 @@ from ..core.fusion import eval_fused
 from ..core.graph import TaskGraph, TaskKind, TileRef, matmul_flags
 from ..core.heft import Schedule, edge_bytes
 from ..core.lazy import EWISE_FNS, Op, apply_scale, leaf_slice
-from ..core.machine import ClusterSpec
+from ..core.machine import ClusterSpec, MemoryBudgetExceeded
 from ..core.timemodel import TimeModel
+
 from ..core.tiling import assemble, tile_slices
+from ..runtime.spill import (AllocFailInjected, ArenaOverflow, SpillCorrupt,
+                             SpillDataLost, SpillMiss, TileSpillStore,
+                             run_spill_dir)
+
+#: chain-of-custody CRC audit (debug aid): when set, workers stamp a
+#: CRC32 on every tile custody transfer (task done, spill, unspill, XFER)
+#: and the master cross-checks each hop, printing the first corrupt stage
+_CRCAUDIT = bool(os.environ.get("CMM_CRCAUDIT"))
 
 #: task kinds that accumulate into their output tile in place (the chain
 #: holds the buffer alive without listing it in ``ins`` — same bookkeeping
@@ -95,12 +105,14 @@ def _attach_shm(name: str):
 
 
 def _release_seg(seg, unlink: bool = True) -> None:
-    """Close (+unlink) tolerating live views: a reader thread that grabbed
-    the ndarray before a rebind keeps the mapping alive until it drops the
-    reference; unlinking just removes the name."""
+    """Close (+unlink) a segment.  ``close()`` unmaps the memory even when
+    ndarray views over ``seg.buf`` are still alive — a subsequent read
+    through such a view hits unmapped (or, worse, remapped-to-another-
+    segment) pages.  Callers must guarantee no live reader exists (the
+    arena's pin protocol) or defer the close via ``_NodeArena._limbo``."""
     try:
         seg.close()
-    except BufferError:
+    except BufferError:                 # pragma: no cover
         pass
     if unlink:
         try:
@@ -123,32 +135,128 @@ class _NodeArena:
       binding, never the underlying retained segment.
     """
 
-    def __init__(self, prefix: str, node: int):
-        self._lock = threading.Lock()
+    def __init__(self, prefix: str, node: int,
+                 mem_bytes: Optional[int] = None,
+                 spill_dir: Optional[str] = None,
+                 on_spill=None, on_unspill=None):
+        # reentrant: budgeted allocation (_new_seg -> _ensure -> _evict)
+        # happens both outside and inside lock-holding paths (retain)
+        self._lock = threading.RLock()
         self._segs: Dict[TileRef, object] = {}
+        #: ref -> ndarray in LRU order (oldest first); touched by get/adopt
         self._arrs: Dict[TileRef, np.ndarray] = {}
         #: session-retained segments: (hid, i, j) -> (seg, arr)
         self._retained: Dict[Tuple[int, int, int], Tuple[object, object]] = {}
         #: refs whose binding aliases a retained segment (not owned)
         self._alias: set = set()
+        #: in-flight pin refcounts: a pinned ref is never evicted (task
+        #: inputs/outputs for the duration of the task, XFER destinations)
+        self._pinned: Dict[TileRef, int] = {}
+        #: frees that arrived while the ref was pinned — honoured at the
+        #: last unpin.  Releasing a segment unmaps it even under live
+        #: ndarray views (close() invalidates them), so freeing a pinned
+        #: ref would hand its in-flight reader unmapped (or worse,
+        #: remapped-to-another-tile) pages.
+        self._free_pending: set = set()
+        #: superseded segments whose name is already unlinked but whose
+        #: mapping may still back a pinned reader's view; closed when the
+        #: arena is quiescent (no pins)
+        self._limbo: list = []
         self._count = itertools.count()
         self._prefix = f"{prefix}n{node}"
+        #: byte budget for cur + retained; None = unbounded (legacy mode)
+        self.budget = None if mem_bytes is None else int(mem_bytes)
+        self._spill_dir = spill_dir
+        self._spill: Optional[TileSpillStore] = None
+        self._on_spill = on_spill
+        self._on_unspill = on_unspill
+        #: chaos: fail the Nth fresh allocation (-1 = disarmed)
+        self._alloc_fail_after = -1
         self.cur = 0
         self.peak = 0
         self.freed = 0
         self.allocs = 0
         self.retained_bytes = 0
+        self.evictions = 0
+        self.faults = 0
+
+    def _store(self) -> TileSpillStore:
+        if self._spill is None:
+            d = self._spill_dir or run_spill_dir(self._prefix)
+            self._spill = TileSpillStore(d, self._prefix)
+        return self._spill
+
+    def _evictable(self) -> Optional[TileRef]:
+        """Coldest unpinned non-alias ref, or None (LRU = dict order)."""
+        for ref in self._arrs:
+            if ref in self._alias or self._pinned.get(ref):
+                continue
+            return ref
+        return None
+
+    def _evict(self, ref: TileRef) -> None:
+        """Move ``ref``'s tile to the spill tier (lock held).  The spill
+        write completes before the segment is released, and existing
+        mappings (a reader that already ``get``-ed the array) stay valid
+        until dropped — eviction changes where bytes live, never values."""
+        seg = self._segs.pop(ref)
+        arr = self._arrs.pop(ref)
+        crc = (zlib.crc32(np.ascontiguousarray(arr).data) & 0xFFFFFFFF
+               if _CRCAUDIT else None)
+        self._store().spill(ref, arr)
+        self.cur -= seg.size
+        self.evictions += 1
+        del arr
+        _release_seg(seg)
+        if self._on_spill is not None:
+            self._on_spill(ref, crc)
+
+    def _ensure(self, nbytes: int, strict: bool = True) -> None:
+        """Evict cold tiles until ``nbytes`` more fit the budget (lock
+        held).  ``strict`` raises ArenaOverflow when nothing evictable
+        remains; non-strict (mid-run squeeze) evicts best-effort."""
+        if self.budget is None:
+            return
+        while self.cur + self.retained_bytes + nbytes > self.budget:
+            victim = self._evictable()
+            if victim is None:
+                if strict:
+                    raise ArenaOverflow(
+                        f"arena {self._prefix}: need {nbytes} bytes but "
+                        f"{self.cur} allocated + {self.retained_bytes} "
+                        f"retained of budget {self.budget} are pinned or "
+                        f"retained — nothing left to evict")
+                return
+            self._evict(victim)
+
+    def _maybe_inject_alloc_fail(self) -> None:
+        with self._lock:
+            if self._alloc_fail_after > 0:
+                self._alloc_fail_after -= 1
+                if self._alloc_fail_after == 0:
+                    self._alloc_fail_after = -1
+                    raise AllocFailInjected(
+                        f"arena {self._prefix}: chaos-injected allocation "
+                        f"failure")
 
     def _new_seg(self, nbytes: int):
         from multiprocessing import shared_memory
-        with _TRACK_LOCK:
-            return shared_memory.SharedMemory(
-                create=True, size=max(int(nbytes), 1),
-                name=f"{self._prefix}_{next(self._count)}")
+        with self._lock:
+            self._ensure(int(nbytes))
+            with _TRACK_LOCK:
+                seg = shared_memory.SharedMemory(
+                    create=True, size=max(int(nbytes), 1),
+                    name=f"{self._prefix}_{next(self._count)}")
+            # pre-charge so concurrent allocations see the reservation
+            # before the (lock-free) copy completes and _adopt binds it
+            self.cur += seg.size
+            self.peak = max(self.peak, self.cur)
+            return seg
 
     def alloc(self, ref: TileRef, shape, dtype) -> np.ndarray:
         """A fresh zeroed buffer for ``ref`` (CALLOC — shm is zero-filled
         by the OS, matching ``np.zeros``)."""
+        self._maybe_inject_alloc_fail()
         dtype = np.dtype(dtype)
         n = int(np.prod(shape)) * dtype.itemsize
         seg = self._new_seg(n)
@@ -159,6 +267,7 @@ class _NodeArena:
 
     def store(self, ref: TileRef, value: np.ndarray) -> np.ndarray:
         """Copy ``value`` into a new segment bound to ``ref``."""
+        self._maybe_inject_alloc_fail()
         value = np.asarray(value)
         seg = self._new_seg(value.nbytes)
         arr = np.ndarray(value.shape, dtype=value.dtype, buffer=seg.buf)
@@ -168,35 +277,132 @@ class _NodeArena:
 
     def _adopt(self, ref: TileRef, seg, arr: np.ndarray) -> None:
         with self._lock:
-            # replace in place — ``get`` is lock-free, so the key must
-            # never be absent during a rebind (a reader racing a
-            # duplicate-producer rebind sees the old or new buffer, both
-            # holding the same tile value)
+            # replace in place — the unbounded ``get`` fast path is
+            # lock-free, so the key must never be absent during a rebind
+            # (a reader racing a duplicate-producer rebind sees the old or
+            # new buffer, both holding the same tile value)
             old = self._segs.get(ref)
             was_alias = ref in self._alias
             self._alias.discard(ref)
             self._segs[ref] = seg
+            self._arrs.pop(ref, None)       # rebind lands at the LRU tail
             self._arrs[ref] = arr
+            if self._spill is not None:
+                # a spilled older version is superseded by this rebind
+                self._spill.drop(ref)
             if old is not None and not was_alias:
                 # rebind over a superseded version: release the old
                 # allocation's bytes (the exec/local.py drift fix).
                 # An alias binding owned neither bytes nor the segment.
                 self.cur -= old.size
                 self.freed += 1
-                _release_seg(old)
+                if self._pinned.get(ref):
+                    # a pinned reader may still map the superseded
+                    # segment: unlink the name now, close only once the
+                    # arena is quiescent (close unmaps under live views)
+                    try:
+                        old.unlink()
+                    except FileNotFoundError:   # pragma: no cover
+                        pass
+                    self._limbo.append(old)
+                else:
+                    _release_seg(old)
             self.allocs += 1
-            self.cur += seg.size
-            self.peak = max(self.peak, self.cur)
+            # bytes were pre-charged by _new_seg
+
+    def _fault_in(self, ref: TileRef) -> np.ndarray:
+        """Reload a spilled tile into a fresh segment (lock held).  A
+        missing or corrupt spill file surfaces as SpillDataLost carrying
+        the ref, so the master can degrade to lineage recompute.  The
+        disk entry is dropped only after the hot binding exists — if
+        ``_new_seg`` overflows, the sole copy stays on disk for the
+        retry."""
+        try:
+            data = self._store().fault_in(ref, keep=True)
+        except (SpillMiss, SpillCorrupt) as e:
+            self._store().drop(ref)
+            raise SpillDataLost(ref, str(e))
+        seg = self._new_seg(data.nbytes)    # may evict other cold tiles
+        arr = np.ndarray(data.shape, dtype=data.dtype, buffer=seg.buf)
+        arr[...] = data
+        self._segs[ref] = seg
+        self._arrs[ref] = arr
+        self._store().drop(ref)
+        self.allocs += 1
+        self.faults += 1
+        if self._on_unspill is not None:
+            crc = (zlib.crc32(arr.data) & 0xFFFFFFFF
+                   if _CRCAUDIT else None)
+            self._on_unspill(ref, seg.name, arr.dtype.str, crc)
+        return arr
 
     def get(self, ref: TileRef) -> np.ndarray:
-        return self._arrs[ref]
+        if self.budget is None:
+            return self._arrs[ref]          # unbounded: lock-free fast path
+        with self._lock:
+            arr = self._arrs.get(ref)
+            if arr is not None:
+                self._arrs[ref] = self._arrs.pop(ref)      # LRU touch
+                return arr
+            if self._spill is not None and ref in self._spill:
+                return self._fault_in(ref)
+            raise KeyError(ref)
+
+    def pin_all(self, refs) -> None:
+        """Exempt ``refs`` from eviction while a task/XFER uses them."""
+        with self._lock:
+            for r in refs:
+                self._pinned[r] = self._pinned.get(r, 0) + 1
+
+    def unpin_all(self, refs) -> None:
+        with self._lock:
+            for r in refs:
+                n = self._pinned.get(r, 0) - 1
+                if n <= 0:
+                    self._pinned.pop(r, None)
+                    if r in self._free_pending:
+                        # the master freed this ref mid-flight; honour it
+                        # now that no reader maps its buffer (reentrant)
+                        self._free_pending.discard(r)
+                        self.free(r)
+                else:
+                    self._pinned[r] = n
+            if not self._pinned and self._limbo:
+                for seg in self._limbo:
+                    _release_seg(seg, unlink=False)
+                self._limbo.clear()
+
+    def set_budget(self, nbytes: Optional[int]) -> None:
+        """Shrink (or lift) the byte budget mid-run (``mem_squeeze``
+        chaos / elastic re-admission); evicts down best-effort."""
+        with self._lock:
+            self.budget = None if nbytes is None else int(nbytes)
+            self._ensure(0, strict=False)
+
+    def arm_alloc_fail(self, nth: int) -> None:
+        with self._lock:
+            self._alloc_fail_after = max(1, int(nth))
 
     def seg_of(self, ref: TileRef) -> Tuple[str, str]:
         with self._lock:
+            if ref not in self._segs and self._spill is not None \
+                    and ref in self._spill:
+                self._fault_in(ref)
             return self._segs[ref].name, self._arrs[ref].dtype.str
 
     def free(self, ref: TileRef) -> None:
         with self._lock:
+            if self._pinned.get(ref):
+                # an in-flight task/XFER still reads this buffer: defer
+                # the release to its last unpin (see _free_pending)
+                self._free_pending.add(ref)
+                return
+            self._free_pending.discard(ref)
+            if self._spill is not None and ref in self._spill:
+                # freeing a spilled ref: drop the cold copy
+                self._spill.drop(ref)
+                self.freed += 1
+                return
             seg = self._segs.pop(ref, None)
             self._arrs.pop(ref, None)
             if ref in self._alias:
@@ -216,6 +422,9 @@ class _NodeArena:
         folded to a resident leaf) is deep-copied so every retained key
         owns its segment exclusively."""
         with self._lock:
+            if ref not in self._segs and self._spill is not None \
+                    and ref in self._spill:
+                self._fault_in(ref)     # retained tiles live in the hot tier
             seg = self._segs.pop(ref, None)
             arr = self._arrs.pop(ref, None)
             if seg is None:
@@ -226,8 +435,7 @@ class _NodeArena:
                 seg = self._new_seg(src.nbytes)
                 arr = np.ndarray(src.shape, dtype=src.dtype, buffer=seg.buf)
                 arr[...] = src
-            else:
-                self.cur -= seg.size
+            self.cur -= seg.size        # moves to the retained accounting
             old = self._retained.get(key)
             if old is not None:         # re-retention under the same key
                 self.retained_bytes -= old[0].size
@@ -259,15 +467,31 @@ class _NodeArena:
                 self.retained_bytes -= ent[0].size
                 _release_seg(ent[0])
 
+    def retained_seg(self, key: Tuple[int, int, int]) -> Tuple[str, str]:
+        """Authoritative (segment name, dtype) of a retained tile — the
+        retain-ack payload (a retain may have faulted the tile in first,
+        renaming its segment, so the master must not trust a stale name)."""
+        with self._lock:
+            seg, arr = self._retained[key]
+            return seg.name, arr.dtype.str
+
     def stats(self) -> Dict[str, int]:
         with self._lock:
+            sp = self._spill
             return {"peak_buffer_bytes": self.peak,
                     "cur_buffer_bytes": self.cur,
                     "buffers_freed": self.freed,
                     "buffers_alloc": self.allocs,
                     "live_buffers": len(self._segs),
                     "retained": len(self._retained),
-                    "retained_bytes": self.retained_bytes}
+                    "retained_bytes": self.retained_bytes,
+                    "mem_budget": 0 if self.budget is None else self.budget,
+                    "evictions": self.evictions,
+                    "faults": self.faults,
+                    "spill_writes": 0 if sp is None else sp.writes,
+                    "spill_reads": 0 if sp is None else sp.reads,
+                    "spill_files": 0 if sp is None else sp.live_files,
+                    "spilled_bytes": 0 if sp is None else sp.live_bytes}
 
     def destroy(self) -> None:
         with self._lock:
@@ -277,9 +501,16 @@ class _NodeArena:
             self._segs.clear()
             self._arrs.clear()
             self._alias.clear()
+            self._pinned.clear()
+            self._free_pending.clear()
+            for seg in self._limbo:
+                _release_seg(seg, unlink=False)
+            self._limbo.clear()
             for (seg, _arr) in self._retained.values():
                 _release_seg(seg)
             self._retained.clear()
+            if self._spill is not None:
+                self._spill.destroy()
 
 
 def _execute_task(t, arena: _NodeArena, leaf_nodes, dtypes,
@@ -340,7 +571,9 @@ def _execute_task(t, arena: _NodeArena, leaf_nodes, dtypes,
 def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                  dtypes, nthreads: int, prefix: str,
                  hb_interval: float = 0.0,
-                 blas_threads: Optional[int] = None) -> None:
+                 blas_threads: Optional[int] = None,
+                 mem_bytes: Optional[int] = None,
+                 spill_dir: Optional[str] = None) -> None:
     """One cluster node: a dispatch-queue loop feeding a thread pool of
     ``nthreads`` compute slots, with tiles in this node's shm arena.
     XFER copies run on the same pool, so they overlap in-flight compute.
@@ -362,6 +595,20 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
     context (graph, tile, leaves, dtypes, resident-leaf handle ids) per
     run via a ``("run", ...)`` op — the process and its arena (with the
     session's retained tiles) survive across runs.
+
+    ``mem_bytes`` bounds the arena (``ClusterSpec.mem_at``): on pressure
+    cold unpinned tiles spill to ``spill_dir`` and fault back in on read.
+    Every eviction posts ``("spill", node, ref)`` and every fault-in posts
+    ``("unspill", node, ref, segname, dtype)`` so the master's segment-name
+    maps track where tiles live; a lost spill file posts
+    ``("tile_lost", node, ref, tb)`` for lineage recompute.
+
+    A bounded arena also serves XFER/gather *leases*: ``("hold", ref)``
+    pins the tile (faulting it hot if cold) and acks ``("held", node,
+    ref, segname, dtype, crc)``; ``("release", ref)`` drops the pin.
+    Without the lease, a reader attaching the acked segment name races
+    eviction — under pressure the LRU can cycle the whole arena inside
+    the master→consumer round trip, so name-based retries livelock.
     """
     if blas_threads:
         try:
@@ -369,27 +616,56 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
             threadpoolctl.threadpool_limits(blas_threads)
         except ImportError:             # pragma: no cover
             pass
-    arena = _NodeArena(prefix, node)
+
+    def _on_spill(ref: TileRef, crc=None) -> None:
+        outq.put(("spill", node, ref, crc))
+
+    def _on_unspill(ref: TileRef, segname: str, dtype_str: str,
+                    crc=None) -> None:
+        outq.put(("unspill", node, ref, segname, dtype_str, crc))
+
+    arena = _NodeArena(prefix, node, mem_bytes=mem_bytes,
+                       spill_dir=spill_dir,
+                       on_spill=_on_spill, on_unspill=_on_unspill)
     pid = os.getpid()
     throttle = [0.0]
+    #: refs the master released this run — a ("fault", ref) op that pool-
+    #: schedules AFTER the inline ("free", ref) is obsolete, not a lost tile
+    freed_refs: set = set()
     ctx = {"g": g, "tile": tile, "leaf_nodes": leaf_nodes,
            "dtypes": dtypes, "resident_ids": {}}
 
     def run_task(tid: int) -> None:
+        t = ctx["g"].tasks[tid]
+        # pin the working set: in-flight inputs and the (possibly mutated
+        # in place) output must stay in the hot tier for the task's whole
+        # duration — eviction mid-mutation would spill a partial value
+        pins = list(t.ins) + ([t.out] if t.out is not None else [])
+        arena.pin_all(pins)
         try:
             t0 = time.perf_counter()
             if throttle[0] > 0.0:
                 time.sleep(throttle[0])
-            seg, dt = _execute_task(ctx["g"].tasks[tid], arena,
+            seg, dt = _execute_task(t, arena,
                                     ctx["leaf_nodes"], ctx["dtypes"],
                                     ctx["tile"], ctx["resident_ids"])
+            crc = None
+            if _CRCAUDIT and t.out is not None:
+                crc = zlib.crc32(arena.get(t.out).data) & 0xFFFFFFFF
             outq.put(("done", node, tid, seg, dt, pid,
-                      time.perf_counter() - t0))
-        except BaseException:
+                      time.perf_counter() - t0, crc))
+        except BaseException as e:
+            if isinstance(e, SpillDataLost):
+                # the master must drop this holding BEFORE retrying the
+                # task (per-worker FIFO guarantees the ordering)
+                outq.put(("tile_lost", node, e.ref, traceback.format_exc()))
             outq.put(("error", node, tid, traceback.format_exc()))
+        finally:
+            arena.unpin_all(pins)
 
     def run_xfer(version: int, ref: TileRef, src_name: str,
                  dtype_str: str) -> None:
+        arena.pin_all((ref,))
         try:
             remote = _attach_shm(src_name)
             try:
@@ -410,10 +686,37 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
             finally:
                 remote.close()
             seg, dt = arena.seg_of(ref)
-            outq.put(("xfer_done", node, version, ref, seg, dt))
+            outq.put(("xfer_done", node, version, ref, seg, dt,
+                      got if _CRCAUDIT else None))
         except BaseException:
             outq.put(("xfer_fail", node, version, ref,
                       traceback.format_exc()))
+        finally:
+            arena.unpin_all((ref,))
+
+    def run_fault(ref: TileRef) -> None:
+        """Master-requested fault-in of a spilled tile (it wants to XFER
+        from or gather this node).  Always acks with the current segment
+        name — the tile may have been faulted back in locally already."""
+        arena.pin_all((ref,))
+        try:
+            arr = arena.get(ref)
+            seg, dt = arena.seg_of(ref)
+            crc = (zlib.crc32(arr.data) & 0xFFFFFFFF
+                   if _CRCAUDIT else None)
+            outq.put(("unspill", node, ref, seg, dt, crc))
+        except KeyError:
+            if ref in freed_refs:
+                # the master freed this ref after requesting the fault
+                # (its last reader finished first); the request is stale
+                return
+            outq.put(("tile_lost", node, ref, traceback.format_exc()))
+        except SpillDataLost:
+            outq.put(("tile_lost", node, ref, traceback.format_exc()))
+        except BaseException:
+            outq.put(("error", node, -1, traceback.format_exc()))
+        finally:
+            arena.unpin_all((ref,))
 
     with ThreadPoolExecutor(max_workers=max(1, nthreads)) as pool:
         while True:
@@ -431,17 +734,61 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
             elif op == "xfer":
                 pool.submit(run_xfer, msg[1], msg[2], msg[3], msg[4])
             elif op == "free":
+                freed_refs.add(msg[1])
                 arena.free(msg[1])
+            elif op == "hold":
+                # lease this tile as an XFER/gather source: pin it so
+                # neither eviction nor a rebind can invalidate the acked
+                # segment name before the consumer attaches (under
+                # pressure the LRU can cycle the whole arena in the
+                # master->consumer round-trip window, livelocking the
+                # name-based retry).  The pin is released by "release"
+                # once the copy lands.
+                ref = msg[1]
+                arena.pin_all((ref,))
+                try:
+                    arr = arena.get(ref)    # faults the tile hot if cold
+                    seg, dt = arena.seg_of(ref)
+                    crc = (zlib.crc32(arr.data) & 0xFFFFFFFF
+                           if _CRCAUDIT else None)
+                    outq.put(("held", node, ref, seg, dt, crc))
+                except KeyError:
+                    arena.unpin_all((ref,))
+                    if ref not in freed_refs:
+                        outq.put(("tile_lost", node, ref,
+                                  traceback.format_exc()))
+                except SpillDataLost:
+                    arena.unpin_all((ref,))
+                    outq.put(("tile_lost", node, ref,
+                              traceback.format_exc()))
+                except ArenaOverflow:
+                    # transient: concurrent tasks' pins drain as they
+                    # finish — the master re-sends the hold (bounded)
+                    arena.unpin_all((ref,))
+                    outq.put(("hold_fail", node, ref))
+                except BaseException:
+                    arena.unpin_all((ref,))
+                    outq.put(("error", node, -1, traceback.format_exc()))
+            elif op == "release":
+                arena.unpin_all((msg[1],))
+            elif op == "fault":
+                # master needs a spilled tile hot (XFER source / gather)
+                pool.submit(run_fault, msg[1])
             elif op == "run":
                 # session mode: (re)bind this worker to a new run's
                 # graph/leaves — the arena (incl. retained tiles) persists
                 ctx["g"], ctx["tile"] = msg[1], msg[2]
                 ctx["leaf_nodes"], ctx["dtypes"] = msg[3], msg[4]
                 ctx["resident_ids"] = msg[5]
+                freed_refs.clear()      # ref names recur across runs
             elif op == "retain":
-                # move a persisted output tile into the session store
+                # move a persisted output tile into the session store;
+                # ack with the authoritative segment name (retain may
+                # fault the tile in, renaming its segment)
                 try:
                     arena.retain(msg[2], msg[1])
+                    sname, dt = arena.retained_seg(msg[2])
+                    outq.put(("retained", node, msg[2], sname, dt))
                 except BaseException:
                     outq.put(("error", node, -1, traceback.format_exc()))
             elif op == "drop":
@@ -450,6 +797,12 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                 outq.put(("audit", node, arena.stats()))
             elif op == "throttle":
                 throttle[0] = float(msg[1])
+            elif op == "squeeze":
+                # chaos mem_squeeze: shrink the budget mid-run
+                arena.set_budget(msg[1])
+            elif op == "alloc_fail":
+                # chaos: fail the Nth upcoming fresh allocation
+                arena.arm_alloc_fail(msg[1])
             elif op == "stop":
                 break
     stats = arena.stats()
@@ -569,6 +922,7 @@ class ClusterExecutor:
             outq = ctx.Queue()
             inqs = [ctx.Queue() for _ in range(spec.n_nodes)]
             procs = []
+            spill_dir = run_spill_dir(prefix)
             for n in range(spec.n_nodes):
                 nthreads = self.workers_per_node or spec.workers_at(n)
                 args = (n, inqs[n], outq, None, None, None, None,
@@ -576,6 +930,7 @@ class ClusterExecutor:
                     (n, inqs[n], outq, g, plan.tile,
                      plan.program.leaf_nodes, plan.program.dtypes,
                      nthreads, prefix)
+                args = args + (0.0, None, spec.mem_at(n), spill_dir)
                 p = ctx.Process(target=_node_worker, args=args, daemon=True)
                 p.start()
                 procs.append(p)
@@ -610,6 +965,9 @@ class ClusterExecutor:
                 return
             if c <= 1:
                 del reads[key]
+                spilled.discard(key)
+                fault_pending.discard(key)
+                parked_xfers.pop(key, None)
                 inqs[n].put(("free", r))
             else:
                 reads[key] = c - 1
@@ -642,104 +1000,290 @@ class ClusterExecutor:
 
         total = len(g)
         done = 0
+        phase = ["run"]
+        # -- spill-tier master state: where evicted tiles are, which
+        # fault-ins are outstanding, which XFERs wait on them
+        spilled: set = set()
+        fault_pending: set = set()
+        held_acks: set = set()
+        #: dispatched XFER attempts (version, dst) holding a source lease
+        leased_attempts: set = set()
+        parked_xfers: Dict[Tuple[int, TileRef],
+                           List[Tuple[int, int]]] = defaultdict(list)
+        xfer_retries: Dict[Tuple[int, int], int] = defaultdict(int)
+        hold_retries: Dict[Tuple[int, TileRef], int] = defaultdict(int)
+        task_ao_retries: Dict[int, int] = defaultdict(int)
+        pending_retain: Dict[Tuple[int, int, int],
+                             Tuple[int, TileRef]] = {}
+        node_stats: Dict[int, Dict[str, int]] = {}
+        node_audits: Dict[int, Dict[str, int]] = {}
+
+        def request_fault(n: int, ref: TileRef) -> None:
+            spilled.add((n, ref))
+            if (n, ref) not in fault_pending:
+                fault_pending.add((n, ref))
+                inqs[n].put(("fault", ref))
+
+        cur_crc: Dict[Tuple[int, TileRef], int] = {}
+
+        def crc_check(stage: str, n: int, ref: TileRef, crc) -> None:
+            if crc is None:
+                return
+            prev = cur_crc.get((n, ref))
+            if prev is not None and prev != crc:
+                import sys as _sys
+                line = (f"CRCAUDIT MISMATCH stage={stage} node={n} "
+                        f"ref={ref} prev={prev:#010x} now={crc:#010x}")
+                print(line, file=_sys.stderr, flush=True)
+            cur_crc[(n, ref)] = crc
+
+        def handle(msg) -> None:
+            nonlocal done
+            kind = msg[0]
+            if kind == "done":
+                _, n, tid, seg, dt, pid, _dur, *rest = msg
+                t = g.tasks[tid]
+                if seg is not None and t.out is not None:
+                    seg_info[(n, t.out)] = (seg, dt)
+                    if rest and rest[0] is not None:
+                        # a task legitimately (re)writes its out tile
+                        cur_crc[(n, t.out)] = rest[0]
+                exec_nodes[tid] = n
+                node_pids[n] = pid
+                done += 1
+                for (dst, nbytes) in xfer_by_producer.get(tid, ()):
+                    counters["xfers"] += 1
+                    counters["xfer_bytes"] += nbytes
+                    if spec.mem_at(n) is not None:
+                        # bounded source arena: dispatching the done
+                        # message's segment name directly races eviction
+                        # — lease the tile instead (pin on the source,
+                        # released at xfer_done)
+                        parked_xfers[(n, t.out)].append((tid, dst))
+                        inqs[n].put(("hold", t.out))
+                    else:
+                        sname, sdt = seg_info[(n, t.out)]
+                        inqs[dst].put(("xfer", tid, t.out, sname, sdt))
+                for s in sorted(t.succs):
+                    deps_left[s] -= 1
+                    maybe_dispatch(s)
+                for r in t.ins:
+                    dec_read(n, r)
+                if t.kind in _CHAIN_KINDS and t.out is not None:
+                    dec_read(n, t.out)
+            elif kind == "xfer_done":
+                _, n, version, ref, seg, dt, *rest = msg
+                seg_info[(n, ref)] = (seg, dt)
+                if (version, n) in leased_attempts:
+                    # the copy landed: release the source-side lease
+                    leased_attempts.discard((version, n))
+                    inqs[node_of[version]].put(("release", ref))
+                if rest and rest[0] is not None:
+                    src_crc = cur_crc.get((node_of[version], ref))
+                    if src_crc is not None and src_crc != rest[0]:
+                        import sys as _sys
+                        print(f"CRCAUDIT MISMATCH stage=xfer "
+                              f"src={node_of[version]} dst={n} ref={ref} "
+                              f"src_crc={src_crc:#010x} "
+                              f"dst_crc={rest[0]:#010x}",
+                              file=_sys.stderr, flush=True)
+                    cur_crc[(n, ref)] = rest[0]
+                dec_read(node_of[version], g.tasks[version].out)
+                for s in waiters.pop((version, n), ()):
+                    xfers_left[s] -= 1
+                    maybe_dispatch(s)
+            elif kind == "spill":
+                spilled.add((msg[1], msg[2]))
+                if len(msg) > 3:
+                    crc_check("spill", msg[1], msg[2], msg[3])
+            elif kind == "unspill":
+                _, n, ref, sname, dt, *rest = msg
+                if rest:
+                    crc_check("unspill", n, ref, rest[0])
+                seg_info[(n, ref)] = (sname, dt)
+                spilled.discard((n, ref))
+                fault_pending.discard((n, ref))
+            elif kind == "held":
+                # source-side lease granted: the segment name is pinned
+                # until the matching "release", so parked XFERs can
+                # attach it without racing eviction
+                _, n, ref, sname, dt, *rest = msg
+                if rest:
+                    crc_check("held", n, ref, rest[0])
+                seg_info[(n, ref)] = (sname, dt)
+                spilled.discard((n, ref))
+                fault_pending.discard((n, ref))
+                held_acks.add((n, ref))
+                hold_retries.pop((n, ref), None)
+                for (version, dstn) in parked_xfers.pop((n, ref), ()):
+                    leased_attempts.add((version, dstn))
+                    inqs[dstn].put(("xfer", version, ref, sname, dt))
+            elif kind == "hold_fail":
+                # transient source-side overflow faulting the tile hot:
+                # re-send the hold — each round trip is natural backoff
+                # while in-flight tasks drain their pins
+                _, n, ref = msg
+                hold_retries[(n, ref)] += 1
+                if hold_retries[(n, ref)] > 100:
+                    raise MemoryBudgetExceeded(
+                        n, 0, spec.mem_at(n) or 0,
+                        msg=f"node {n} could not fault {ref} hot for an "
+                            f"XFER/gather lease after "
+                            f"{hold_retries[(n, ref)]} attempts (arena "
+                            f"persistently full of pinned tiles)")
+                inqs[n].put(("hold", ref))
+            elif kind == "tile_lost":
+                # static membership has no lineage machinery to recompute
+                # a lost intermediate — structured failure, not an OOM
+                raise RuntimeError(
+                    f"spilled tile {msg[2]} lost on node {msg[1]} "
+                    f"(missing/corrupt spill file); the static cluster "
+                    f"executor cannot lineage-recompute — use the elastic "
+                    f"executor for graceful degradation:\n{msg[3]}")
+            elif kind == "retained":
+                _, n, key, sname, dt = msg
+                ent = pending_retain.pop(key, None)
+                if ent is not None:
+                    uid, r = ent
+                    residency.retain_seg(uid, r.i, r.j, n, sname, dt)
+            elif kind == "audit":
+                node_audits[msg[1]] = msg[2]
+            elif kind == "stats":
+                node_stats[msg[1]] = msg[2]
+                node_pids.setdefault(msg[1], msg[3])
+            elif kind == "error":
+                if "ArenaOverflow" in msg[3]:
+                    # often transient: concurrent tasks' pinned inputs
+                    # drain as they complete — bounded re-dispatch (the
+                    # failure is pre-mutation, so chains are safe too)
+                    if msg[2] >= 0:
+                        task_ao_retries[msg[2]] += 1
+                        if task_ao_retries[msg[2]] <= 3:
+                            inqs[msg[1]].put(("task", msg[2]))
+                            return
+                    raise MemoryBudgetExceeded(
+                        msg[1], 0, spec.mem_at(msg[1]) or 0,
+                        msg=f"node {msg[1]} arena overflow (budget "
+                            f"{spec.mem_at(msg[1])} bytes, nothing left "
+                            f"to evict) during {phase[0]}:\n{msg[3]}")
+                raise RuntimeError(
+                    f"cluster task failed on node {msg[1]} "
+                    f"(task {msg[2]}) during {phase[0]}:\n{msg[3]}")
+            elif kind == "xfer_fail":
+                _, dstn, version, ref, tb = msg
+                # static membership: recoverable causes are the source
+                # segment having been spilled between the producer's done
+                # and the consumer's attach, or a transient destination
+                # arena overflow — re-request through a source fault-in
+                # (its ack round-trip doubles as backoff), bounded;
+                # anything else is a broken run
+                src = node_of[version]
+                if (version, dstn) in leased_attempts:
+                    # the failed attempt's lease is still held — drop it
+                    # (the retry takes a fresh one)
+                    leased_attempts.discard((version, dstn))
+                    inqs[src].put(("release", ref))
+                xfer_retries[(version, dstn)] += 1
+                if xfer_retries[(version, dstn)] > 3:
+                    if "ArenaOverflow" in tb:
+                        raise MemoryBudgetExceeded(
+                            dstn, 0, spec.mem_at(dstn) or 0,
+                            msg=f"node {dstn} arena overflow receiving "
+                                f"XFER of {ref}:\n{tb}")
+                    raise RuntimeError(
+                        f"cluster XFER of {ref} (version {version}) "
+                        f"failed on node {dstn} after "
+                        f"{xfer_retries[(version, dstn)]} attempts:\n{tb}")
+                parked_xfers[(src, ref)].append((version, dstn))
+                inqs[src].put(("hold", ref))
+
         try:
             for t in g.sources():
                 maybe_dispatch(t.tid)
             while done < total:
-                msg = next_event()
-                kind = msg[0]
-                if kind == "done":
-                    _, n, tid, seg, dt, pid, _dur = msg
-                    t = g.tasks[tid]
-                    if seg is not None and t.out is not None:
-                        seg_info[(n, t.out)] = (seg, dt)
-                    exec_nodes[tid] = n
-                    node_pids[n] = pid
-                    done += 1
-                    for (dst, nbytes) in xfer_by_producer.get(tid, ()):
-                        sname, sdt = seg_info[(n, t.out)]
-                        inqs[dst].put(("xfer", tid, t.out, sname, sdt))
-                        counters["xfers"] += 1
-                        counters["xfer_bytes"] += nbytes
-                    for s in sorted(t.succs):
-                        deps_left[s] -= 1
-                        maybe_dispatch(s)
-                    for r in t.ins:
-                        dec_read(n, r)
-                    if t.kind in _CHAIN_KINDS and t.out is not None:
-                        dec_read(n, t.out)
-                elif kind == "xfer_done":
-                    _, n, version, ref, seg, dt = msg
-                    seg_info[(n, ref)] = (seg, dt)
-                    dec_read(node_of[version], g.tasks[version].out)
-                    for s in waiters.pop((version, n), ()):
-                        xfers_left[s] -= 1
-                        maybe_dispatch(s)
-                elif kind == "error":
-                    raise RuntimeError(
-                        f"cluster task failed on node {msg[1]} "
-                        f"(task {msg[2]}):\n{msg[3]}")
-                elif kind == "xfer_fail":
-                    # static membership: an XFER can only fail if the run
-                    # is already broken — no re-route target exists
-                    raise RuntimeError(
-                        f"cluster XFER of {msg[3]} (version {msg[2]}) "
-                        f"failed on node {msg[1]}:\n{msg[4]}")
+                handle(next_event())
 
             # -- gather result tiles from the master node's arena ----------
             outs: List[np.ndarray] = []
             gather_bytes = 0
             retained = 0
+            phase[0] = "gather"
             for rs in rsets:
                 if not rs.gather:
                     continue
                 vals: Dict[TileRef, np.ndarray] = {}
                 for r in rs.tiles:
-                    sname, dt = seg_info[(master_node, r)]
-                    seg = _attach_shm(sname)
+                    leased = spec.mem_at(master_node) is not None
+                    if leased:
+                        # lease the tile hot for the attach (same race
+                        # as XFER sources: the worker keeps allocating
+                        # while we read)
+                        held_acks.discard((master_node, r))
+                        inqs[master_node].put(("hold", r))
+                        while (master_node, r) not in held_acks:
+                            handle(next_event())
                     try:
-                        view = np.ndarray(r.shape, dtype=np.dtype(dt),
-                                          buffer=seg.buf)
-                        vals[r] = view.copy()
+                        for _attempt in range(5):
+                            if (master_node, r) in spilled:
+                                request_fault(master_node, r)
+                                while (master_node, r) in spilled:
+                                    handle(next_event())
+                            sname, dt = seg_info[(master_node, r)]
+                            try:
+                                seg = _attach_shm(sname)
+                            except FileNotFoundError:
+                                # evicted between unspill and attach
+                                request_fault(master_node, r)
+                                continue
+                            try:
+                                view = np.ndarray(r.shape,
+                                                  dtype=np.dtype(dt),
+                                                  buffer=seg.buf)
+                                vals[r] = view.copy()
+                            finally:
+                                seg.close()
+                            if _CRCAUDIT:
+                                crc_check(
+                                    "gather", master_node, r,
+                                    zlib.crc32(vals[r].data) & 0xFFFFFFFF)
+                            break
+                        else:
+                            raise RuntimeError(
+                                f"could not gather result tile {r}: "
+                                f"segment kept vanishing under memory "
+                                f"pressure")
                     finally:
-                        seg.close()
+                        if leased:
+                            inqs[master_node].put(("release", r))
                     gather_bytes += r.bytes
                     dec_read(master_node, r)
                 outs.append(assemble(vals, rs.shape, plan.tile, rs.uid))
 
             # -- retention: persisted tiles move to the session store -------
+            phase[0] = "retention"
             for r, (uid, home) in retained_refs.items():
-                sname, dt = seg_info[(home, r)]
                 h = residency.retain[uid]
+                pending_retain[(h.hid, r.i, r.j)] = (uid, r)
                 inqs[home].put(("retain", r, (h.hid, r.i, r.j)))
-                residency.retain_seg(uid, r.i, r.j, home, sname, dt)
                 retained += 1
 
             # -- orderly shutdown + per-node stats --------------------------
-            node_stats: Dict[int, Dict[str, int]] = {}
             if self.session:
-                # workers survive; audit instead of stop (the audit reply
-                # also confirms every retain op above was processed)
+                # workers survive; audit instead of stop (per-worker FIFO
+                # means the audit reply confirms every retain op above was
+                # processed — its ack handled on the way)
                 for q in inqs:
                     q.put(("audit",))
-                while len(node_stats) < spec.n_nodes:
-                    msg = next_event()
-                    if msg[0] == "audit":
-                        node_stats[msg[1]] = msg[2]
-                    elif msg[0] == "error":     # pragma: no cover
-                        raise RuntimeError(f"cluster worker error during "
-                                           f"retention:\n{msg[3]}")
+                while len(node_audits) < spec.n_nodes:
+                    handle(next_event())
+                while pending_retain:       # pragma: no cover - FIFO order
+                    handle(next_event())
+                node_stats = node_audits
             else:
                 for q in inqs:
                     q.put(("stop",))
                 while len(node_stats) < spec.n_nodes:
-                    msg = next_event()
-                    if msg[0] == "stats":
-                        node_stats[msg[1]] = msg[2]
-                        node_pids.setdefault(msg[1], msg[3])
-                    elif msg[0] == "error":     # pragma: no cover
-                        raise RuntimeError(f"cluster worker error during "
-                                           f"shutdown:\n{msg[3]}")
+                    handle(next_event())
                 for p in procs:
                     p.join(timeout=self.timeout)
         except BaseException:
@@ -773,6 +1317,7 @@ class ClusterExecutor:
                 finally:
                     (resource_tracker.register,
                      resource_tracker.unregister) = orig
+            shutil.rmtree(run_spill_dir(prefix), ignore_errors=True)
             raise
         finally:
             if not self.session or self._broken:
@@ -780,6 +1325,17 @@ class ClusterExecutor:
                     if p.is_alive():        # pragma: no cover
                         p.terminate()
                         p.join(timeout=5)
+
+        leaked_spill = 0
+        if not self.session:
+            # after a clean non-session stop every spill file must be gone;
+            # leftovers are leaks (counted, then reaped)
+            sd = run_spill_dir(prefix)
+            try:
+                leaked_spill = len(os.listdir(sd))
+            except OSError:
+                leaked_spill = 0
+            shutil.rmtree(sd, ignore_errors=True)
 
         self.stats = {
             "tasks_run": total,
@@ -800,6 +1356,17 @@ class ClusterExecutor:
                                 for s in node_stats.values()),
             "retained_total": sum(s.get("retained", 0)
                                   for s in node_stats.values()),
+            "evictions": sum(s.get("evictions", 0)
+                             for s in node_stats.values()),
+            "faults": sum(s.get("faults", 0)
+                          for s in node_stats.values()),
+            "spill_writes": sum(s.get("spill_writes", 0)
+                                for s in node_stats.values()),
+            "spill_reads": sum(s.get("spill_reads", 0)
+                               for s in node_stats.values()),
+            "spilled_bytes": sum(s.get("spilled_bytes", 0)
+                                 for s in node_stats.values()),
+            "leaked_spill_files": leaked_spill,
             "exec_nodes": exec_nodes,
             "node_pids": node_pids,
         }
@@ -839,6 +1406,16 @@ class ClusterExecutor:
             if p.is_alive():                     # pragma: no cover
                 p.terminate()
         self._procs = self._inqs = self._outq = None
+        # spill-file leak sweep: a clean shutdown leaves the run's spill
+        # directory empty — report leftovers so the session audit can fail
+        if self._prefix:
+            sd = run_spill_dir(self._prefix)
+            try:
+                leaked = len(os.listdir(sd))
+            except OSError:
+                leaked = 0
+            shutil.rmtree(sd, ignore_errors=True)
+            audit["spill"] = {"leaked_spill_files": leaked}
         return audit
 
 

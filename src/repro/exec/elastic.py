@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import os
 import queue as _queue
+import shutil
 import signal
 import time
 from collections import defaultdict
@@ -62,12 +63,13 @@ import numpy as np
 from ..core.graph import TaskGraph, TaskKind, TileRef
 from ..core.heft import Placement, Schedule, replan_frontier
 from ..core.lazy import Op
-from ..core.machine import ClusterSpec
+from ..core.machine import ClusterSpec, MemoryBudgetExceeded
 from ..core.session import ResidentTilesLost
 from ..core.timemodel import CostCache, TimeModel, analytic_time_model
 from ..core.tiling import assemble, result_sets_of
 from ..runtime.membership import (DEATH, RECOVER, STRAGGLE,
                                   MembershipConfig, MembershipService)
+from ..runtime.spill import run_spill_dir
 from .cluster import _CHAIN_KINDS, _RUN_IDS, _attach_shm, _node_worker
 
 
@@ -102,6 +104,17 @@ class ChaosEvent:
     #: durable session's ``resume()`` is what recovers) — only subprocess
     #: test harnesses should arm this
     kill_master: bool = False
+    #: shrink this node's arena memory budget to ``squeeze_bytes``
+    #: mid-run: the worker evicts cold tiles to the spill tier until it
+    #: fits, and the membership-adjusted spec (``current_spec``) reflects
+    #: the new budget for subsequent session plans
+    mem_squeeze: Optional[int] = None
+    squeeze_bytes: int = 0
+    #: fail this node's Nth subsequent arena allocation with an injected
+    #: ``AllocFailInjected`` — the task fails, the master retries it with
+    #: backoff (the counter is consumed, so the retry allocates for real)
+    alloc_fail: Optional[int] = None
+    alloc_fail_nth: int = 1
 
 
 class ElasticClusterExecutor:
@@ -178,7 +191,8 @@ class ElasticClusterExecutor:
         return {uid: ("master" if n.op is Op.INPUT else "local")
                 for uid, n in prog.leaf_nodes.items()}
 
-    def _spawn(self, node: int, nthreads: int):
+    def _spawn(self, node: int, nthreads: int,
+               mem_bytes: Optional[float] = None):
         """(Re)spawn the worker process for ``node`` under a fresh
         incarnation: fresh queues (a SIGKILLed predecessor may have died
         holding queue locks or with stale dispatches enqueued) and a
@@ -191,7 +205,8 @@ class ElasticClusterExecutor:
             target=_node_worker,
             args=(node, inq, outq, self._g, self._tile, self._leaf_nodes,
                   self._dtypes, nthreads, prefix,
-                  self._mcfg.heartbeat_interval_s, self.blas_threads),
+                  self._mcfg.heartbeat_interval_s, self.blas_threads,
+                  mem_bytes, self._spill_dir),
             daemon=True)
         p.start()
         self._procs[node] = p
@@ -242,6 +257,20 @@ class ElasticClusterExecutor:
                         f"{spec.n_nodes}-node spec (+{n_joins} joins)")
             if c.join_workers is not None and c.join_workers <= 0:
                 raise ValueError("join needs at least one worker")
+            if c.mem_squeeze is not None:
+                if not 0 <= c.mem_squeeze < spec.n_nodes + n_joins:
+                    raise ValueError(
+                        f"mem_squeeze={c.mem_squeeze} is outside the "
+                        f"{spec.n_nodes}-node spec (+{n_joins} joins)")
+                if c.squeeze_bytes <= 0:
+                    raise ValueError("mem_squeeze needs squeeze_bytes > 0")
+            if c.alloc_fail is not None:
+                if not 0 <= c.alloc_fail < spec.n_nodes + n_joins:
+                    raise ValueError(
+                        f"alloc_fail={c.alloc_fail} is outside the "
+                        f"{spec.n_nodes}-node spec (+{n_joins} joins)")
+                if c.alloc_fail_nth < 1:
+                    raise ValueError("alloc_fail_nth must be >= 1")
             if c.corrupt_tile is not None and self.corrupt_tile_hook is None:
                 raise ValueError(
                     "ChaosEvent(corrupt_tile=...) needs a durable session "
@@ -256,6 +285,7 @@ class ElasticClusterExecutor:
             self._ctx = mp.get_context(method)
             self._prefix = f"cmm{os.getpid()}_{next(_RUN_IDS)}e"
             self._incarnations = iter(range(1 << 30))
+            self._spill_dir = run_spill_dir(self._prefix)
         self._g, self._tile = g, plan.tile
         # RESIDENT leaves stay master-side (workers resolve them against
         # their retained arena store via handle ids)
@@ -344,6 +374,16 @@ class ElasticClusterExecutor:
         #: remaining XFER requests to poison (ChaosEvent.drop_xfer)
         chaos_drop = [0]
         spec_pending: Dict[int, int] = {}        # speculative node per tid
+        #: (node, ref) slots whose segment was evicted to the spill tier:
+        #: the binding stays in ``avail`` (the VALUE is still secured by
+        #: that node) but cannot serve as an XFER source until the master
+        #: faults it back in
+        spilled: Set[Tuple[int, TileRef]] = set()
+        fault_pending: Set[Tuple[int, TileRef]] = set()
+        #: retention acks in flight: (hid, i, j) -> (root uid, ref) — the
+        #: worker's retain may fault the tile in from spill (fresh segment
+        #: name), so the session store is only updated from the ack
+        pending_retain: Dict[Tuple[int, int, int], Tuple[int, TileRef]] = {}
         ready: Set[int] = {t.tid for t in g.sources()}
         #: the sweep is O(tasks), so its cadence scales with graph size:
         #: at most ~8 periodic sweeps per run (replans add their own) —
@@ -395,7 +435,8 @@ class ElasticClusterExecutor:
             self._inqs: Dict[int, object] = {}
             self._outqs: Dict[int, object] = {}
             for n in range(spec.n_nodes):
-                self._spawn(n, self.workers_per_node or spec.workers_at(n))
+                self._spawn(n, self.workers_per_node or spec.workers_at(n),
+                            spec.mem_at(n))
             self._ms = ms
             self._started = True
 
@@ -405,13 +446,23 @@ class ElasticClusterExecutor:
 
         def pick_holder(version: int, ref: TileRef) -> Optional[int]:
             """Deterministic live holder of this tile version whose copy
-            is safe to read (no in-progress write on that arena slot)."""
+            is safe to read (no in-progress write on that arena slot and
+            not currently evicted to the spill tier)."""
             for k in ms.alive_nodes():
                 ent = avail.get((k, ref))
                 if ent is not None and ent[0] == version \
-                        and (k, ref) not in write_busy:
+                        and (k, ref) not in write_busy \
+                        and (k, ref) not in spilled:
                     return k
             return None
+
+        def request_fault(n: int, ref: TileRef) -> None:
+            """Ask node ``n`` to fault a spilled tile back into its hot
+            tier; the ``unspill`` ack restores the fresh segment name."""
+            if (n, ref) not in fault_pending \
+                    and self._inqs.get(n) is not None:
+                fault_pending.add((n, ref))
+                self._inqs[n].put(("fault", ref))
 
         def value_secured(v: int) -> bool:
             """Is canonical version ``v`` guaranteed to (re)appear without
@@ -458,6 +509,15 @@ class ElasticClusterExecutor:
                         # copy becomes readable when its write completes)
                         replan({p})
                         return False
+                    if holder is None:
+                        # every live copy may be cold in the spill tier —
+                        # fault one back in so a later scan can route it
+                        for k in ms.alive_nodes():
+                            e2 = avail.get((k, ref))
+                            if e2 is not None and e2[0] == p \
+                                    and (k, ref) in spilled:
+                                request_fault(k, ref)
+                                break
                     continue                  # value not yet obtainable
                 sname, sdt = avail[(holder, ref)][1], avail[(holder, ref)][2]
                 if chaos_drop[0] > 0:
@@ -656,13 +716,17 @@ class ElasticClusterExecutor:
             inflight[n] = 0
             for tid in [t for t, k in spec_pending.items() if k == n]:
                 del spec_pending[tid]
+            for key in [k for k in spilled if k[0] == n]:
+                spilled.discard(key)
+            for key in [k for k in fault_pending if k[0] == n]:
+                fault_pending.discard(key)
             self._reap_segments(n)
             self._procs[n] = None
             self._inqs[n] = None
             self._outqs[n] = None
             if self.respawn_dead:
                 self._spawn(n, self.workers_per_node
-                            or cur_spec.workers_at(n))
+                            or cur_spec.workers_at(n), cur_spec.mem_at(n))
                 ms.add_node(n)
                 cnt["respawns"] += 1
             else:
@@ -692,7 +756,8 @@ class ElasticClusterExecutor:
             node = cur_spec.n_nodes
             cur_spec = cur_spec.with_node(workers, slowdown)
             base_slowdown[node] = float(slowdown)
-            self._spawn(node, self.workers_per_node or workers)
+            self._spawn(node, self.workers_per_node or workers,
+                        cur_spec.mem_at(node))
             ms.add_node(node)
             cnt["joins"] += 1
             replan()
@@ -732,6 +797,7 @@ class ElasticClusterExecutor:
             replan()
 
         def fire_chaos() -> None:
+            nonlocal cur_spec
             for i, c in enumerate(self.chaos):
                 if fired[i] or len(completed) < c.after_done:
                     continue
@@ -762,6 +828,19 @@ class ElasticClusterExecutor:
                     # to attach, reports xfer_fail, and the bounded
                     # retry path re-requests the tile for real
                     chaos_drop[0] += int(c.drop_xfer)
+                if c.mem_squeeze is not None and alive(c.mem_squeeze):
+                    # shrink the node's arena budget mid-run: the worker
+                    # evicts down to it; the spec change flows to the
+                    # session's next plan via current_spec
+                    self._inqs[c.mem_squeeze].put(
+                        ("squeeze", int(c.squeeze_bytes)))
+                    cur_spec = cur_spec.with_mem(
+                        c.mem_squeeze, float(c.squeeze_bytes))
+                    cnt["squeezes"] += 1
+                if c.alloc_fail is not None and alive(c.alloc_fail):
+                    self._inqs[c.alloc_fail].put(
+                        ("alloc_fail", int(c.alloc_fail_nth)))
+                    cnt["alloc_fails_armed"] += 1
                 if c.corrupt_tile is not None:
                     self.corrupt_tile_hook(c.corrupt_tile)
                 if c.kill_master:
@@ -782,7 +861,7 @@ class ElasticClusterExecutor:
             idle-but-alive workers must still trip the stall watchdog)."""
             kind = msg[0]
             if kind == "done":
-                _, n, tid, seg, dt, pid, dur = msg
+                _, n, tid, seg, dt, pid, dur, *_rest = msg
                 ms.record_task(n, dur)
                 node_pids[n] = pid
                 t = g.tasks[tid]
@@ -808,7 +887,7 @@ class ElasticClusterExecutor:
                     run_gc()
                 fire_chaos()
             elif kind == "xfer_done":
-                _, n, version, ref, seg, dt = msg
+                _, n, version, ref, seg, dt, *_rest = msg
                 write_busy.discard((n, ref))
                 ent = xfer_inflight.pop((n, ref), None)
                 if ent is not None and (ent[1], ref) in src_busy:
@@ -824,6 +903,11 @@ class ElasticClusterExecutor:
                 tries = xfer_retries[(version, n)]
                 cnt["xfer_retries"] += 1
                 if tries > self._mcfg.xfer_max_retries:
+                    if "ArenaOverflow" in tb:
+                        raise MemoryBudgetExceeded(
+                            n, 0, cur_spec.mem_at(n) or 0,
+                            msg=f"node {n} arena overflow receiving XFER "
+                                f"of {ref} after {tries} attempts:\n{tb}")
                     raise RuntimeError(
                         f"XFER of {ref} (version {version}) to node {n} "
                         f"failed {tries} times (xfer_max_retries="
@@ -834,6 +918,33 @@ class ElasticClusterExecutor:
                 # hammering the same copy
                 xfer_retry_at[(n, ref)] = time.monotonic() + min(
                     self._mcfg.retry_backoff_s * (2 ** (tries - 1)), 2.0)
+            elif kind == "spill":
+                spilled.add((msg[1], msg[2]))
+            elif kind == "unspill":
+                _, n, ref, sname, dt, *_rest = msg
+                ent = avail.get((n, ref))
+                if ent is not None:
+                    # the fault-in rebinds under a fresh segment name;
+                    # the version is unchanged (spill is bit-copying)
+                    avail[(n, ref)] = (ent[0], sname, dt)
+                spilled.discard((n, ref))
+                fault_pending.discard((n, ref))
+            elif kind == "tile_lost":
+                # a spill-tier miss or CRC failure destroyed this copy;
+                # degrade to lineage recompute instead of failing the run
+                _, n, ref, tb = msg
+                spilled.discard((n, ref))
+                fault_pending.discard((n, ref))
+                ent = avail.pop((n, ref), None)
+                cnt["tiles_lost"] += 1
+                if ent is not None and not value_secured(ent[0]):
+                    replan({ent[0]})
+            elif kind == "retained":
+                _, n, key, sname, dt = msg
+                ent = pending_retain.pop(key, None)
+                if ent is not None and residency is not None:
+                    uid, r = ent
+                    residency.retain_seg(uid, r.i, r.j, n, sname, dt)
             elif kind == "hb":
                 ms.heartbeat(msg[1])
                 node_pids.setdefault(msg[1], msg[2])
@@ -858,9 +969,27 @@ class ElasticClusterExecutor:
                 # output buffer as they run: a crashed instance may have
                 # landed a partial update, so blindly re-running would
                 # double-accumulate — those stay fatal; pure tasks are
-                # retried with bounded exponential backoff
-                retryable = t is not None and t.kind not in _CHAIN_KINDS
+                # retried with bounded exponential backoff.  SpillDataLost
+                # and ArenaOverflow are the chain-safe exceptions: both
+                # can only be raised while *fetching/allocating* inputs,
+                # strictly before the in-place update touches the output
+                # buffer (an overflow is often transient — concurrent
+                # tasks' pinned inputs drain — so it retries too)
+                retryable = t is not None and (
+                    t.kind not in _CHAIN_KINDS
+                    or "SpillDataLost" in msg[3]
+                    or "ArenaOverflow" in msg[3])
                 if not retryable or tries > self._mcfg.task_max_retries:
+                    if "ArenaOverflow" in msg[3]:
+                        # nothing left to evict under the budget even
+                        # after backoff: structured failure naming the
+                        # node, never an OOM kill
+                        raise MemoryBudgetExceeded(
+                            msg[1], 0, cur_spec.mem_at(msg[1]) or 0,
+                            msg=f"node {msg[1]} arena overflow (budget "
+                                f"{cur_spec.mem_at(msg[1])} bytes, "
+                                f"nothing left to evict) running task "
+                                f"{tid}, attempt {tries}:\n{msg[3]}")
                     raise RuntimeError(
                         f"elastic task failed on node {msg[1]} "
                         f"(task {tid}, attempt {tries}):\n{msg[3]}")
@@ -1006,6 +1135,29 @@ class ElasticClusterExecutor:
                 else:
                     wait_for_events(0.05)
 
+            def pump_until(pred, what: str) -> None:
+                """Drain worker messages through ``handle`` until ``pred``
+                holds (used post-run: gather fault-ins, retention acks)."""
+                deadline = time.monotonic() + min(self.timeout, 30.0)
+                while not pred():
+                    got = False
+                    for n2 in list(ms.alive_nodes()):
+                        q2 = self._outqs.get(n2)
+                        if q2 is None:
+                            continue
+                        try:
+                            m2 = q2.get_nowait()
+                        except _queue.Empty:
+                            continue
+                        handle(m2)
+                        got = True
+                    if pred():
+                        return
+                    if time.monotonic() > deadline:
+                        raise RuntimeError(f"timed out waiting for {what}")
+                    if not got:
+                        wait_for_events(0.02)
+
             # -- gather result tiles of non-persisted roots -----------------
             outs: List[np.ndarray] = []
             gather_bytes = 0
@@ -1014,23 +1166,47 @@ class ElasticClusterExecutor:
                     continue
                 vals: Dict[TileRef, np.ndarray] = {}
                 for r in rs.tiles:
-                    ent = avail.get((master, r))
-                    if ent is None:   # pragma: no cover — takecopy pins
-                        raise RuntimeError(f"result tile {r} missing from "
-                                           f"the master arena")
-                    seg = _attach_shm(ent[1])
-                    try:
-                        view = np.ndarray(r.shape, dtype=np.dtype(ent[2]),
-                                          buffer=seg.buf)
-                        vals[r] = view.copy()
-                    finally:
-                        seg.close()
+                    for _attempt in range(5):
+                        ent = avail.get((master, r))
+                        if ent is None:  # pragma: no cover — takecopy pins
+                            raise RuntimeError(f"result tile {r} missing "
+                                               f"from the master arena")
+                        if (master, r) in spilled:
+                            request_fault(master, r)
+                            pump_until(
+                                lambda: (master, r) not in spilled,
+                                f"fault-in of result tile {r}")
+                            ent = avail.get((master, r))
+                            if ent is None:   # lost + lineage recompute
+                                raise RuntimeError(
+                                    f"result tile {r} lost from the "
+                                    f"spill tier during gather")
+                        try:
+                            seg = _attach_shm(ent[1])
+                        except FileNotFoundError:
+                            # evicted between unspill and attach — retry
+                            spilled.add((master, r))
+                            continue
+                        try:
+                            view = np.ndarray(r.shape,
+                                              dtype=np.dtype(ent[2]),
+                                              buffer=seg.buf)
+                            vals[r] = view.copy()
+                        finally:
+                            seg.close()
+                        break
+                    else:
+                        raise RuntimeError(
+                            f"could not gather result tile {r}: segment "
+                            f"kept vanishing under memory pressure")
                     gather_bytes += r.bytes
                 outs.append(assemble(vals, rs.shape, plan.tile, rs.uid))
 
             # -- retention: persisted tiles into the session store ----------
             # a tile's home is wherever its (canonical) value actually
-            # lives — under churn that may differ from the planned node
+            # lives — under churn that may differ from the planned node.
+            # The worker's retain op faults a spilled tile back in (fresh
+            # segment name), so the session store is updated from the ack
             retained_count = 0
             for rs in rsets:
                 if rs.gather:
@@ -1048,12 +1224,14 @@ class ElasticClusterExecutor:
                         raise RuntimeError(
                             f"retention: no live holder for {r} "
                             f"(version {v})")
-                    ent = avail.pop((holder, r))
+                    avail.pop((holder, r))
+                    spilled.discard((holder, r))
+                    pending_retain[(h.hid, r.i, r.j)] = (rs.uid, r)
                     self._inqs[holder].put(("retain", r,
                                             (h.hid, r.i, r.j)))
-                    residency.retain_seg(rs.uid, r.i, r.j, holder,
-                                         ent[1], ent[2])
                     retained_count += 1
+            if pending_retain:
+                pump_until(lambda: not pending_retain, "retention acks")
 
             # -- release every remaining binding before shutdown ------------
             if self.free_buffers:
@@ -1096,6 +1274,7 @@ class ElasticClusterExecutor:
         except BaseException:
             self._broken = True
             self._terminate_all()
+            shutil.rmtree(self._spill_dir, ignore_errors=True)
             raise
         finally:
             self._cur_spec = cur_spec
@@ -1137,7 +1316,29 @@ class ElasticClusterExecutor:
                                      for s in self._node_stats.values()),
             "cur_buffer_bytes": sum(s["cur_buffer_bytes"]
                                     for s in self._node_stats.values()),
+            "squeezes": cnt["squeezes"],
+            "tiles_lost": cnt["tiles_lost"],
+            "evictions": sum(s.get("evictions", 0)
+                             for s in self._node_stats.values()),
+            "faults": sum(s.get("faults", 0)
+                          for s in self._node_stats.values()),
+            "spill_writes": sum(s.get("spill_writes", 0)
+                                for s in self._node_stats.values()),
+            "spill_reads": sum(s.get("spill_reads", 0)
+                               for s in self._node_stats.values()),
+            "spilled_bytes": sum(s.get("spilled_bytes", 0)
+                                 for s in self._node_stats.values()),
+            "leaked_spill_files": 0,
         }
+        if not self.session:
+            # after a clean one-shot run every spill file must be gone;
+            # leftovers are leaks (counted, then reaped)
+            try:
+                self.stats["leaked_spill_files"] = \
+                    len(os.listdir(self._spill_dir))
+            except OSError:
+                pass
+            shutil.rmtree(self._spill_dir, ignore_errors=True)
         if not outs:
             return None
         return outs[0] if len(outs) == 1 else outs
@@ -1182,6 +1383,16 @@ class ElasticClusterExecutor:
                     time.sleep(0.005)
         self._terminate_all()
         self._started = False
+        # spill-file leak sweep: a clean shutdown leaves the run's spill
+        # directory empty — report leftovers so the session audit can fail
+        sd = getattr(self, "_spill_dir", None)
+        if sd:
+            try:
+                leaked = len(os.listdir(sd))
+            except OSError:
+                leaked = 0
+            shutil.rmtree(sd, ignore_errors=True)
+            audit["spill"] = {"leaked_spill_files": leaked}
         return audit
 
     # -- cleanup --------------------------------------------------------------
@@ -1217,6 +1428,19 @@ class ElasticClusterExecutor:
                 resource_tracker.unregister("/" + f, "shared_memory")
             except Exception:       # pragma: no cover
                 pass
+        # a SIGKILLed worker also strands its spill-tier files; same
+        # per-node sweep over the run's spill directory.  The node=None
+        # (terminate-all) case deliberately leaves files in place so the
+        # close_session leak audit can count them first
+        sd = getattr(self, "_spill_dir", None)
+        if node is not None and sd and os.path.isdir(sd):
+            for f in os.listdir(sd):
+                if f"n{node}_" not in f:
+                    continue
+                try:
+                    os.unlink(os.path.join(sd, f))
+                except OSError:     # pragma: no cover
+                    pass
 
     def _terminate_all(self) -> None:
         for p in self._procs.values():

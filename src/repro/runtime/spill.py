@@ -1,0 +1,180 @@
+"""Disk spill tier for bounded worker arenas.
+
+The hot tier is the per-node SharedMemory arena (`exec/cluster.py`); when a
+node's ``ClusterSpec.mem_bytes`` budget is reached the arena evicts cold
+unpinned tiles here and faults them back in transparently on read.  The
+store reuses the durability layer's shard idioms: one ``.npy`` file per
+tile, CRC32 recorded at write time and verified on every fault-in, so a
+torn or bit-flipped spill file is *detected* (``SpillCorrupt``) and the
+runtime degrades to lineage recompute instead of silently computing on
+garbage.
+
+The store is worker-local and unsynchronised — the owning arena serialises
+access under its own lock.
+"""
+from __future__ import annotations
+
+import os
+import zlib
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+def spill_root() -> str:
+    """Base directory for all runs' spill files (under the platform
+    tempdir, mirroring where SharedMemory lives conceptually)."""
+    import tempfile
+    return os.path.join(tempfile.gettempdir(), "cmm_spill")
+
+
+def run_spill_dir(run_prefix: str) -> str:
+    """The spill directory for one executor run, derived from the same
+    unique prefix that names its /dev/shm segments — so crash-path reaping
+    can sweep by prefix exactly like segment reaping does."""
+    return os.path.join(spill_root(), run_prefix.strip("_"))
+
+
+class SpillMiss(RuntimeError):
+    """Fault-in requested for a key the store has no file for (or the
+    file vanished) — the cold-tier copy is gone."""
+
+
+class SpillCorrupt(RuntimeError):
+    """A spill file failed its CRC32 on fault-in — the cold-tier copy is
+    untrustworthy and must be treated as lost."""
+
+
+class SpillDataLost(RuntimeError):
+    """An arena read hit a spilled tile whose cold copy is missing or
+    corrupt.  Carries the tile ref so the master can drop that holding
+    and degrade to lineage recompute."""
+
+    def __init__(self, ref, cause: str):
+        self.ref = ref
+        super().__init__(f"spilled tile {ref} lost: {cause}")
+
+
+class ArenaOverflow(RuntimeError):
+    """An allocation cannot be satisfied within the arena's byte budget
+    and nothing is left to evict (everything resident is pinned or
+    retained).  The master surfaces this as a structured
+    ``MemoryBudgetExceeded`` rather than an OOM kill."""
+
+
+class AllocFailInjected(RuntimeError):
+    """Chaos-injected allocation failure (``ChaosEvent.alloc_fail``):
+    models a transient malloc/shm failure on the Nth fresh allocation.
+    Pure tasks retry through the normal bounded-retry path."""
+
+
+def _crc(buf) -> int:
+    return zlib.crc32(buf) & 0xFFFFFFFF
+
+
+class TileSpillStore:
+    """CRC-checked ``.npy`` cold tier for one arena.
+
+    Keys are arbitrary hashables (the arena uses ``TileRef``s); the
+    key -> file mapping lives in memory, so a store instance only trusts
+    files it wrote itself — stale files from a SIGKILLed predecessor
+    incarnation are invisible to it (and swept by the master's reaper).
+    """
+
+    def __init__(self, directory: str, file_prefix: str):
+        self.dir = directory
+        self._fp = file_prefix
+        self._seq = 0
+        # key -> (path, crc32, nbytes)
+        self._ent: Dict[object, Tuple[str, int, int]] = {}
+        self.writes = 0
+        self.reads = 0
+        self.bytes_written = 0
+        self.bytes_read = 0
+
+    # -- write / read / drop ------------------------------------------------
+    def spill(self, key, arr: np.ndarray) -> int:
+        """Write ``arr`` to the cold tier under ``key``; returns bytes
+        written.  Overwrites any previous entry for the key."""
+        os.makedirs(self.dir, exist_ok=True)
+        self.drop(key)
+        path = os.path.join(self.dir, f"{self._fp}_{self._seq}.npy")
+        self._seq += 1
+        data = np.ascontiguousarray(arr)
+        with open(path, "wb") as f:
+            np.save(f, data)
+        nbytes = data.nbytes
+        self._ent[key] = (path, _crc(data.tobytes()), nbytes)
+        self.writes += 1
+        self.bytes_written += nbytes
+        return nbytes
+
+    def fault_in(self, key, keep: bool = False) -> np.ndarray:
+        """Read ``key`` back from the cold tier, CRC-verified.  The entry
+        is consumed (exclusive tiering: a tile lives in exactly one tier)
+        unless ``keep`` — a caller that still has to allocate hot-tier
+        space for the data passes ``keep=True`` and drops the entry only
+        once the new binding exists, so an allocation failure mid-fault
+        never loses the sole remaining copy."""
+        ent = self._ent.get(key)
+        if ent is None:
+            raise SpillMiss(f"no spill entry for {key}")
+        path, crc, nbytes = ent
+        try:
+            with open(path, "rb") as f:
+                arr = np.load(f)
+        except (OSError, ValueError) as e:
+            raise SpillMiss(f"spill file for {key} unreadable: {e}")
+        if arr.nbytes != nbytes or _crc(arr.tobytes()) != crc:
+            raise SpillCorrupt(
+                f"spill file {os.path.basename(path)} for {key} failed CRC")
+        if not keep:
+            self.drop(key)
+        self.reads += 1
+        self.bytes_read += arr.nbytes
+        return arr
+
+    def drop(self, key) -> None:
+        ent = self._ent.pop(key, None)
+        if ent is not None:
+            try:
+                os.unlink(ent[0])
+            except OSError:
+                pass
+
+    # -- introspection ------------------------------------------------------
+    def __contains__(self, key) -> bool:
+        return key in self._ent
+
+    def keys(self) -> Iterator:
+        return iter(self._ent)
+
+    @property
+    def live_files(self) -> int:
+        return len(self._ent)
+
+    @property
+    def live_bytes(self) -> int:
+        return sum(e[2] for e in self._ent.values())
+
+    def corrupt(self, key) -> None:
+        """Test hook: flip the last byte of ``key``'s spill file so the
+        next fault-in fails its CRC (mirrors durability's corrupt_shard)."""
+        path = self._ent[key][0]
+        with open(path, "r+b") as f:
+            f.seek(-1, os.SEEK_END)
+            b = f.read(1)
+            f.seek(-1, os.SEEK_END)
+            f.write(bytes([b[0] ^ 0xFF]))
+
+    def destroy(self) -> int:
+        """Remove every live file; returns how many entries were still
+        present (a clean shutdown has zero — anything else is a leak)."""
+        leftover = len(self._ent)
+        for key in list(self._ent):
+            self.drop(key)
+        try:
+            os.rmdir(self.dir)
+        except OSError:
+            pass
+        return leftover
