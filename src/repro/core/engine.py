@@ -450,10 +450,11 @@ class CMMEngine:
         registry."""
         if executor == "auto":
             executor = self.choose_executor(plan)
-        if executor == "elastic" and executor_obj is None \
+        if executor in ("elastic", "cluster") and executor_obj is None \
                 and "timemodel" not in exec_kw:
             # frontier re-planning inside the executor must price nodes
-            # with the same model the original schedule used
+            # with the same model the original schedule used; the cluster
+            # backends also price per-edge wire codecs against it
             exec_kw["timemodel"] = self.timemodel
         if executor_obj is None:
             from ..exec import make_executor

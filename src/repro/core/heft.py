@@ -124,11 +124,17 @@ def edge_bytes(g: TaskGraph, u: Task, v: Task) -> int:
     return 0
 
 
-def _avg_comm(nbytes: int, spec: ClusterSpec) -> float:
+def _avg_comm(nbytes: int, spec: ClusterSpec,
+              tm: Optional[TimeModel] = None) -> float:
     if spec.n_nodes <= 1 or nbytes == 0:
         return 0.0
     frac = (spec.n_nodes - 1) / spec.n_nodes
-    return frac * spec.comm_time(nbytes, 0, 1 if spec.n_nodes > 1 else 0)
+    dst = 1 if spec.n_nodes > 1 else 0
+    if tm is not None:
+        # codec-aware edge pricing (identical to spec.comm_time while the
+        # TimeModel's compression priors are unfitted)
+        return frac * tm.wire_time(nbytes, 0, dst, spec)
+    return frac * spec.comm_time(nbytes, 0, dst)
 
 
 class DirectCost:
@@ -178,7 +184,7 @@ def upward_rank(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
             nb = edge_bytes(g, t, st)
             c = comm_memo.get(nb)
             if c is None:
-                c = _avg_comm(nb, spec)
+                c = _avg_comm(nb, spec, tm)
                 comm_memo[nb] = c
             cr = c + rank[s]
             if cr > best:
@@ -424,8 +430,10 @@ def heft_schedule(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
                 key = (p, pt.out.tensor)
                 hit = cache_aware and cache.peek(node, key)
                 if not hit:
-                    arr_x = pp.finish + spec.comm_time(nbytes, pp.node,
-                                                       node)
+                    # codec-aware per-edge pricing, mirrored in
+                    # replan_frontier's eval_on
+                    arr_x = pp.finish + tm.wire_time(nbytes, pp.node,
+                                                     node, spec)
                     if is_lazy(pt):
                         # generated data is a pure function of (seed, tile):
                         # regenerating locally can beat transferring
@@ -599,7 +607,10 @@ def replan_frontier(g: TaskGraph, spec: ClusterSpec, tm: TimeModel,
                 key = (p, pt.out.tensor)
                 hit = cache_aware and cache.peek(node, key)
                 if not hit:
-                    arr = pp.finish + spec.comm_time(nbytes, pp.node, node)
+                    # codec-aware per-edge pricing, mirroring
+                    # heft_schedule's eval_on_node
+                    arr = pp.finish + tm.wire_time(nbytes, pp.node, node,
+                                                   spec)
                 transfers.append((p, pp.node, nbytes, hit))
             ready = max(ready, arr)
         best = None

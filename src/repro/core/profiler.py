@@ -95,6 +95,7 @@ def profile_machine(sizes: Sequence[int] = (64, 128, 256, 384, 512),
     calibrate_dispatch(tm)
     calibrate_batch_dispatch(tm)
     calibrate_ipc(tm)
+    calibrate_compression(tm)
     return tm
 
 
@@ -234,6 +235,35 @@ def calibrate_ipc(tm: TimeModel, nbytes: int = 1 << 22,
             s.close()
             s.unlink()
     return tm.process_dispatch_overhead, tm.ipc_bandwidth
+
+
+def calibrate_compression(tm: TimeModel, nbytes: int = 1 << 22,
+                          reps: int = 3) -> Tuple[float, float]:
+    """Fit the wire-codec terms the per-edge XFER pricing runs on:
+
+    * ``compress_bandwidth`` — raw bytes/s the codec encodes at on this
+      host (the ``compress_cpu`` term of the pricing inequality);
+    * ``compression_ratio_prior`` — expected raw/compressed ratio.
+
+    The probe tile is *structured* (a low-rank f64 outer product — the
+    shape of persisted intermediates and generated operands), not pure
+    noise: the prior should reflect payloads where the codec can win at
+    all.  On incompressible data the per-edge rule still falls back to
+    ``"raw"`` because the measured wire bytes, not the prior, are what
+    the executors count.
+    """
+    from ..runtime.wire import encode_tile
+
+    side = max(int(np.sqrt(nbytes / 8)), 16)
+    col = np.linspace(0.0, 1.0, side)
+    probe = np.outer(col, np.ones(side))          # rank-1: compressible
+    raw = probe.nbytes
+    enc = _time_call(lambda: encode_tile(probe, "zlib"), reps)
+    payload = encode_tile(probe, "zlib")
+    tm.compress_bandwidth = float(min(max(raw / max(enc, 1e-9), 1e6), 1e11))
+    tm.compression_ratio_prior = float(
+        min(max(raw / max(len(payload), 1), 1.0), 64.0))
+    return tm.compress_bandwidth, tm.compression_ratio_prior
 
 
 def profile_comm_synthetic(spec, sizes_bytes: Sequence[int] = None,

@@ -294,7 +294,12 @@ class CMMSession:
         return rm
 
     def gather(self, handle: ResidentHandle) -> np.ndarray:
-        """Assemble a resident handle's tiles into one master ndarray."""
+        """Assemble a resident handle's tiles into one master ndarray.
+
+        Streaming assembly: each tile is copied exactly once, straight
+        from its arena segment into its slice of the output — never via
+        a tile-sized staging copy (halves gather traffic and keeps peak
+        memory at output + one segment mapping)."""
         self._check_handle(handle)
         if handle.lost:
             self._recompute(handle)
@@ -303,12 +308,11 @@ class CMMSession:
         out = np.empty(handle.shape, dtype=handle.dtype)
         for (i, j) in handle.tiles():
             key = (handle.hid, i, j)
-            if key in self._tiles:
-                t = self._tiles[key]
-            else:
-                t = self._attach_tile(key)
             (r0, r1), (c0, c1) = rows[i], cols[j]
-            out[r0:r1, c0:c1] = t
+            if key in self._tiles:
+                out[r0:r1, c0:c1] = self._tiles[key]
+            else:
+                self._attach_tile(key, out=out[r0:r1, c0:c1])
         return out
 
     def free(self, handle: ResidentHandle) -> None:
@@ -402,8 +406,11 @@ class CMMSession:
             raise ValueError(f"resident handle #{handle.hid} does not "
                              f"belong to this session")
 
-    def _attach_tile(self, key) -> np.ndarray:
-        """Read one tile out of a worker arena segment (cluster backends)."""
+    def _attach_tile(self, key, out: Optional[np.ndarray] = None
+                     ) -> np.ndarray:
+        """Read one tile out of a worker arena segment (cluster backends).
+        With ``out`` the segment streams straight into the caller's
+        buffer (one copy); without it a fresh tile-sized copy returns."""
         node, sname, dt = self._segs[key]
         from ..exec.cluster import _attach_shm
         hid, i, j = key
@@ -413,6 +420,9 @@ class CMMSession:
         seg = _attach_shm(sname)
         try:
             view = np.ndarray(shp, dtype=np.dtype(dt), buffer=seg.buf)
+            if out is not None:
+                np.copyto(out, view)
+                return out
             return view.copy()
         finally:
             seg.close()

@@ -29,6 +29,7 @@ from .graph import Task, TaskGraph, TaskKind
 from .heft import Schedule, edge_bytes
 from .machine import ClusterSpec
 from .timemodel import CostCache, TimeModel
+from ..runtime.wire import BCAST_MIN_FANOUT, broadcast_tree
 
 
 @dataclass
@@ -149,6 +150,11 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
         defaultdict(list)
     xseq = itertools.count()
     in_flight: Set[Tuple[Tuple[int, int], int]] = set()
+    # relay plan for fan-out edges: (key, relay node) -> child nodes whose
+    # hop starts when the relay's own copy lands (same deterministic tree
+    # shape as the executors' broadcast path, so tree depth is priced)
+    relay_children: Dict[Tuple[Tuple[int, int], int], List[int]] = {}
+    relay_prio: Dict[Tuple[Tuple[int, int], int], int] = {}
 
     events: List[Tuple[float, int, str, object]] = []
     seq = itertools.count()
@@ -169,6 +175,7 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
         src = node_of[tid]
         if t.out is not None:
             cache.put(src, (tid, t.out.tensor), t.out.bytes)
+        new_dsts: List[Tuple[int, int, Tuple]] = []   # (dst, nbytes, key)
         for s in sorted(t.succs, key=lambda x: prio[x]):
             st = g.tasks[s]
             nbytes = edge_bytes(g, t, st)
@@ -184,13 +191,35 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
                     if (key, dst) not in in_flight:
                         cache.misses += 1
                         in_flight.add((key, dst))
-                        heapq.heappush(
-                            pending_xfers,
-                            (prio[s], next(xseq),
-                             Transfer(key, src, dst, nbytes)))
+                        # succs iterate in prio order -> first waiter is
+                        # the most urgent consumer at this destination
+                        relay_prio[(key, dst)] = prio[s]
+                        new_dsts.append((dst, nbytes, key))
             deps_left[s] -= 1
             if deps_left[s] == 0 and data_left[s] == 0:
                 task_ready(s)
+        if not new_dsts:
+            return
+        if use_cache and len(new_dsts) >= BCAST_MIN_FANOUT:
+            # fan-out edge: relay tree instead of N unicasts — only the
+            # root's hops start now; deeper hops start as relays land
+            key = new_dsts[0][2]
+            nbytes = new_dsts[0][1]
+            tree = broadcast_tree(src, [d for d, _, _ in new_dsts])
+            for parent, kids in tree.items():
+                if parent != src:
+                    relay_children[(key, parent)] = kids
+            for child in tree.get(src, []):
+                heapq.heappush(
+                    pending_xfers,
+                    (relay_prio[(key, child)], next(xseq),
+                     Transfer(key, src, child, nbytes)))
+        else:
+            for dst, nbytes, key in new_dsts:
+                heapq.heappush(
+                    pending_xfers,
+                    (relay_prio[(key, dst)], next(xseq),
+                     Transfer(key, src, dst, nbytes)))
 
     def dispatch(now: float):
         # start feasible transfers in priority order.  Starting a transfer
@@ -224,7 +253,9 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
             free_comm[tr.src] -= 1
             free_comm[tr.dst] -= 1
             tr.start = now
-            tr.end = now + spec.comm_time(tr.nbytes, tr.src, tr.dst)
+            # per-edge codec-aware pricing (degrades to spec.comm_time
+            # while the TimeModel's codec priors are unfitted)
+            tr.end = now + tm.wire_time(tr.nbytes, tr.src, tr.dst, spec)
             push(tr.end, "xfer_done", tr)
         # start ready compute tasks
         for n in range(spec.n_nodes):
@@ -278,6 +309,12 @@ def simulate(g: TaskGraph, sched: Schedule, spec: ClusterSpec, tm: TimeModel,
                 data_left[s] -= 1
                 if deps_left[s] == 0 and data_left[s] == 0:
                     task_ready(s)
+            # the landed copy relays onward to its broadcast children
+            for child in relay_children.pop((tr.key, tr.dst), []):
+                heapq.heappush(
+                    pending_xfers,
+                    (relay_prio.get((tr.key, child), 0), next(xseq),
+                     Transfer(tr.key, tr.dst, child, tr.nbytes)))
         dispatch(now)
 
     makespan = max((iv.end for iv in intervals), default=0.0)

@@ -145,6 +145,16 @@ class TimeModel:
     #: priced separately at ``spill_read_bandwidth`` and the disk write
     #: itself overlaps the next compute)
     checkpoint_write_overhead: float = 1e-3
+    #: wire-codec encode throughput, bytes of *raw* tile per second
+    #: (``runtime.wire`` zlib path — fitted by
+    #: ``profiler.calibrate_compression``).  ``0`` = codec unprofiled/
+    #: disabled: per-edge pricing always chooses ``"raw"`` and the
+    #: transfer path is byte-for-byte the pre-codec one.
+    compress_bandwidth: float = 0.0
+    #: expected raw/compressed size ratio of a typical tile payload under
+    #: the wire codec (data-dependent; fitted on a structured probe tile
+    #: by ``calibrate_compression``).  ``1.0`` = assume incompressible.
+    compression_ratio_prior: float = 1.0
 
     def _model_time(self, task: Task) -> float:
         """Raw interpolation-model prediction for one task (no contention,
@@ -196,6 +206,21 @@ class TimeModel:
                   spec: ClusterSpec) -> float:
         return spec.comm_time(nbytes, src, dst)
 
+    def wire_time(self, nbytes: int, src: int, dst: int,
+                  spec: ClusterSpec) -> float:
+        """Codec-aware edge time: ``min(raw, compress_cpu + compressed
+        transfer)`` under the fitted codec priors.  Degrades exactly to
+        ``spec.comm_time`` while the priors are unfitted, so schedules
+        and simulations are unchanged by default."""
+        base = spec.comm_time(nbytes, src, dst)
+        if (src == dst or nbytes <= 0 or self.compress_bandwidth <= 0.0
+                or self.compression_ratio_prior <= 1.0):
+            return base
+        comp = (nbytes / self.compress_bandwidth
+                + spec.comm_time(int(nbytes / self.compression_ratio_prior),
+                                 src, dst))
+        return min(base, comp)
+
     # -- (de)serialisation --------------------------------------------------
     def to_json(self) -> str:
         return json.dumps({
@@ -212,6 +237,8 @@ class TimeModel:
             "spill_read_bandwidth": self.spill_read_bandwidth,
             "spill_write_bandwidth": self.spill_write_bandwidth,
             "checkpoint_write_overhead": self.checkpoint_write_overhead,
+            "compress_bandwidth": self.compress_bandwidth,
+            "compression_ratio_prior": self.compression_ratio_prior,
             "models": {k: {"family": m.family, "coef": m.coef.tolist()}
                        for k, m in self.models.items()},
         })
@@ -235,6 +262,8 @@ class TimeModel:
             spill_write_bandwidth=d.get("spill_write_bandwidth", 1e9),
             checkpoint_write_overhead=d.get("checkpoint_write_overhead",
                                             1e-3),
+            compress_bandwidth=d.get("compress_bandwidth", 0.0),
+            compression_ratio_prior=d.get("compression_ratio_prior", 1.0),
         )
 
     def save(self, path: str):

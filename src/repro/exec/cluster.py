@@ -71,6 +71,8 @@ from ..core.tiling import assemble, tile_slices
 from ..runtime.spill import (AllocFailInjected, ArenaOverflow, SpillCorrupt,
                              SpillDataLost, SpillMiss, TileSpillStore,
                              run_spill_dir)
+from ..runtime.wire import (BCAST_MIN_FANOUT, broadcast_tree,
+                            choose_wire_codec, decode_tile, encode_tile)
 
 #: chain-of-custody CRC audit (debug aid): when set, workers stamp a
 #: CRC32 on every tile custody transfer (task done, spill, unspill, XFER)
@@ -609,6 +611,15 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
     Without the lease, a reader attaching the acked segment name races
     eviction — under pressure the LRU can cycle the whole arena inside
     the master→consumer round trip, so name-based retries livelock.
+
+    The compressed wire path generalises the lease: ``("pack", ref,
+    codec)`` pins the tile AND stages its encoded payload in a transient
+    wire segment (outside the arena budget), acking ``("packed", node,
+    ref, segname, dtype, codec, comp_nbytes, raw_crc)``; the consumer
+    attaches the staging segment, decodes, and CRC-checks the *decoded*
+    bytes against ``raw_crc`` — bit-identity end to end.  ``("unpack",
+    ref)`` drops one pack lease; the staging segment is destroyed when
+    the last lease on it drops.
     """
     if blas_threads:
         try:
@@ -664,19 +675,40 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
             arena.unpin_all(pins)
 
     def run_xfer(version: int, ref: TileRef, src_name: str,
-                 dtype_str: str) -> None:
+                 dtype_str: str, codec: str = "raw",
+                 comp_nbytes: int = 0, raw_crc=None) -> None:
         arena.pin_all((ref,))
         try:
+            if throttle[0] > 0.0:
+                # a slow node is slow at moving bytes too (straggler
+                # modelling; also gives chaos tests a deterministic
+                # in-flight window)
+                time.sleep(throttle[0])
             remote = _attach_shm(src_name)
             try:
-                src = np.ndarray(ref.shape, dtype=np.dtype(dtype_str),
-                                 buffer=remote.buf)
-                # CRC32 over the payload before and after the copy: a
-                # source segment vanishing or being rebound mid-copy (a
-                # torn read) lands here as a recoverable xfer_fail — the
-                # elastic master retries from a live holder — instead of
-                # silently propagating wrong bytes
-                want = zlib.crc32(src.data) & 0xFFFFFFFF
+                if codec != "raw":
+                    # compressed wire path: the staging segment holds the
+                    # encoded payload; decode locally and verify the CRC
+                    # of the *decoded* bytes against the source's stamp —
+                    # torn reads and codec faults both land as
+                    # recoverable xfer_fail, never as wrong bytes
+                    payload = bytes(remote.buf[:comp_nbytes])
+                    src = decode_tile(payload, ref.shape,
+                                      np.dtype(dtype_str), codec)
+                    want = zlib.crc32(src.data) & 0xFFFFFFFF
+                    if raw_crc is not None and want != raw_crc:
+                        raise RuntimeError(
+                            f"XFER decoded-payload CRC32 mismatch for "
+                            f"{ref}: {want:#010x} != {raw_crc:#010x}")
+                else:
+                    src = np.ndarray(ref.shape, dtype=np.dtype(dtype_str),
+                                     buffer=remote.buf)
+                    # CRC32 over the payload before and after the copy: a
+                    # source segment vanishing or being rebound mid-copy
+                    # (a torn read) lands here as a recoverable xfer_fail
+                    # — the elastic master retries from a live holder —
+                    # instead of silently propagating wrong bytes
+                    want = zlib.crc32(src.data) & 0xFFFFFFFF
                 copied = arena.store(ref, src)
                 got = zlib.crc32(copied.data) & 0xFFFFFFFF
                 if got != want:
@@ -693,6 +725,58 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                       traceback.format_exc()))
         finally:
             arena.unpin_all((ref,))
+
+    #: ref -> [staging seg, lease count, codec, comp_nbytes, raw_crc,
+    #: dtype_str] — wire payloads staged for outgoing compressed XFERs.
+    #: Transient buffers outside the arena budget; each "pack" lease
+    #: also pins the source tile, so the staged bytes stay authoritative.
+    packs: Dict[TileRef, list] = {}
+    pack_ids = itertools.count()
+
+    def run_pack(ref: TileRef, codec: str) -> None:
+        from multiprocessing import shared_memory
+        arena.pin_all((ref,))
+        try:
+            ent = packs.get(ref)
+            if ent is None:
+                arr = arena.get(ref)     # faults the tile hot if cold
+                payload = encode_tile(arr, codec)
+                raw_crc = zlib.crc32(np.ascontiguousarray(arr).data) \
+                    & 0xFFFFFFFF
+                with _TRACK_LOCK:
+                    seg = shared_memory.SharedMemory(
+                        create=True, size=max(len(payload), 1),
+                        name=f"{prefix}w{node}_{next(pack_ids)}")
+                seg.buf[:len(payload)] = payload
+                ent = packs[ref] = [seg, 0, codec, len(payload), raw_crc,
+                                    arr.dtype.str]
+            ent[1] += 1
+            outq.put(("packed", node, ref, ent[0].name, ent[5], ent[2],
+                      ent[3], ent[4]))
+        except KeyError:
+            arena.unpin_all((ref,))
+            if ref not in freed_refs:
+                outq.put(("tile_lost", node, ref, traceback.format_exc()))
+        except SpillDataLost:
+            arena.unpin_all((ref,))
+            outq.put(("tile_lost", node, ref, traceback.format_exc()))
+        except ArenaOverflow:
+            # transient, like "hold": the master re-sends (bounded)
+            arena.unpin_all((ref,))
+            outq.put(("hold_fail", node, ref))
+        except BaseException:
+            arena.unpin_all((ref,))
+            outq.put(("error", node, -1, traceback.format_exc()))
+
+    def drop_pack(ref: TileRef) -> None:
+        ent = packs.get(ref)
+        if ent is None:                 # pragma: no cover - defensive
+            return
+        ent[1] -= 1
+        arena.unpin_all((ref,))
+        if ent[1] <= 0:
+            _release_seg(ent[0])
+            del packs[ref]
 
     def run_fault(ref: TileRef) -> None:
         """Master-requested fault-in of a spilled tile (it wants to XFER
@@ -732,7 +816,8 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
             if op == "task":
                 pool.submit(run_task, msg[1])
             elif op == "xfer":
-                pool.submit(run_xfer, msg[1], msg[2], msg[3], msg[4])
+                pool.submit(run_xfer, msg[1], msg[2], msg[3], msg[4],
+                            *msg[5:])
             elif op == "free":
                 freed_refs.add(msg[1])
                 arena.free(msg[1])
@@ -771,6 +856,13 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                     outq.put(("error", node, -1, traceback.format_exc()))
             elif op == "release":
                 arena.unpin_all((msg[1],))
+            elif op == "pack":
+                # compressed-wire lease: pin + stage encoded payload.
+                # Runs inline (like "hold") so concurrent pack requests
+                # for one ref can't race the staging-segment create.
+                run_pack(msg[1], msg[2])
+            elif op == "unpack":
+                drop_pack(msg[1])
             elif op == "fault":
                 # master needs a spilled tile hot (XFER source / gather)
                 pool.submit(run_fault, msg[1])
@@ -805,6 +897,9 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                 arena.arm_alloc_fail(msg[1])
             elif op == "stop":
                 break
+    for ent in packs.values():          # transient wire buffers
+        _release_seg(ent[0])
+    packs.clear()
     stats = arena.stats()
     arena.destroy()
     outq.put(("stats", node, stats, pid))
@@ -834,12 +929,30 @@ class ClusterExecutor:
                  free_buffers: bool = True,
                  mp_context: Optional[str] = None,
                  timeout: float = 300.0,
-                 session: bool = False):
+                 session: bool = False,
+                 timemodel: Optional[TimeModel] = None,
+                 wire_codec: Optional[str] = None,
+                 broadcast: bool = True,
+                 stream_gather: bool = True):
         self.workers_per_node = workers_per_node
         self.free_buffers = free_buffers
         self.mp_context = mp_context
         self.timeout = timeout
         self.session = session
+        #: prices the per-edge codec choice (``choose_wire_codec``); with
+        #: no model the auto choice degrades to "raw"
+        self.timemodel = timemodel
+        #: None = auto (priced per edge); "raw"/"zlib" force one codec on
+        #: every cross-node XFER (conformance tests, benchmarks)
+        self.wire_codec = wire_codec
+        #: route fan-out edges through a relay tree instead of N unicasts
+        self.broadcast = broadcast
+        #: copy gathered result tiles out as their TAKECOPY lands instead
+        #: of barrier-waiting the whole run (time-to-first-tile).  Only
+        #: active while the master arena is unbounded — a bounded arena
+        #: could evict mid-attach, and the barrier path's lease already
+        #: handles that case.
+        self.stream_gather = stream_gather
         self.stats: Dict[str, object] = {}
         self._procs: Optional[List] = None
         self._inqs: Optional[List] = None
@@ -884,6 +997,19 @@ class ClusterExecutor:
         xfer_by_producer: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
         for (p, _src, dst, nbytes) in sched.xfers(g):
             xfer_by_producer[p].append((dst, nbytes))
+        # route each producer's fan-out through a relay tree (parent node
+        # -> child nodes); below the fan-out threshold the "tree" is the
+        # flat unicast star rooted at the producer's node
+        bcast_children: Dict[int, Dict[int, List[int]]] = {}
+        xfer_nbytes: Dict[int, int] = {}
+        for p, dsts in xfer_by_producer.items():
+            src = node_of[p]
+            xfer_nbytes[p] = dsts[0][1]
+            dstns = [d for (d, _nb) in dsts]
+            min_fanout = BCAST_MIN_FANOUT if self.broadcast \
+                else len(dstns) + 1
+            bcast_children[p] = broadcast_tree(src, dstns,
+                                               min_fanout=min_fanout)
         waiters: Dict[Tuple[int, int], List[int]] = defaultdict(list)
         xfers_left: Dict[int, int] = defaultdict(int)
         reads: Dict[Tuple[int, TileRef], int] = defaultdict(int)
@@ -897,8 +1023,13 @@ class ClusterExecutor:
                 if node_of[p] != n and edge_bytes(g, g.tasks[p], t) > 0:
                     waiters[(p, n)].append(t.tid)
                     xfers_left[t.tid] += 1
-        for p, dsts in xfer_by_producer.items():
-            reads[(node_of[p], g.tasks[p].out)] += len(dsts)
+        # every relay hop reads its parent's copy: the parent's tile must
+        # stay alive until each child's copy lands (freed per-hop via
+        # dec_read at xfer_done)
+        for p, tree in bcast_children.items():
+            out = g.tasks[p].out
+            for parent, kids in tree.items():
+                reads[(parent, out)] += len(kids)
         master_node = spec.master
         # gather holds for takecopy'd roots; retention holds pin each
         # persisted tile on its final producer's node so end-of-run
@@ -913,6 +1044,21 @@ class ClusterExecutor:
                     home = node_of[rs.producers[r]]
                     reads[(home, r)] += 1
                     retained_refs[r] = (rs.uid, home)
+        # streaming-gather targets: result tiles copied out as their
+        # TAKECOPY lands, overlapped with remaining compute.  Active only
+        # while the master arena is unbounded — the reads hold keeps each
+        # tile's segment alive until the streamed copy succeeds, so the
+        # lease-free attach cannot race a free (and the barrier path
+        # remains the fallback for anything not streamed)
+        stream_on = self.stream_gather and spec.mem_at(master_node) is None
+        gather_uid: Dict[TileRef, int] = {}
+        gvals: Dict[int, Dict[TileRef, np.ndarray]] = {}
+        for rs in rsets:
+            if rs.gather:
+                gvals[rs.uid] = {}
+                if stream_on:
+                    for r in rs.tiles:
+                        gather_uid[r] = rs.uid
 
         # -- spawn one worker process per node (session: reuse) -------------
         if self.session and self._procs is not None:
@@ -954,7 +1100,11 @@ class ClusterExecutor:
         node_pids: Dict[int, int] = {}
         deps_left = {t.tid: len(t.preds) for t in g}
         dispatched = set()
-        counters = {"xfers": 0, "xfer_bytes": 0}
+        counters = {"xfers": 0, "xfer_bytes": 0, "wire_bytes": 0,
+                    "xfers_compressed": 0, "relay_hops": 0,
+                    "gather_streamed_tiles": 0}
+        t_exec0 = time.perf_counter()
+        gather_t_first = [None]          # seconds to first gathered tile
 
         def dec_read(n: int, r: TileRef) -> None:
             if not self.free_buffers:
@@ -968,6 +1118,7 @@ class ClusterExecutor:
                 spilled.discard(key)
                 fault_pending.discard(key)
                 parked_xfers.pop(key, None)
+                parked_packs.pop(key, None)
                 inqs[n].put(("free", r))
             else:
                 reads[key] = c - 1
@@ -1006,10 +1157,19 @@ class ClusterExecutor:
         spilled: set = set()
         fault_pending: set = set()
         held_acks: set = set()
-        #: dispatched XFER attempts (version, dst) holding a source lease
-        leased_attempts: set = set()
+        #: dispatched XFER attempts holding a source lease:
+        #: (version, dst) -> (lease node, codec) — the release/unpack
+        #: must go to the hop's actual source, which under a relay tree
+        #: is not necessarily the producer's node
+        leased_attempts: Dict[Tuple[int, int], Tuple[int, str]] = {}
+        #: (version, dst) -> hop source node (relay parent) for retries
+        #: and per-hop reader accounting
+        xfer_parent: Dict[Tuple[int, int], int] = {}
         parked_xfers: Dict[Tuple[int, TileRef],
                            List[Tuple[int, int]]] = defaultdict(list)
+        #: like parked_xfers but for the compressed (pack) lease path
+        parked_packs: Dict[Tuple[int, TileRef],
+                           List[Tuple[int, int, str]]] = defaultdict(list)
         xfer_retries: Dict[Tuple[int, int], int] = defaultdict(int)
         hold_retries: Dict[Tuple[int, TileRef], int] = defaultdict(int)
         task_ao_retries: Dict[int, int] = defaultdict(int)
@@ -1025,6 +1185,86 @@ class ClusterExecutor:
                 inqs[n].put(("fault", ref))
 
         cur_crc: Dict[Tuple[int, TileRef], int] = {}
+
+        def wire_codec_for(nbytes: int, src_n: int, dst_n: int) -> str:
+            if src_n == dst_n:
+                return "raw"
+            if self.wire_codec is not None:
+                return self.wire_codec
+            if self.timemodel is None:
+                return "raw"
+            return choose_wire_codec(nbytes, spec.bandwidth(src_n, dst_n),
+                                     self.timemodel)
+
+        def send_xfer(version: int, ref: TileRef, src_n: int, dst_n: int,
+                      retry: bool = False) -> None:
+            """Dispatch one XFER hop src_n -> dst_n of ``version``'s out
+            tile, choosing the priced wire codec per edge.  Compressed
+            hops and hops out of a bounded arena go through a source-side
+            lease (pack/hold); retries always lease."""
+            nbytes = xfer_nbytes.get(version, ref.bytes)
+            codec = wire_codec_for(nbytes, src_n, dst_n)
+            xfer_parent[(version, dst_n)] = src_n
+            if not retry:
+                counters["xfers"] += 1
+                counters["xfer_bytes"] += nbytes
+                if src_n != node_of[version]:
+                    counters["relay_hops"] += 1
+            if codec != "raw":
+                if not retry:
+                    counters["xfers_compressed"] += 1
+                parked_packs[(src_n, ref)].append((version, dst_n, codec))
+                inqs[src_n].put(("pack", ref, codec))
+            elif retry or spec.mem_at(src_n) is not None:
+                # bounded source arena: dispatching the done message's
+                # segment name directly races eviction — lease the tile
+                # instead (pin on the source, released at xfer_done)
+                if not retry:
+                    counters["wire_bytes"] += nbytes
+                parked_xfers[(src_n, ref)].append((version, dst_n))
+                inqs[src_n].put(("hold", ref))
+            else:
+                counters["wire_bytes"] += nbytes
+                sname, sdt = seg_info[(src_n, ref)]
+                inqs[dst_n].put(("xfer", version, ref, sname, sdt))
+
+        def release_lease(version: int, dst_n: int, ref: TileRef) -> None:
+            ent = leased_attempts.pop((version, dst_n), None)
+            if ent is not None:
+                src_n, codec = ent
+                inqs[src_n].put(("release", ref) if codec == "raw"
+                                else ("unpack", ref))
+
+        def try_stream_gather(r: TileRef) -> None:
+            """Copy one landed result tile out during the main loop.  Any
+            failure falls back silently to the barrier gather (its reads
+            hold is only dropped on success)."""
+            uid = gather_uid.get(r)
+            if uid is None or r in gvals[uid]:
+                return
+            if (master_node, r) in spilled:
+                return
+            ent = seg_info.get((master_node, r))
+            if ent is None:             # pragma: no cover - defensive
+                return
+            try:
+                seg = _attach_shm(ent[0])
+            except FileNotFoundError:   # pragma: no cover - defensive
+                return
+            try:
+                view = np.ndarray(r.shape, dtype=np.dtype(ent[1]),
+                                  buffer=seg.buf)
+                val = view.copy()
+            finally:
+                seg.close()
+            if _CRCAUDIT:
+                crc_check("gather", master_node, r,
+                          zlib.crc32(val.data) & 0xFFFFFFFF)
+            gvals[uid][r] = val
+            counters["gather_streamed_tiles"] += 1
+            if gather_t_first[0] is None:
+                gather_t_first[0] = time.perf_counter() - t_exec0
+            dec_read(master_node, r)
 
         def crc_check(stage: str, n: int, ref: TileRef, crc) -> None:
             if crc is None:
@@ -1051,19 +1291,10 @@ class ClusterExecutor:
                 exec_nodes[tid] = n
                 node_pids[n] = pid
                 done += 1
-                for (dst, nbytes) in xfer_by_producer.get(tid, ()):
-                    counters["xfers"] += 1
-                    counters["xfer_bytes"] += nbytes
-                    if spec.mem_at(n) is not None:
-                        # bounded source arena: dispatching the done
-                        # message's segment name directly races eviction
-                        # — lease the tile instead (pin on the source,
-                        # released at xfer_done)
-                        parked_xfers[(n, t.out)].append((tid, dst))
-                        inqs[n].put(("hold", t.out))
-                    else:
-                        sname, sdt = seg_info[(n, t.out)]
-                        inqs[dst].put(("xfer", tid, t.out, sname, sdt))
+                # root hops of the (possibly flat) relay tree; deeper
+                # hops start as each relay's copy lands (xfer_done)
+                for child in bcast_children.get(tid, {}).get(n, ()):
+                    send_xfer(tid, t.out, n, child)
                 for s in sorted(t.succs):
                     deps_left[s] -= 1
                     maybe_dispatch(s)
@@ -1071,24 +1302,29 @@ class ClusterExecutor:
                     dec_read(n, r)
                 if t.kind in _CHAIN_KINDS and t.out is not None:
                     dec_read(n, t.out)
+                if t.kind is TaskKind.TAKECOPY and n == master_node \
+                        and phase[0] == "run":
+                    try_stream_gather(t.out)
             elif kind == "xfer_done":
                 _, n, version, ref, seg, dt, *rest = msg
                 seg_info[(n, ref)] = (seg, dt)
-                if (version, n) in leased_attempts:
-                    # the copy landed: release the source-side lease
-                    leased_attempts.discard((version, n))
-                    inqs[node_of[version]].put(("release", ref))
+                # the copy landed: release the hop source's lease
+                release_lease(version, n, ref)
+                hop_src = xfer_parent.pop((version, n), node_of[version])
                 if rest and rest[0] is not None:
-                    src_crc = cur_crc.get((node_of[version], ref))
+                    src_crc = cur_crc.get((hop_src, ref))
                     if src_crc is not None and src_crc != rest[0]:
                         import sys as _sys
                         print(f"CRCAUDIT MISMATCH stage=xfer "
-                              f"src={node_of[version]} dst={n} ref={ref} "
+                              f"src={hop_src} dst={n} ref={ref} "
                               f"src_crc={src_crc:#010x} "
                               f"dst_crc={rest[0]:#010x}",
                               file=_sys.stderr, flush=True)
                     cur_crc[(n, ref)] = rest[0]
-                dec_read(node_of[version], g.tasks[version].out)
+                dec_read(hop_src, g.tasks[version].out)
+                # the landed copy relays onward to its broadcast children
+                for child in bcast_children.get(version, {}).get(n, ()):
+                    send_xfer(version, ref, n, child)
                 for s in waiters.pop((version, n), ()):
                     xfers_left[s] -= 1
                     maybe_dispatch(s)
@@ -1116,12 +1352,22 @@ class ClusterExecutor:
                 held_acks.add((n, ref))
                 hold_retries.pop((n, ref), None)
                 for (version, dstn) in parked_xfers.pop((n, ref), ()):
-                    leased_attempts.add((version, dstn))
+                    leased_attempts[(version, dstn)] = (n, "raw")
                     inqs[dstn].put(("xfer", version, ref, sname, dt))
+            elif kind == "packed":
+                # compressed-wire lease granted: the staging segment
+                # holds the encoded payload, pinned until "unpack"
+                _, n, ref, sname, dt, codec, comp_nbytes, raw_crc = msg
+                hold_retries.pop((n, ref), None)
+                for (version, dstn, _c) in parked_packs.pop((n, ref), ()):
+                    counters["wire_bytes"] += comp_nbytes
+                    leased_attempts[(version, dstn)] = (n, codec)
+                    inqs[dstn].put(("xfer", version, ref, sname, dt,
+                                    codec, comp_nbytes, raw_crc))
             elif kind == "hold_fail":
                 # transient source-side overflow faulting the tile hot:
-                # re-send the hold — each round trip is natural backoff
-                # while in-flight tasks drain their pins
+                # re-send the hold/pack — each round trip is natural
+                # backoff while in-flight tasks drain their pins
                 _, n, ref = msg
                 hold_retries[(n, ref)] += 1
                 if hold_retries[(n, ref)] > 100:
@@ -1131,7 +1377,10 @@ class ClusterExecutor:
                             f"XFER/gather lease after "
                             f"{hold_retries[(n, ref)]} attempts (arena "
                             f"persistently full of pinned tiles)")
-                inqs[n].put(("hold", ref))
+                if parked_packs.get((n, ref)):
+                    inqs[n].put(("pack", ref, parked_packs[(n, ref)][0][2]))
+                else:
+                    inqs[n].put(("hold", ref))
             elif kind == "tile_lost":
                 # static membership has no lineage machinery to recompute
                 # a lost intermediate — structured failure, not an OOM
@@ -1177,12 +1426,10 @@ class ClusterExecutor:
                 # arena overflow — re-request through a source fault-in
                 # (its ack round-trip doubles as backoff), bounded;
                 # anything else is a broken run
-                src = node_of[version]
-                if (version, dstn) in leased_attempts:
-                    # the failed attempt's lease is still held — drop it
-                    # (the retry takes a fresh one)
-                    leased_attempts.discard((version, dstn))
-                    inqs[src].put(("release", ref))
+                src = xfer_parent.get((version, dstn), node_of[version])
+                # the failed attempt's lease is still held — drop it
+                # (the retry takes a fresh one)
+                release_lease(version, dstn, ref)
                 xfer_retries[(version, dstn)] += 1
                 if xfer_retries[(version, dstn)] > 3:
                     if "ArenaOverflow" in tb:
@@ -1194,8 +1441,7 @@ class ClusterExecutor:
                         f"cluster XFER of {ref} (version {version}) "
                         f"failed on node {dstn} after "
                         f"{xfer_retries[(version, dstn)]} attempts:\n{tb}")
-                parked_xfers[(src, ref)].append((version, dstn))
-                inqs[src].put(("hold", ref))
+                send_xfer(version, ref, src, dstn, retry=True)
 
         try:
             for t in g.sources():
@@ -1211,8 +1457,11 @@ class ClusterExecutor:
             for rs in rsets:
                 if not rs.gather:
                     continue
-                vals: Dict[TileRef, np.ndarray] = {}
+                vals: Dict[TileRef, np.ndarray] = gvals.get(rs.uid, {})
                 for r in rs.tiles:
+                    if r in vals:       # already streamed mid-run
+                        gather_bytes += r.bytes
+                        continue
                     leased = spec.mem_at(master_node) is not None
                     if leased:
                         # lease the tile hot for the attach (same race
@@ -1256,8 +1505,12 @@ class ClusterExecutor:
                         if leased:
                             inqs[master_node].put(("release", r))
                     gather_bytes += r.bytes
+                    if gather_t_first[0] is None:
+                        gather_t_first[0] = time.perf_counter() - t_exec0
                     dec_read(master_node, r)
                 outs.append(assemble(vals, rs.shape, plan.tile, rs.uid))
+
+            gather_t_full = time.perf_counter() - t_exec0
 
             # -- retention: persisted tiles move to the session store -------
             phase[0] = "retention"
@@ -1344,7 +1597,18 @@ class ClusterExecutor:
             "nodes": spec.n_nodes,
             "xfers": counters["xfers"],
             "xfer_bytes": counters["xfer_bytes"],
+            "wire_bytes": counters["wire_bytes"],
+            "xfers_compressed": counters["xfers_compressed"],
+            "relay_hops": counters["relay_hops"],
             "gather_bytes": gather_bytes,
+            "gather_streamed_tiles": counters["gather_streamed_tiles"],
+            "gather_first_tile_s": gather_t_first[0],
+            "gather_full_result_s": gather_t_full,
+            # must be 0 after a clean run: an open lease is a stranded
+            # source pin on some worker's (possibly bounded) arena
+            "stale_leases": len(leased_attempts)
+            + sum(len(v) for v in parked_xfers.values())
+            + sum(len(v) for v in parked_packs.values()),
             "retained_tiles": retained,
             "peak_buffer_bytes": sum(s["peak_buffer_bytes"]
                                      for s in node_stats.values()),

@@ -70,6 +70,7 @@ from ..core.tiling import assemble, result_sets_of
 from ..runtime.membership import (DEATH, RECOVER, STRAGGLE,
                                   MembershipConfig, MembershipService)
 from ..runtime.spill import run_spill_dir
+from ..runtime.wire import BCAST_MIN_FANOUT, choose_wire_codec
 from .cluster import _CHAIN_KINDS, _RUN_IDS, _attach_shm, _node_worker
 
 
@@ -142,7 +143,10 @@ class ElasticClusterExecutor:
                  speculate: bool = True,
                  gc_interval: int = 64,
                  blas_threads: Optional[int] = None,
-                 session: bool = False):
+                 session: bool = False,
+                 wire_codec: Optional[str] = None,
+                 broadcast: bool = True,
+                 stream_gather: bool = True):
         self.workers_per_node = workers_per_node
         self.free_buffers = free_buffers
         self.mp_context = mp_context
@@ -153,6 +157,20 @@ class ElasticClusterExecutor:
         self.respawn_dead = respawn_dead
         self.speculate = speculate
         self.gc_interval = max(1, gc_interval)
+        #: wire codec policy: None prices each cross-node edge with the
+        #: TimeModel's compression terms; "raw"/"zlib" force it (tests,
+        #: benchmarks).  Compressed XFERs ride the worker's pack/unpack
+        #: lease, so the staged payload stays authoritative end to end.
+        self.wire_codec = wire_codec
+        #: cap each (holder, tile) fan-out so wide consumer sets drain as
+        #: a dynamic relay tree: landed copies become sources themselves
+        #: (and re-root for free when a relay node dies — the routing is
+        #: re-evaluated per dispatch scan)
+        self.broadcast = broadcast
+        #: copy gathered result tiles off the master arena the moment
+        #: their TAKECOPY lands (overlapped with the remaining compute)
+        #: instead of in one barrier pass after the run
+        self.stream_gather = stream_gather
         #: per-worker BLAS thread cap (machine model: threads_per_worker);
         #: None leaves the BLAS pool at its library default
         self.blas_threads = blas_threads
@@ -371,6 +389,31 @@ class ElasticClusterExecutor:
         xfer_retry_at: Dict[Tuple[int, TileRef], float] = {}
         task_retry_at: Dict[int, float] = {}
         task_retries: Dict[int, int] = defaultdict(int)
+        #: leased transfer path (bounded-arena sources and every
+        #: compressed edge): the holder pins the tile ("hold") or pins +
+        #: stages the encoded payload ("pack") until the master releases
+        #: it.  pending_lease holds consumers waiting on the holder's
+        #: ack — one entry per request, each ack dispatches exactly one
+        #: (acks and worker-side pins are one-to-one, so the release
+        #: count always balances).  leases maps a dispatched XFER's
+        #: destination back to the (holder, codec) pin it must release.
+        pending_lease: Dict[Tuple[int, TileRef],
+                            List[Tuple[int, int, str]]] = defaultdict(list)
+        leases: Dict[Tuple[int, TileRef], Tuple[int, str]] = {}
+        #: per-(holder, tile) concurrent-reader cap — beyond it, waiting
+        #: consumers defer until a landed copy can serve as a relay source
+        relay_cap = (BCAST_MIN_FANOUT - 1) if self.broadcast else (1 << 30)
+        #: streamed-gather staging: result tiles copied off the master
+        #: arena as their TAKECOPY lands (master arena must be unbounded —
+        #: a bounded one could evict the segment mid-attach)
+        gather_refs: Dict[TileRef, int] = {}
+        for _rs in rsets:
+            if _rs.gather:
+                for _r in _rs.tiles:
+                    gather_refs[_r] = _rs.uid
+        gstreamed: Dict[TileRef, np.ndarray] = {}
+        gather_t_first: List[Optional[float]] = [None]
+        t_exec0 = time.perf_counter()
         #: remaining XFER requests to poison (ChaosEvent.drop_xfer)
         chaos_drop = [0]
         spec_pending: Dict[int, int] = {}        # speculative node per tid
@@ -447,14 +490,90 @@ class ElasticClusterExecutor:
         def pick_holder(version: int, ref: TileRef) -> Optional[int]:
             """Deterministic live holder of this tile version whose copy
             is safe to read (no in-progress write on that arena slot and
-            not currently evicted to the spill tier)."""
+            not currently evicted to the spill tier).  Among candidates
+            the least-read one wins, so wide fan-outs spread over landed
+            copies — the dynamic half of the relay tree."""
+            best = None
             for k in ms.alive_nodes():
                 ent = avail.get((k, ref))
                 if ent is not None and ent[0] == version \
                         and (k, ref) not in write_busy \
                         and (k, ref) not in spilled:
-                    return k
-            return None
+                    load = src_busy.get((k, ref), 0)
+                    if best is None or load < best[0]:
+                        best = (load, k)
+            return None if best is None else best[1]
+
+        def wire_codec_for(nbytes: int, src_n: int, dst_n: int) -> str:
+            """Per-edge codec choice: forced by ``wire_codec``, else
+            priced against the TimeModel's fitted compression terms
+            (raw unless the model predicts encode + smaller-payload
+            transfer beats the raw transfer on this link)."""
+            if src_n == dst_n:
+                return "raw"
+            if self.wire_codec is not None:
+                return self.wire_codec
+            return choose_wire_codec(
+                nbytes, cur_spec.bandwidth(src_n, dst_n), tm)
+
+        def release_pin(holder: int, ref: TileRef, codec: str) -> None:
+            """Drop one worker-side lease pin (hold or staged pack)."""
+            if ms.is_alive(holder) and self._inqs.get(holder) is not None:
+                self._inqs[holder].put(("release", ref) if codec == "raw"
+                                       else ("unpack", ref))
+
+        def dispatch_leased(holder: int, ref: TileRef, ver: int,
+                            dstn: int, codec: str, sname: str, sdt: str,
+                            comp_nbytes: int, raw_crc) -> None:
+            """The holder acked one lease pin: forward the XFER to its
+            consumer — or release the pin right away if the consumer
+            departed (or was re-routed) while the ack was in flight.
+            That immediate release is the mid-copy-death fix: a dead
+            consumer must never strand a source pin on a bounded arena."""
+            if not alive(dstn) \
+                    or xfer_inflight.get((dstn, ref)) != (ver, holder):
+                release_pin(holder, ref, codec)
+                cnt["leases_released_on_death"] += 1
+                return
+            if chaos_drop[0] > 0:
+                chaos_drop[0] -= 1
+                cnt["chaos_dropped_xfers"] += 1
+                sname = f"{self._prefix}chaos_dropped"
+            leases[(dstn, ref)] = (holder, codec)
+            if codec == "raw":
+                cnt["wire_bytes"] += ref.bytes
+                self._inqs[dstn].put(("xfer", ver, ref, sname, sdt))
+            else:
+                cnt["wire_bytes"] += comp_nbytes
+                cnt["xfers_compressed"] += 1
+                self._inqs[dstn].put(("xfer", ver, ref, sname, sdt,
+                                      codec, comp_nbytes, raw_crc))
+
+        def fail_pending_lease(n: int, ref: TileRef,
+                               bump_retries: bool) -> None:
+            """The holder cannot serve (hold_fail / tile_lost / death):
+            un-book every waiting consumer so the dispatch scan re-routes
+            them — no xfer_fail will ever arrive for these."""
+            for (ver, dstn, _c) in pending_lease.pop((n, ref), []):
+                write_busy.discard((dstn, ref))
+                ent = xfer_inflight.get((dstn, ref))
+                if ent is not None and ent[1] == n:
+                    del xfer_inflight[(dstn, ref)]
+                if src_busy.get((n, ref), 0) > 0:
+                    src_busy[(n, ref)] -= 1
+                if bump_retries:
+                    xfer_retries[(ver, dstn)] += 1
+                    tries = xfer_retries[(ver, dstn)]
+                    cnt["xfer_retries"] += 1
+                    if tries > self._mcfg.xfer_max_retries:
+                        raise MemoryBudgetExceeded(
+                            n, 0, cur_spec.mem_at(n) or 0,
+                            msg=f"node {n} could not pin {ref} for an "
+                                f"XFER lease after {tries} attempts "
+                                f"(arena too tight to hold the source)")
+                    xfer_retry_at[(dstn, ref)] = time.monotonic() + min(
+                        self._mcfg.retry_backoff_s * (2 ** (tries - 1)),
+                        2.0)
 
         def request_fault(n: int, ref: TileRef) -> None:
             """Ask node ``n`` to fault a spilled tile back into its hot
@@ -519,15 +638,37 @@ class ElasticClusterExecutor:
                                 request_fault(k, ref)
                                 break
                     continue                  # value not yet obtainable
-                sname, sdt = avail[(holder, ref)][1], avail[(holder, ref)][2]
-                if chaos_drop[0] > 0:
-                    # fault injection: poison the request's source segment
-                    # so the destination worker reports xfer_fail and the
-                    # bounded-backoff retry re-issues it for real
-                    chaos_drop[0] -= 1
-                    cnt["chaos_dropped_xfers"] += 1
-                    sname = f"{self._prefix}chaos_dropped"
-                self._inqs[node].put(("xfer", p, ref, sname, sdt))
+                if src_busy.get((holder, ref), 0) >= relay_cap:
+                    # relay fan-out cap: every landed copy becomes a
+                    # source, so deferring here turns an N-wide unicast
+                    # burst into a tree that widens each scan
+                    continue
+                codec = wire_codec_for(ref.bytes, holder, node)
+                if exec_nodes.get(p) not in (None, holder):
+                    cnt["relay_hops"] += 1
+                if codec != "raw" or cur_spec.mem_at(holder) is not None:
+                    # leased path: the holder pins the source (and, when
+                    # compressed, stages the encoded payload) before the
+                    # consumer is told where to copy from — a bounded
+                    # arena can then never evict it mid-copy
+                    pending_lease[(holder, ref)].append((p, node, codec))
+                    self._inqs[holder].put(
+                        ("pack", ref, codec) if codec != "raw"
+                        else ("hold", ref))
+                    cnt["leases"] += 1
+                else:
+                    sname = avail[(holder, ref)][1]
+                    sdt = avail[(holder, ref)][2]
+                    if chaos_drop[0] > 0:
+                        # fault injection: poison the request's source
+                        # segment so the destination worker reports
+                        # xfer_fail and the bounded-backoff retry
+                        # re-issues it for real
+                        chaos_drop[0] -= 1
+                        cnt["chaos_dropped_xfers"] += 1
+                        sname = f"{self._prefix}chaos_dropped"
+                    self._inqs[node].put(("xfer", p, ref, sname, sdt))
+                    cnt["wire_bytes"] += ref.bytes
                 write_busy.add((node, ref))
                 xfer_inflight[(node, ref)] = (p, holder)
                 src_busy[(holder, ref)] += 1
@@ -711,6 +852,20 @@ class ElasticClusterExecutor:
                         src_busy[(src, ref)] -= 1
                 # src == n: the destination worker reports xfer_fail and
                 # the retry path re-routes from a surviving holder
+            # the dead consumer's leased XFERs will never ack: release
+            # their source pins NOW or the holders' bounded arenas keep
+            # the tiles unevictable forever (the mid-copy-death leak)
+            for (dst, ref) in [k for k in leases if k[0] == n]:
+                holder, codec = leases.pop((dst, ref))
+                if alive(holder):
+                    release_pin(holder, ref, codec)
+                    cnt["leases_released_on_death"] += 1
+            for key in [k for k in leases if leases[k][0] == n]:
+                del leases[key]   # holder died: its pins died with it
+            # pending leases ON the dead holder get no ack and no
+            # xfer_fail — un-book their waiters so the scan re-routes
+            for (hn, ref) in [k for k in pending_lease if k[0] == n]:
+                fail_pending_lease(hn, ref, bump_retries=False)
             for tid in list(dispatched):
                 dispatched[tid].discard(n)
             inflight[n] = 0
@@ -720,6 +875,12 @@ class ElasticClusterExecutor:
                 spilled.discard(key)
             for key in [k for k in fault_pending if k[0] == n]:
                 fault_pending.discard(key)
+            # the dead node's failure episodes end with it: drop its
+            # retry counts/backoffs (no future attempt targets it)
+            for key in [k for k in xfer_retries if k[1] == n]:
+                del xfer_retries[key]
+            for key in [k for k in xfer_retry_at if k[0] == n]:
+                del xfer_retry_at[key]
             self._reap_segments(n)
             self._procs[n] = None
             self._inqs[n] = None
@@ -876,6 +1037,34 @@ class ElasticClusterExecutor:
                     return True               # duplicate only adds a copy
                 completed.add(tid)
                 exec_nodes[tid] = n
+                # a successful completion ends this task's failure
+                # episode: reset its retry budget so a LATER unrelated
+                # fault gets the full allowance again
+                task_retries.pop(tid, None)
+                task_retry_at.pop(tid, None)
+                if t.kind is TaskKind.TAKECOPY and n == master \
+                        and seg is not None and t.out in gather_refs \
+                        and t.out not in gstreamed and self.stream_gather \
+                        and cur_spec.mem_at(master) is None \
+                        and (master, t.out) not in spilled:
+                    # streamed gather: assemble the result while the rest
+                    # of the run still computes (unbounded master arena
+                    # only — a bounded one could evict mid-attach)
+                    try:
+                        sh = _attach_shm(seg)
+                        try:
+                            view = np.ndarray(t.out.shape,
+                                              dtype=np.dtype(dt),
+                                              buffer=sh.buf)
+                            gstreamed[t.out] = view.copy()
+                        finally:
+                            sh.close()
+                        cnt["gather_streamed_tiles"] += 1
+                        if gather_t_first[0] is None:
+                            gather_t_first[0] = \
+                                time.perf_counter() - t_exec0
+                    except FileNotFoundError:  # pragma: no cover — the
+                        pass                   # barrier pass still runs
                 if spec_pending.pop(tid, None) == n:
                     cnt["spec_wins"] += 1
                 for s in sorted(t.succs):
@@ -892,6 +1081,13 @@ class ElasticClusterExecutor:
                 ent = xfer_inflight.pop((n, ref), None)
                 if ent is not None and (ent[1], ref) in src_busy:
                     src_busy[(ent[1], ref)] -= 1
+                lease = leases.pop((n, ref), None)
+                if lease is not None:
+                    release_pin(lease[0], ref, lease[1])
+                # the copy landed: close this edge's failure episode so
+                # the NEXT fault on it starts from a fresh retry budget
+                xfer_retries.pop((version, n), None)
+                xfer_retry_at.pop((n, ref), None)
                 avail[(n, ref)] = (version, seg, dt)
             elif kind == "xfer_fail":
                 _, n, version, ref, tb = msg
@@ -899,6 +1095,12 @@ class ElasticClusterExecutor:
                 ent = xfer_inflight.pop((n, ref), None)
                 if ent is not None and (ent[1], ref) in src_busy:
                     src_busy[(ent[1], ref)] -= 1
+                lease = leases.pop((n, ref), None)
+                if lease is not None:
+                    # drop the pin BEFORE the retry re-requests: the
+                    # redispatch takes a fresh lease (possibly from a
+                    # different holder), so the old one must not linger
+                    release_pin(lease[0], ref, lease[1])
                 xfer_retries[(version, n)] += 1
                 tries = xfer_retries[(version, n)]
                 cnt["xfer_retries"] += 1
@@ -918,6 +1120,42 @@ class ElasticClusterExecutor:
                 # hammering the same copy
                 xfer_retry_at[(n, ref)] = time.monotonic() + min(
                     self._mcfg.retry_backoff_s * (2 ** (tries - 1)), 2.0)
+            elif kind == "held":
+                # one lease pin granted (the hold may have faulted the
+                # tile hot under a fresh segment name — rebind it)
+                _, n, ref, seg, dt, *_rest = msg
+                ent0 = avail.get((n, ref))
+                if ent0 is not None:
+                    avail[(n, ref)] = (ent0[0], seg, dt)
+                spilled.discard((n, ref))
+                entries = pending_lease.get((n, ref))
+                if entries:
+                    ver, dstn, _c = entries.pop(0)
+                    if not entries:
+                        del pending_lease[(n, ref)]
+                    dispatch_leased(n, ref, ver, dstn, "raw", seg, dt,
+                                    0, None)
+                else:
+                    # every waiter failed over while this ack was in
+                    # flight — the pin has no consumer, drop it
+                    release_pin(n, ref, "raw")
+            elif kind == "packed":
+                _, n, ref, sname, sdt, codec, comp_nbytes, raw_crc = msg
+                entries = pending_lease.get((n, ref))
+                if entries:
+                    ver, dstn, _c = entries.pop(0)
+                    if not entries:
+                        del pending_lease[(n, ref)]
+                    dispatch_leased(n, ref, ver, dstn, codec, sname, sdt,
+                                    comp_nbytes, raw_crc)
+                else:
+                    release_pin(n, ref, codec)
+            elif kind == "hold_fail":
+                # the holder's arena is too tight to pin the source right
+                # now (no pin was taken): back the waiters off and let
+                # the dispatch scan re-route them
+                _, n, ref = msg
+                fail_pending_lease(n, ref, bump_retries=True)
             elif kind == "spill":
                 spilled.add((msg[1], msg[2]))
             elif kind == "unspill":
@@ -935,6 +1173,7 @@ class ElasticClusterExecutor:
                 _, n, ref, tb = msg
                 spilled.discard((n, ref))
                 fault_pending.discard((n, ref))
+                fail_pending_lease(n, ref, bump_retries=False)
                 ent = avail.pop((n, ref), None)
                 cnt["tiles_lost"] += 1
                 if ent is not None and not value_secured(ent[0]):
@@ -1063,9 +1302,20 @@ class ElasticClusterExecutor:
                         inflight[msg[1]] -= 1
                     elif k in ("xfer_done", "xfer_fail"):
                         xfer_inflight.pop((msg[1], msg[3]), None)
+                        lease = leases.pop((msg[1], msg[3]), None)
+                        if lease is not None:
+                            release_pin(lease[0], msg[3], lease[1])
                         if k == "xfer_done":
                             avail[(msg[1], msg[3])] = \
                                 (msg[2], msg[4], msg[5])
+                    elif k in ("held", "packed"):
+                        # aborting: each ack is one pin — drop it and
+                        # un-book its waiters (the retry run takes fresh
+                        # leases of its own)
+                        fail_pending_lease(msg[1], msg[2],
+                                           bump_retries=False)
+                        release_pin(msg[1], msg[2],
+                                    "raw" if k == "held" else msg[5])
                     elif k == "hb":
                         ms.heartbeat(msg[1])
                     elif k == "error":
@@ -1086,6 +1336,11 @@ class ElasticClusterExecutor:
                                         if key[0] == ev.node]:
                                 del avail[key]
                     wait_for_events(0.02)
+            # any lease still open past the drain deadline must not
+            # outlive this run (workers survive for the session retry)
+            for (_dstn, ref), (holder, codec) in list(leases.items()):
+                release_pin(holder, ref, codec)
+            leases.clear()
             if self.free_buffers:
                 for (n, ref) in list(avail):
                     del avail[(n, ref)]
@@ -1166,6 +1421,12 @@ class ElasticClusterExecutor:
                     continue
                 vals: Dict[TileRef, np.ndarray] = {}
                 for r in rs.tiles:
+                    streamed = gstreamed.pop(r, None)
+                    if streamed is not None:
+                        # already copied out when its TAKECOPY landed
+                        vals[r] = streamed
+                        gather_bytes += r.bytes
+                        continue
                     for _attempt in range(5):
                         ent = avail.get((master, r))
                         if ent is None:  # pragma: no cover — takecopy pins
@@ -1192,6 +1453,9 @@ class ElasticClusterExecutor:
                                               dtype=np.dtype(ent[2]),
                                               buffer=seg.buf)
                             vals[r] = view.copy()
+                            if gather_t_first[0] is None:
+                                gather_t_first[0] = \
+                                    time.perf_counter() - t_exec0
                         finally:
                             seg.close()
                         break
@@ -1201,6 +1465,7 @@ class ElasticClusterExecutor:
                             f"kept vanishing under memory pressure")
                     gather_bytes += r.bytes
                 outs.append(assemble(vals, rs.shape, plan.tile, rs.uid))
+            gather_t_full = time.perf_counter() - t_exec0
 
             # -- retention: persisted tiles into the session store ----------
             # a tile's home is wherever its (canonical) value actually
@@ -1305,10 +1570,25 @@ class ElasticClusterExecutor:
             "dup_done": cnt["dup_done"],
             "xfers": cnt["xfers"],
             "xfer_bytes": cnt["xfer_bytes"],
+            "wire_bytes": cnt["wire_bytes"],
+            "xfers_compressed": cnt["xfers_compressed"],
+            "relay_hops": cnt["relay_hops"],
+            "leases": cnt["leases"],
+            "leases_released_on_death": cnt["leases_released_on_death"],
+            # hygiene audits — both must be 0 after a clean run: an open
+            # lease is a stranded source pin; a surviving retry entry
+            # means a recovered edge/task kept its failure count and
+            # would exhaust its budget early on the NEXT fault
+            "stale_leases": len(leases) + sum(len(v) for v
+                                              in pending_lease.values()),
+            "stale_retry_entries": len(xfer_retries) + len(task_retries),
             "xfer_retries": cnt["xfer_retries"],
             "task_retries": cnt["task_retries"],
             "chaos_dropped_xfers": cnt["chaos_dropped_xfers"],
             "gather_bytes": gather_bytes,
+            "gather_streamed_tiles": cnt["gather_streamed_tiles"],
+            "gather_first_tile_s": gather_t_first[0],
+            "gather_full_result_s": gather_t_full,
             "retained_tiles": retained_count,
             "buffers_freed": sum(s["buffers_freed"]
                                  for s in self._node_stats.values()),

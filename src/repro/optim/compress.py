@@ -30,9 +30,26 @@ def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
+def _error_dtype(dtype) -> "jnp.dtype":
+    """Storage dtype for a parameter's error-feedback buffer: half-width
+    params carry their residual at their own width (an f32 buffer would
+    double the optimiser's memory for bf16/f16 trees for no benefit —
+    the residual is bounded by half a quantisation step, well inside
+    half-precision range); everything else accumulates in f32."""
+    dt = jnp.dtype(dtype)
+    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        return dt
+    return jnp.dtype(jnp.float32)
+
+
 def compress_tree(grads: Dict[str, jax.Array],
                   errors: Optional[Dict[str, jax.Array]] = None):
     """Quantise a gradient tree with error feedback.
+
+    The feedback accumulates in f32 regardless of storage width (adding
+    a half-precision residual at half precision would lose the low bits
+    the feedback exists to preserve); the residual is stored back at the
+    parameter's error width (``_error_dtype``).
 
     Returns (quantised {name: (int8, scale)}, new_errors).
     """
@@ -40,10 +57,10 @@ def compress_tree(grads: Dict[str, jax.Array],
     for k, g in grads.items():
         g32 = g.astype(jnp.float32)
         if errors is not None:
-            g32 = g32 + errors[k]
+            g32 = g32 + errors[k].astype(jnp.float32)
         q, s = quantize_int8(g32)
         deq = dequantize_int8(q, s)
-        new_err[k] = g32 - deq
+        new_err[k] = (g32 - deq).astype(_error_dtype(g.dtype))
         qs[k] = (q, s)
     return qs, new_err
 
@@ -53,5 +70,8 @@ def decompress_tree(qs) -> Dict[str, jax.Array]:
 
 
 def init_errors(grads_like: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    return {k: jnp.zeros(v.shape, jnp.float32)
+    """Zero error-feedback buffers, one per parameter, allocated at each
+    parameter's error width — NOT unconditionally f32 (the old behaviour
+    silently doubled optimiser memory for bf16/f16 trees)."""
+    return {k: jnp.zeros(v.shape, _error_dtype(v.dtype))
             for k, v in grads_like.items()}

@@ -1,0 +1,187 @@
+"""Wire codecs + per-edge transfer pricing for the XFER path.
+
+Every byte that crosses a node boundary flows through one priced,
+instrumented path (ROADMAP item 5).  Three pieces live here:
+
+* **Lossless wire codecs** — byte-level compression applied per-XFER.
+  The repo's bitwise-identity policy is absolute on the tile path, so
+  only *lossless* codecs are admissible here (``zlib`` from the stdlib;
+  the lossy int8 quantizer in ``optim/compress.py`` stays
+  optimizer-only and never touches tile bytes).  ``decode_tile(
+  encode_tile(a)) == a`` bit-for-bit, always.
+
+* **Per-edge pricing** — a codec is worth using on edge ``(src, dst)``
+  exactly when the TimeModel predicts
+
+      compress_cpu + compressed_bytes/bw  <  raw_bytes/bw
+
+  with ``compress_cpu = nbytes / tm.compress_bandwidth`` and
+  ``compressed_bytes = nbytes / tm.compression_ratio_prior``.  Both
+  terms are fitted by the profiler (``calibrate_compression``) and
+  serialized in ``TimeModel.to_json()`` so plan caches invalidate on
+  recalibration.  With the default priors (``compress_bandwidth == 0``)
+  the codec is disabled and every decision degrades to ``"raw"``.
+
+* **Broadcast relay trees** — one-producer-many-consumer edges (common
+  after ``persist()``) are served by a deterministic binary relay tree
+  over ``[src] + sorted(dsts)`` instead of N unicasts, halving the
+  source's serialized send time per doubling of fan-out.  The same
+  ``broadcast_tree`` shape is used by the executors *and* the
+  simulator so ``engine`` auto-selection prices what actually runs.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "WireCodec", "RawCodec", "ZlibCodec", "CODECS", "get_codec",
+    "encode_tile", "decode_tile", "choose_wire_codec", "wire_seconds",
+    "broadcast_tree", "BCAST_MIN_FANOUT",
+]
+
+#: minimum cross-node destination count before a relay tree beats
+#: N unicasts (at 2 destinations the tree *is* two unicasts).
+BCAST_MIN_FANOUT = 3
+
+
+class WireCodec:
+    """Lossless byte codec interface for the tile wire path.
+
+    ``decode(encode(b)) == b`` must hold bit-for-bit for arbitrary
+    ``bytes`` — codecs that cannot guarantee that (lossy quantizers,
+    float truncation) are not admissible here.
+    """
+
+    name: str = "?"
+
+    def encode(self, raw: bytes) -> bytes:
+        raise NotImplementedError
+
+    def decode(self, payload: bytes) -> bytes:
+        raise NotImplementedError
+
+
+class RawCodec(WireCodec):
+    """Identity codec: the uncompressed point-to-point path."""
+
+    name = "raw"
+
+    def encode(self, raw: bytes) -> bytes:
+        return bytes(raw)
+
+    def decode(self, payload: bytes) -> bytes:
+        return bytes(payload)
+
+
+class ZlibCodec(WireCodec):
+    """stdlib zlib at level 1 — the speed-over-ratio end of DEFLATE,
+    the right trade for a 10 Gbps-class link (lz4 is not vendored; the
+    interface is the point, the codec is a plug)."""
+
+    name = "zlib"
+    level = 1
+
+    def encode(self, raw: bytes) -> bytes:
+        return zlib.compress(raw, self.level)
+
+    def decode(self, payload: bytes) -> bytes:
+        return zlib.decompress(payload)
+
+
+#: codec registry — one place a wire codec is named; executors, the
+#: profiler and the benchmarks resolve codec strings through here.
+CODECS: Dict[str, WireCodec] = {
+    RawCodec.name: RawCodec(),
+    ZlibCodec.name: ZlibCodec(),
+}
+
+
+def get_codec(name: str) -> WireCodec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire codec {name!r}; known: {sorted(CODECS)}"
+        ) from None
+
+
+def encode_tile(arr: np.ndarray, codec: str) -> bytes:
+    """Encode a tile's raw bytes for the wire.  Lossless by contract."""
+    a = np.ascontiguousarray(arr)
+    return get_codec(codec).encode(a.tobytes())
+
+
+def decode_tile(payload: bytes, shape: Tuple[int, int], dtype,
+                codec: str) -> np.ndarray:
+    """Decode a wire payload back to the exact tile that was encoded."""
+    raw = get_codec(codec).decode(payload)
+    return np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(shape)
+
+
+def choose_wire_codec(nbytes: int, bw: float, tm) -> str:
+    """Pick the codec for one edge by the TimeModel's pricing rule.
+
+    Returns ``"zlib"`` when ``compress_cpu + compressed_bytes/bw <
+    raw_bytes/bw`` under the fitted priors, else ``"raw"``.  With
+    unfitted priors (``compress_bandwidth <= 0`` or ratio <= 1) the
+    codec can never win and the choice is always ``"raw"`` — existing
+    plans and transfers are byte-for-byte unchanged by default.
+    """
+    if nbytes <= 0 or bw <= 0:
+        return "raw"
+    cbw = getattr(tm, "compress_bandwidth", 0.0)
+    ratio = getattr(tm, "compression_ratio_prior", 1.0)
+    if cbw <= 0.0 or ratio <= 1.0:
+        return "raw"
+    raw_s = nbytes / bw
+    comp_s = nbytes / cbw + (nbytes / ratio) / bw
+    return "zlib" if comp_s < raw_s else "raw"
+
+
+def wire_seconds(nbytes: int, src: int, dst: int, spec, tm) -> float:
+    """Codec-aware seconds for ``nbytes`` over edge ``(src, dst)``.
+
+    The single pricing helper shared by HEFT (``heft_schedule`` *and*
+    ``replan_frontier`` — the two EFT policies must stay mirrored), the
+    discrete-event simulator and ``predict_cluster_makespan``, so
+    ``auto`` executor selection prices exactly the transfer path the
+    executors run.  Identical to ``spec.comm_time`` when the codec
+    priors are unfitted.
+    """
+    base = spec.comm_time(nbytes, src, dst)
+    if src == dst or nbytes <= 0 or tm is None:
+        return base
+    cbw = getattr(tm, "compress_bandwidth", 0.0)
+    ratio = getattr(tm, "compression_ratio_prior", 1.0)
+    if cbw <= 0.0 or ratio <= 1.0:
+        return base
+    comp = nbytes / cbw + spec.comm_time(int(nbytes / ratio), src, dst)
+    return min(base, comp)
+
+
+def broadcast_tree(src: int, dsts: Sequence[int],
+                   min_fanout: int = BCAST_MIN_FANOUT,
+                   ) -> Dict[int, List[int]]:
+    """Deterministic binary relay tree for one fan-out edge.
+
+    Maps each relay node to its children over ``[src] + sorted(dsts)``
+    (node at position ``i`` feeds positions ``2i+1`` and ``2i+2``).
+    Below ``min_fanout`` destinations the "tree" is the flat N-unicast
+    star rooted at ``src`` — a tree of depth one.  The executors follow
+    this shape when routing XFERs and the simulator follows it when
+    pricing them, so the model and the machine agree on every hop.
+    """
+    order = [src] + sorted(set(int(d) for d in dsts) - {src})
+    tree: Dict[int, List[int]] = {}
+    if len(order) - 1 < min_fanout:
+        if len(order) > 1:
+            tree[src] = order[1:]
+        return tree
+    for i, parent in enumerate(order):
+        kids = order[2 * i + 1: 2 * i + 3]
+        if kids:
+            tree[parent] = kids
+    return tree

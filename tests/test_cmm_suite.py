@@ -89,6 +89,27 @@ def test_conformance(workload, tile):
     assert st["tasks_run"] == len(plan.program.graph)
 
 
+@pytest.mark.parametrize("workload", sorted(BENCHMARKS))
+def test_conformance_compressed_wire(workload):
+    """Network-tier conformance leg: with the zlib wire codec FORCED on
+    every cross-node transfer, the cluster backend must stay bitwise
+    identical to local/eager — the tile path admits lossless codecs only
+    (TESTING.md network tier), so compression must never show up in the
+    numbers, only in the wire-byte counters."""
+    expr, plan = _conformance_plan(workload, 16)
+    oracle = expr.eager()
+    local = make_executor("local").execute(plan)
+    np.testing.assert_allclose(local, oracle, rtol=1e-8, atol=1e-10)
+    ex = make_executor("cluster", wire_codec="zlib")
+    out = ex.execute(plan)
+    assert out.dtype == local.dtype
+    assert np.array_equal(local, out), \
+        f"compressed wire diverged bitwise from local on {workload}"
+    if ex.stats["xfers"] > 0:
+        assert ex.stats["xfers_compressed"] > 0
+    assert ex.stats["stale_leases"] == 0
+
+
 def test_suite_spreads_across_heterogeneous_nodes():
     """At least one workload/tile must genuinely use all three nodes —
     otherwise the conformance run would not exercise XFERs at all."""

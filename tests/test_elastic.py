@@ -431,7 +431,11 @@ def test_stall_watchdog_fires_despite_heartbeats():
     plan.schedule.placements[t2.tid] = Placement(0, 0, 1e9, 1e9)
     ex = ElasticClusterExecutor(
         timemodel=TM, timeout=3.0,
-        membership=MembershipConfig(heartbeat_interval_s=0.05))
+        # straggler detection stays off: on a loaded host the idle wedged
+        # run can trip a STRAGGLE sweep first, and the resulting replan
+        # chokes on the deliberately-cyclic graph before the watchdog
+        membership=MembershipConfig(heartbeat_interval_s=0.05,
+                                    straggler_min_tasks=1 << 30))
     with pytest.raises(RuntimeError, match="stalled"):
         ex.execute(plan)
 

@@ -89,6 +89,37 @@ def test_grad_compression_roundtrip():
             rtol=1e-5, atol=1e-6)  # error feedback is exact
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_error_feedback_buffers_match_param_width(dtype):
+    """Error-feedback buffers allocate at the parameter's error width:
+    f32 stays f32, half-width trees carry half-width residuals instead
+    of silently doubling optimiser memory (the old behaviour allocated
+    f32 unconditionally).  Feedback still accumulates in f32 and stays
+    exact at the stored width."""
+    rng = np.random.default_rng(2)
+    g = {"w": jnp.asarray(rng.standard_normal((32, 32)), dtype),
+         "b": jnp.asarray(rng.standard_normal((8,)), dtype)}
+    errs = C.init_errors(g)
+    want = jnp.float32 if dtype == jnp.float32 else dtype
+    for k in g:
+        assert errs[k].dtype == jnp.dtype(want), \
+            f"{k}: error buffer dtype {errs[k].dtype} != {want}"
+        assert errs[k].shape == g[k].shape
+        assert not np.any(np.asarray(errs[k], np.float32))
+    qs, new_err = C.compress_tree(g, errs)
+    deq = C.decompress_tree(qs)
+    for k in g:
+        assert new_err[k].dtype == jnp.dtype(want)
+        # feedback identity at the stored width: g ≈ deq + err within
+        # the error buffer's own precision
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(g[k], np.float32),
+            np.asarray(deq[k], np.float32)
+            + np.asarray(new_err[k], np.float32),
+            rtol=tol, atol=tol)
+
+
 def test_compressed_training_still_learns():
     cfg, plan, step, init_opt, params = _setup(compress_grads=True)
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=4)
