@@ -183,6 +183,11 @@ class CMMEngine:
         #: how many times admission re-planned a too-big plan out-of-core
         #: at a smaller tile
         self.plan_shrinks = 0
+        #: flight recorder: spans + plan of the last ``execute_plan`` call
+        #: (``dump_trace`` / ``drift_report`` consume them)
+        self.last_spans: list = []
+        self.last_plan: Optional[Plan] = None
+        self.last_exec_stats: Dict[str, object] = {}
 
     @classmethod
     def default(cls) -> "CMMEngine":
@@ -462,7 +467,33 @@ class CMMEngine:
         out = executor_obj.execute(plan)
         self.last_exec_stats = dict(executor_obj.stats)
         self.last_exec_stats["executor"] = executor
+        self.last_spans = list(getattr(executor_obj, "spans", []) or [])
+        self.last_plan = plan
         return out
+
+    # -- flight recorder ----------------------------------------------------
+    def dump_trace(self, path: str, include_predicted: bool = False) -> int:
+        """Export the last run's spans as Chrome-trace JSON (load in
+        ``chrome://tracing`` or https://ui.perfetto.dev).  With
+        ``include_predicted`` the simulator's predicted timeline is
+        overlaid on shifted lanes, so drift is visible in the viewer.
+        Returns the number of events written."""
+        spans = list(self.last_spans)
+        if include_predicted and self.last_plan is not None \
+                and self.last_plan.sim is not None:
+            spans += self.last_plan.sim.predicted_spans()
+        from ..runtime.telemetry import export_chrome_trace
+        return len(export_chrome_trace(spans, path)["traceEvents"])
+
+    def drift_report(self, **kw):
+        """Predicted-vs-actual drift over the last run's spans
+        (:func:`repro.core.drift.drift_report` against the last plan)."""
+        if self.last_plan is None:
+            raise RuntimeError("no executed plan to analyse — "
+                               "run execute_plan() first")
+        from .drift import drift_report
+        return drift_report(self.last_spans, self.last_plan,
+                            tm=self.timemodel, **kw)
 
     def choose_executor(self, plan: Plan) -> str:
         """Per-plan executor strategy from predicted makespans (§3.3's

@@ -107,6 +107,16 @@ class Schedule:
                     out.append((tid, src, dst, nbytes))
         return out
 
+    def xfer_index(self, g: "TaskGraph"
+                   ) -> Dict[Tuple[int, int], Tuple[int, int]]:
+        """:meth:`xfers` as a join table: ``(producer tid, dst node) ->
+        (src node, nbytes)``.  This is the oracle measured XFER spans
+        are matched against — the flight-recorder tests assert one XFER
+        span per entry, and the drift report uses it to attribute a
+        span's bytes to the planned edge."""
+        return {(tid, dst): (src, nbytes)
+                for (tid, src, dst, nbytes) in self.xfers(g)}
+
 
 def edge_bytes(g: TaskGraph, u: Task, v: Task) -> int:
     """Bytes flowing along dependency edge u->v.

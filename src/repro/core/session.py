@@ -249,9 +249,19 @@ class CMMSession:
         self._dirty: Set[int] = set()
         self._persists_since_ckpt = 0
         self._ckpt_step = 0
+        #: flight recorder: spans accumulated across every run of this
+        #: session (master lanes + ingested worker lanes), plus a
+        #: master-side tracer for CHECKPOINT spans; ``dump_trace`` exports
+        #: the whole session timeline
+        from ..runtime.telemetry import Tracer
+        self._trace_spans: List = []
+        self._tracer = Tracer(node=-1,
+                              enabled=bool(exec_kw.get("trace", True)))
+        self._last_plan: Optional[Plan] = None
         if checkpoint_dir is not None:
             from ..runtime.durability import TileCheckpointStore
             self._store = TileCheckpointStore(checkpoint_dir)
+            self._store.tracer = self._tracer
             # never renumber over snapshots an earlier incarnation left:
             # snap_<N> publication rmtree's an existing snap_<N>, which
             # would tear shards still referenced by newer manifests
@@ -333,6 +343,36 @@ class CMMSession:
             # for handles that made it into the table: abandoning a
             # half-retained run's outputs is not a durability event.
             self.checkpoint()
+
+    # -- flight recorder ------------------------------------------------------
+    @property
+    def spans(self) -> List:
+        """Every span recorded so far this session: executor spans of all
+        runs plus master-side CHECKPOINT spans (async writes drained in)."""
+        return list(self._trace_spans) + self._tracer.snapshot()
+
+    def dump_trace(self, path: str, include_predicted: bool = False) -> int:
+        """Export the session's accumulated timeline as Chrome-trace JSON
+        (``chrome://tracing`` / https://ui.perfetto.dev).  With
+        ``include_predicted`` the LAST run's simulated timeline is
+        overlaid on shifted lanes.  Returns the number of events."""
+        spans = self.spans
+        if include_predicted and self._last_plan is not None \
+                and self._last_plan.sim is not None:
+            spans += self._last_plan.sim.predicted_spans()
+        from ..runtime.telemetry import export_chrome_trace
+        return len(export_chrome_trace(spans, path)["traceEvents"])
+
+    def drift_report(self, **kw):
+        """Predicted-vs-actual drift of the LAST run in this session
+        (:func:`repro.core.drift.drift_report`): per-node residual ratios
+        and TimeModel terms flagged for recalibration."""
+        if self._last_plan is None:
+            raise RuntimeError("no executed plan to analyse — "
+                               "compute()/persist() first")
+        from .drift import drift_report
+        return drift_report(self.engine.last_spans, self._last_plan,
+                            tm=self.engine.timemodel, **kw)
 
     def close(self) -> Dict[str, object]:
         """Free every live handle, audit the executor arenas for leaks and
@@ -546,6 +586,8 @@ class CMMSession:
             raise
         self._sync_spec()
         self.stats["last_exec"] = dict(self._exec.stats)
+        self._trace_spans.extend(self.engine.last_spans)
+        self._last_plan = plan
 
         for (_idx, h) in new_handles:
             missing = [ij for ij in h.tiles()
@@ -610,6 +652,8 @@ class CMMSession:
         self.engine.execute_plan(plan, executor=self.executor,
                                  executor_obj=self._exec)
         self._sync_spec()
+        self._trace_spans.extend(self.engine.last_spans)
+        self._last_plan = plan
 
     def _recompute(self, handle: ResidentHandle) -> None:
         """Re-derive a lost handle's tiles from its lineage expression,

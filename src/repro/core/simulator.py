@@ -82,6 +82,31 @@ class SimResult:
     def comm_busy_seconds(self) -> float:
         return sum(t.end - t.start for t in self.transfers)
 
+    def predicted_spans(self, lane_offset: int = 100) -> list:
+        """The predicted timeline as flight-recorder spans.
+
+        One ``PRED_EXEC`` span per simulated task interval and one
+        ``PRED_XFER`` per simulated transfer, on the same node (pid)
+        lanes as the measured trace but with worker-slot lanes shifted
+        by ``lane_offset`` — exporting measured + predicted spans into
+        one Chrome trace puts prediction directly under reality for
+        eyeball drift checks, and ``core/drift.py`` computes the
+        residuals the same join implies.
+        """
+        from ..runtime.telemetry import Span
+        out = []
+        for iv in self.intervals:
+            out.append(Span(f"PRED {iv.kind}", "PRED_EXEC", iv.node,
+                            lane_offset + iv.slot, iv.start,
+                            iv.end - iv.start,
+                            {"tid": iv.tid, "kind": iv.kind}))
+        for t in self.transfers:
+            out.append(Span("PRED xfer", "PRED_XFER", t.dst,
+                            lane_offset, t.start, t.end - t.start,
+                            {"tid": t.key[0], "src": t.src,
+                             "nbytes": t.nbytes}))
+        return out
+
     def gantt(self, width: int = 100) -> str:
         """ASCII Gantt chart per (node, slot) lane — the Fig. 3 artefact."""
         if not self.intervals:

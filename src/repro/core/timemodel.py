@@ -17,7 +17,7 @@ bandwidth (the paper's §3.4 fix after the one-worker-only pathology).
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -90,6 +90,14 @@ class PolyModel:
         ss_res = float(((y - pred) ** 2).sum())
         ss_tot = float(((y - y.mean()) ** 2).sum()) or 1.0
         return 1.0 - ss_res / ss_tot
+
+
+#: model terms the drift report (``core/drift.py``) can evidence from
+#: measured spans: ``kernel_time`` from EXEC spans, ``ipc_bandwidth``
+#: from raw XFER spans, ``compress_bandwidth`` from PACK spans, the
+#: spill bandwidths from SPILL/FAULTIN spans.
+DRIFT_TERMS = ("kernel_time", "ipc_bandwidth", "compress_bandwidth",
+               "spill_read_bandwidth", "spill_write_bandwidth")
 
 
 @dataclass
@@ -220,6 +228,28 @@ class TimeModel:
                 + spec.comm_time(int(nbytes / self.compression_ratio_prior),
                                  src, dst))
         return min(base, comp)
+
+    # -- drift recalibration ------------------------------------------------
+    def recalibrated(self, term: str, ratio: float) -> "TimeModel":
+        """Copy of this model with one drift term refitted by an observed
+        actual/predicted time ratio (``core/drift.py``'s suggestion).
+
+        ``kernel_time`` scales every per-kind polynomial by ``ratio``
+        (work took ratio-x the predicted time); bandwidth terms divide
+        by it (time is inversely proportional to throughput).  The
+        original model is untouched — recalibration is an explicit new
+        model, so plan caches keyed on ``to_json()`` invalidate.
+        """
+        if not ratio > 0.0:
+            raise ValueError(f"ratio must be positive, got {ratio}")
+        if term == "kernel_time":
+            models = {k: PolyModel(m.family, m.coef * ratio)
+                      for k, m in self.models.items()}
+            return replace(self, models=models)
+        if term not in DRIFT_TERMS:
+            raise ValueError(f"unknown drift term {term!r}; "
+                             f"known: {DRIFT_TERMS}")
+        return replace(self, **{term: getattr(self, term) / ratio})
 
     # -- (de)serialisation --------------------------------------------------
     def to_json(self) -> str:

@@ -50,6 +50,7 @@ from ..core.lazy import EWISE_FNS, Op, apply_scale, leaf_slice
 from ..core.machine import ClusterSpec
 from ..core.timemodel import CostCache, TimeModel
 from ..core.tiling import assemble, result_sets_of, tile_slices
+from ..runtime.telemetry import NULL_TRACER, Tracer
 
 
 def build_waves(g: TaskGraph) -> List[List[int]]:
@@ -197,11 +198,16 @@ class WaveExecutor:
     ``free_buffers=False`` keeps every slab alive (debugging / benchmarks).
     """
 
-    def __init__(self, backend: str = "numpy", free_buffers: bool = True):
+    def __init__(self, backend: str = "numpy", free_buffers: bool = True,
+                 trace: bool = True):
         if backend not in ("numpy", "pallas"):
             raise ValueError(f"unknown wave backend {backend!r}")
         self.backend = backend
         self.free_buffers = free_buffers
+        #: flight recorder: one EXEC span per batched group call (node 0,
+        #: lane 0 — waves are sequential in this process)
+        self.trace = trace
+        self.spans: List = []
         self.stats: Dict[str, int] = {}
 
     # -- gather helpers ----------------------------------------------------
@@ -363,12 +369,16 @@ class WaveExecutor:
                     t.out is not None:
                 refcnt[t.out] = refcnt.get(t.out, 0) + 1
 
+        tracer = Tracer(node=0, enabled=self.trace) if self.trace \
+            else NULL_TRACER
         tasks_run = 0
-        for wave in waves:
+        for wi, wave in enumerate(waves):
             for (key, tasks) in group_wave(g, wave, dtypes):
-                self._run_group(key[0], tasks, buffers, arena,
-                                leaf_nodes, dtypes, tile,
-                                residency=residency)
+                with tracer.span(key[0].name, cat="EXEC", wave=wi,
+                                 tasks=len(tasks), batched=True):
+                    self._run_group(key[0], tasks, buffers, arena,
+                                    leaf_nodes, dtypes, tile,
+                                    residency=residency)
                 tasks_run += len(tasks)
                 if not self.free_buffers:
                     continue
@@ -406,6 +416,7 @@ class WaveExecutor:
                     residency.retain_local(rs.uid, r.i, r.j, buf)
                     retained += 1
 
+        self.spans = tracer.drain()
         self.stats.update({
             "peak_buffer_bytes": arena.peak_bytes,
             "cur_buffer_bytes": arena.cur_bytes,

@@ -71,6 +71,8 @@ from ..core.tiling import assemble, tile_slices
 from ..runtime.spill import (AllocFailInjected, ArenaOverflow, SpillCorrupt,
                              SpillDataLost, SpillMiss, TileSpillStore,
                              run_spill_dir)
+from ..runtime.telemetry import (MetricsRegistry, Span, Tracer,
+                                 estimate_clock_offset)
 from ..runtime.wire import (BCAST_MIN_FANOUT, broadcast_tree,
                             choose_wire_codec, decode_tile, encode_tile)
 
@@ -181,11 +183,15 @@ class _NodeArena:
         self.retained_bytes = 0
         self.evictions = 0
         self.faults = 0
+        #: flight-recorder hook: the worker sets this once at startup so
+        #: the lazily-created spill store records SPILL/FAULTIN spans
+        self.tracer = None
 
     def _store(self) -> TileSpillStore:
         if self._spill is None:
             d = self._spill_dir or run_spill_dir(self._prefix)
             self._spill = TileSpillStore(d, self._prefix)
+            self._spill.tracer = self.tracer
         return self._spill
 
     def _evictable(self) -> Optional[TileRef]:
@@ -575,7 +581,8 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                  hb_interval: float = 0.0,
                  blas_threads: Optional[int] = None,
                  mem_bytes: Optional[int] = None,
-                 spill_dir: Optional[str] = None) -> None:
+                 spill_dir: Optional[str] = None,
+                 trace: bool = True) -> None:
     """One cluster node: a dispatch-queue loop feeding a thread pool of
     ``nthreads`` compute slots, with tiles in this node's shm arena.
     XFER copies run on the same pool, so they overlap in-flight compute.
@@ -638,6 +645,11 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
     arena = _NodeArena(prefix, node, mem_bytes=mem_bytes,
                        spill_dir=spill_dir,
                        on_spill=_on_spill, on_unspill=_on_unspill)
+    #: flight recorder: spans buffer here and piggyback on the done /
+    #: xfer_done / hb / stats messages already flowing to the master —
+    #: tracing adds no queue traffic of its own
+    tracer = Tracer(node=node, enabled=trace)
+    arena.tracer = tracer
     pid = os.getpid()
     throttle = [0.0]
     #: refs the master released this run — a ("fault", ref) op that pool-
@@ -655,16 +667,18 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
         arena.pin_all(pins)
         try:
             t0 = time.perf_counter()
-            if throttle[0] > 0.0:
-                time.sleep(throttle[0])
-            seg, dt = _execute_task(t, arena,
-                                    ctx["leaf_nodes"], ctx["dtypes"],
-                                    ctx["tile"], ctx["resident_ids"])
+            with tracer.span(t.kind.name, cat="EXEC", tid=tid,
+                             kind=t.kind.name):
+                if throttle[0] > 0.0:
+                    time.sleep(throttle[0])
+                seg, dt = _execute_task(t, arena,
+                                        ctx["leaf_nodes"], ctx["dtypes"],
+                                        ctx["tile"], ctx["resident_ids"])
             crc = None
             if _CRCAUDIT and t.out is not None:
                 crc = zlib.crc32(arena.get(t.out).data) & 0xFFFFFFFF
             outq.put(("done", node, tid, seg, dt, pid,
-                      time.perf_counter() - t0, crc))
+                      time.perf_counter() - t0, crc, tracer.drain()))
         except BaseException as e:
             if isinstance(e, SpillDataLost):
                 # the master must drop this holding BEFORE retrying the
@@ -679,47 +693,54 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                  comp_nbytes: int = 0, raw_crc=None) -> None:
         arena.pin_all((ref,))
         try:
-            if throttle[0] > 0.0:
-                # a slow node is slow at moving bytes too (straggler
-                # modelling; also gives chaos tests a deterministic
-                # in-flight window)
-                time.sleep(throttle[0])
-            remote = _attach_shm(src_name)
-            try:
-                if codec != "raw":
-                    # compressed wire path: the staging segment holds the
-                    # encoded payload; decode locally and verify the CRC
-                    # of the *decoded* bytes against the source's stamp —
-                    # torn reads and codec faults both land as
-                    # recoverable xfer_fail, never as wrong bytes
-                    payload = bytes(remote.buf[:comp_nbytes])
-                    src = decode_tile(payload, ref.shape,
-                                      np.dtype(dtype_str), codec)
-                    want = zlib.crc32(src.data) & 0xFFFFFFFF
-                    if raw_crc is not None and want != raw_crc:
+            nbytes = (int(np.prod(ref.shape))
+                      * np.dtype(dtype_str).itemsize)
+            with tracer.span("XFER", nbytes=nbytes, codec=codec,
+                             comp_nbytes=comp_nbytes, version=version):
+                if throttle[0] > 0.0:
+                    # a slow node is slow at moving bytes too (straggler
+                    # modelling; also gives chaos tests a deterministic
+                    # in-flight window)
+                    time.sleep(throttle[0])
+                remote = _attach_shm(src_name)
+                try:
+                    if codec != "raw":
+                        # compressed wire path: the staging segment holds
+                        # the encoded payload; decode locally and verify
+                        # the CRC of the *decoded* bytes against the
+                        # source's stamp — torn reads and codec faults
+                        # both land as recoverable xfer_fail, never as
+                        # wrong bytes
+                        payload = bytes(remote.buf[:comp_nbytes])
+                        src = decode_tile(payload, ref.shape,
+                                          np.dtype(dtype_str), codec)
+                        want = zlib.crc32(src.data) & 0xFFFFFFFF
+                        if raw_crc is not None and want != raw_crc:
+                            raise RuntimeError(
+                                f"XFER decoded-payload CRC32 mismatch for "
+                                f"{ref}: {want:#010x} != {raw_crc:#010x}")
+                    else:
+                        src = np.ndarray(ref.shape,
+                                         dtype=np.dtype(dtype_str),
+                                         buffer=remote.buf)
+                        # CRC32 over the payload before and after the
+                        # copy: a source segment vanishing or being
+                        # rebound mid-copy (a torn read) lands here as a
+                        # recoverable xfer_fail — the elastic master
+                        # retries from a live holder — instead of
+                        # silently propagating wrong bytes
+                        want = zlib.crc32(src.data) & 0xFFFFFFFF
+                    copied = arena.store(ref, src)
+                    got = zlib.crc32(copied.data) & 0xFFFFFFFF
+                    if got != want:
                         raise RuntimeError(
-                            f"XFER decoded-payload CRC32 mismatch for "
-                            f"{ref}: {want:#010x} != {raw_crc:#010x}")
-                else:
-                    src = np.ndarray(ref.shape, dtype=np.dtype(dtype_str),
-                                     buffer=remote.buf)
-                    # CRC32 over the payload before and after the copy: a
-                    # source segment vanishing or being rebound mid-copy
-                    # (a torn read) lands here as a recoverable xfer_fail
-                    # — the elastic master retries from a live holder —
-                    # instead of silently propagating wrong bytes
-                    want = zlib.crc32(src.data) & 0xFFFFFFFF
-                copied = arena.store(ref, src)
-                got = zlib.crc32(copied.data) & 0xFFFFFFFF
-                if got != want:
-                    raise RuntimeError(
-                        f"XFER payload CRC32 mismatch for {ref}: copied "
-                        f"{got:#010x} != source {want:#010x}")
-            finally:
-                remote.close()
+                            f"XFER payload CRC32 mismatch for {ref}: "
+                            f"copied {got:#010x} != source {want:#010x}")
+                finally:
+                    remote.close()
             seg, dt = arena.seg_of(ref)
             outq.put(("xfer_done", node, version, ref, seg, dt,
-                      got if _CRCAUDIT else None))
+                      got if _CRCAUDIT else None, tracer.drain()))
         except BaseException:
             outq.put(("xfer_fail", node, version, ref,
                       traceback.format_exc()))
@@ -740,14 +761,18 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
             ent = packs.get(ref)
             if ent is None:
                 arr = arena.get(ref)     # faults the tile hot if cold
-                payload = encode_tile(arr, codec)
-                raw_crc = zlib.crc32(np.ascontiguousarray(arr).data) \
-                    & 0xFFFFFFFF
-                with _TRACK_LOCK:
-                    seg = shared_memory.SharedMemory(
-                        create=True, size=max(len(payload), 1),
-                        name=f"{prefix}w{node}_{next(pack_ids)}")
-                seg.buf[:len(payload)] = payload
+                with tracer.span("PACK", nbytes=int(arr.nbytes),
+                                 codec=codec) as psp:
+                    payload = encode_tile(arr, codec)
+                    raw_crc = zlib.crc32(np.ascontiguousarray(arr).data) \
+                        & 0xFFFFFFFF
+                    with _TRACK_LOCK:
+                        seg = shared_memory.SharedMemory(
+                            create=True, size=max(len(payload), 1),
+                            name=f"{prefix}w{node}_{next(pack_ids)}")
+                    seg.buf[:len(payload)] = payload
+                    if tracer.enabled:
+                        psp.args["comp_nbytes"] = len(payload)
                 ent = packs[ref] = [seg, 0, codec, len(payload), raw_crc,
                                     arr.dtype.str]
             ent[1] += 1
@@ -808,7 +833,7 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
                 try:
                     msg = inq.get(timeout=hb_interval)
                 except _queue.Empty:
-                    outq.put(("hb", node, pid))
+                    outq.put(("hb", node, pid, tracer.drain()))
                     continue
             else:
                 msg = inq.get()
@@ -895,6 +920,11 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
             elif op == "alloc_fail":
                 # chaos: fail the Nth upcoming fresh allocation
                 arena.arm_alloc_fail(msg[1])
+            elif op == "cal":
+                # clock calibration: echo the master's send stamp with
+                # this process's monotonic clock (NTP-style midpoint,
+                # see telemetry.estimate_clock_offset)
+                outq.put(("cal", node, msg[1], time.perf_counter()))
             elif op == "stop":
                 break
     for ent in packs.values():          # transient wire buffers
@@ -902,7 +932,7 @@ def _node_worker(node: int, inq, outq, g: TaskGraph, tile, leaf_nodes,
     packs.clear()
     stats = arena.stats()
     arena.destroy()
-    outq.put(("stats", node, stats, pid))
+    outq.put(("stats", node, stats, pid, tracer.drain()))
 
 
 class ClusterExecutor:
@@ -933,7 +963,8 @@ class ClusterExecutor:
                  timemodel: Optional[TimeModel] = None,
                  wire_codec: Optional[str] = None,
                  broadcast: bool = True,
-                 stream_gather: bool = True):
+                 stream_gather: bool = True,
+                 trace: bool = True):
         self.workers_per_node = workers_per_node
         self.free_buffers = free_buffers
         self.mp_context = mp_context
@@ -953,6 +984,11 @@ class ClusterExecutor:
         #: could evict mid-attach, and the barrier path's lease already
         #: handles that case.
         self.stream_gather = stream_gather
+        #: flight recorder: on by default (obs_bench holds the paired
+        #: overhead under 5%); ``spans`` holds the last run's timeline
+        #: (master + ingested worker spans, master clock) after execute()
+        self.trace = trace
+        self.spans: List = []
         self.stats: Dict[str, object] = {}
         self._procs: Optional[List] = None
         self._inqs: Optional[List] = None
@@ -1076,7 +1112,8 @@ class ClusterExecutor:
                     (n, inqs[n], outq, g, plan.tile,
                      plan.program.leaf_nodes, plan.program.dtypes,
                      nthreads, prefix)
-                args = args + (0.0, None, spec.mem_at(n), spill_dir)
+                args = args + (0.0, None, spec.mem_at(n), spill_dir,
+                               self.trace)
                 p = ctx.Process(target=_node_worker, args=args, daemon=True)
                 p.start()
                 procs.append(p)
@@ -1100,9 +1137,22 @@ class ClusterExecutor:
         node_pids: Dict[int, int] = {}
         deps_left = {t.tid: len(t.preds) for t in g}
         dispatched = set()
-        counters = {"xfers": 0, "xfer_bytes": 0, "wire_bytes": 0,
-                    "xfers_compressed": 0, "relay_hops": 0,
-                    "gather_streamed_tiles": 0}
+        # unified metrics registry (replaces the ad-hoc counters dict):
+        # inc() is the atomic path, frozen_view() the read-only dict the
+        # stats consumers have always read
+        counters = MetricsRegistry()
+        for _k in ("xfers", "xfer_bytes", "wire_bytes",
+                   "xfers_compressed", "relay_hops",
+                   "gather_streamed_tiles"):
+            counters.inc(_k, 0)
+        # flight recorder: master-side tracer (node -1 = the master lane)
+        # plus per-node clock offsets from the NTP-style cal handshake —
+        # worker spans ingest onto the master timeline
+        tracer = Tracer(node=-1, enabled=self.trace)
+        clock_offsets: Dict[int, float] = {}
+        if self.trace:
+            for n in range(spec.n_nodes):
+                inqs[n].put(("cal", time.perf_counter()))
         t_exec0 = time.perf_counter()
         gather_t_first = [None]          # seconds to first gathered tile
 
@@ -1206,13 +1256,13 @@ class ClusterExecutor:
             codec = wire_codec_for(nbytes, src_n, dst_n)
             xfer_parent[(version, dst_n)] = src_n
             if not retry:
-                counters["xfers"] += 1
-                counters["xfer_bytes"] += nbytes
+                counters.inc("xfers")
+                counters.inc("xfer_bytes", nbytes)
                 if src_n != node_of[version]:
-                    counters["relay_hops"] += 1
+                    counters.inc("relay_hops")
             if codec != "raw":
                 if not retry:
-                    counters["xfers_compressed"] += 1
+                    counters.inc("xfers_compressed")
                 parked_packs[(src_n, ref)].append((version, dst_n, codec))
                 inqs[src_n].put(("pack", ref, codec))
             elif retry or spec.mem_at(src_n) is not None:
@@ -1220,11 +1270,11 @@ class ClusterExecutor:
                 # segment name directly races eviction — lease the tile
                 # instead (pin on the source, released at xfer_done)
                 if not retry:
-                    counters["wire_bytes"] += nbytes
+                    counters.inc("wire_bytes", nbytes)
                 parked_xfers[(src_n, ref)].append((version, dst_n))
                 inqs[src_n].put(("hold", ref))
             else:
-                counters["wire_bytes"] += nbytes
+                counters.inc("wire_bytes", nbytes)
                 sname, sdt = seg_info[(src_n, ref)]
                 inqs[dst_n].put(("xfer", version, ref, sname, sdt))
 
@@ -1261,7 +1311,7 @@ class ClusterExecutor:
                 crc_check("gather", master_node, r,
                           zlib.crc32(val.data) & 0xFFFFFFFF)
             gvals[uid][r] = val
-            counters["gather_streamed_tiles"] += 1
+            counters.inc("gather_streamed_tiles")
             if gather_t_first[0] is None:
                 gather_t_first[0] = time.perf_counter() - t_exec0
             dec_read(master_node, r)
@@ -1282,6 +1332,9 @@ class ClusterExecutor:
             kind = msg[0]
             if kind == "done":
                 _, n, tid, seg, dt, pid, _dur, *rest = msg
+                if len(rest) > 1:
+                    tracer.ingest(rest[1], clock_offsets.get(n, 0.0))
+                counters.observe("task_seconds", _dur)
                 t = g.tasks[tid]
                 if seg is not None and t.out is not None:
                     seg_info[(n, t.out)] = (seg, dt)
@@ -1307,6 +1360,8 @@ class ClusterExecutor:
                     try_stream_gather(t.out)
             elif kind == "xfer_done":
                 _, n, version, ref, seg, dt, *rest = msg
+                if len(rest) > 1:
+                    tracer.ingest(rest[1], clock_offsets.get(n, 0.0))
                 seg_info[(n, ref)] = (seg, dt)
                 # the copy landed: release the hop source's lease
                 release_lease(version, n, ref)
@@ -1360,7 +1415,7 @@ class ClusterExecutor:
                 _, n, ref, sname, dt, codec, comp_nbytes, raw_crc = msg
                 hold_retries.pop((n, ref), None)
                 for (version, dstn, _c) in parked_packs.pop((n, ref), ()):
-                    counters["wire_bytes"] += comp_nbytes
+                    counters.inc("wire_bytes", comp_nbytes)
                     leased_attempts[(version, dstn)] = (n, codec)
                     inqs[dstn].put(("xfer", version, ref, sname, dt,
                                     codec, comp_nbytes, raw_crc))
@@ -1400,6 +1455,13 @@ class ClusterExecutor:
             elif kind == "stats":
                 node_stats[msg[1]] = msg[2]
                 node_pids.setdefault(msg[1], msg[3])
+                if len(msg) > 4:
+                    tracer.ingest(msg[4], clock_offsets.get(msg[1], 0.0))
+            elif kind == "cal":
+                # worker's clock echo: NTP-style midpoint offset, under
+                # which worker span timestamps map onto the master clock
+                clock_offsets[msg[1]] = estimate_clock_offset(
+                    msg[2], msg[3], time.perf_counter())
             elif kind == "error":
                 if "ArenaOverflow" in msg[3]:
                     # often transient: concurrent tasks' pinned inputs
@@ -1454,6 +1516,7 @@ class ClusterExecutor:
             gather_bytes = 0
             retained = 0
             phase[0] = "gather"
+            gather_span_t0 = time.perf_counter()
             for rs in rsets:
                 if not rs.gather:
                     continue
@@ -1511,6 +1574,12 @@ class ClusterExecutor:
                 outs.append(assemble(vals, rs.shape, plan.tile, rs.uid))
 
             gather_t_full = time.perf_counter() - t_exec0
+            if self.trace:
+                # one master-lane span for the (barrier) gather phase, so
+                # the trace shows result assembly against worker compute
+                tracer.add(Span("GATHER", "GATHER", -1, 0, gather_span_t0,
+                                time.perf_counter() - gather_span_t0,
+                                {"bytes": gather_bytes}))
 
             # -- retention: persisted tiles move to the session store -------
             phase[0] = "retention"
@@ -1590,18 +1659,16 @@ class ClusterExecutor:
                 leaked_spill = 0
             shutil.rmtree(sd, ignore_errors=True)
 
-        self.stats = {
+        # the registry's frozen_view IS the stats dict consumers always
+        # read — counters stay inside the registry, run-shaped facts ride
+        # along as extras
+        self.spans = tracer.drain()
+        self.stats = counters.frozen_view({
             "tasks_run": total,
             "workers": sum(self.workers_per_node or spec.workers_at(n)
                            for n in range(spec.n_nodes)),
             "nodes": spec.n_nodes,
-            "xfers": counters["xfers"],
-            "xfer_bytes": counters["xfer_bytes"],
-            "wire_bytes": counters["wire_bytes"],
-            "xfers_compressed": counters["xfers_compressed"],
-            "relay_hops": counters["relay_hops"],
             "gather_bytes": gather_bytes,
-            "gather_streamed_tiles": counters["gather_streamed_tiles"],
             "gather_first_tile_s": gather_t_first[0],
             "gather_full_result_s": gather_t_full,
             # must be 0 after a clean run: an open lease is a stranded
@@ -1633,7 +1700,7 @@ class ClusterExecutor:
             "leaked_spill_files": leaked_spill,
             "exec_nodes": exec_nodes,
             "node_pids": node_pids,
-        }
+        })
         if not outs:
             return None
         return outs[0] if len(outs) == 1 else outs

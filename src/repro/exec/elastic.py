@@ -70,6 +70,8 @@ from ..core.tiling import assemble, result_sets_of
 from ..runtime.membership import (DEATH, RECOVER, STRAGGLE,
                                   MembershipConfig, MembershipService)
 from ..runtime.spill import run_spill_dir
+from ..runtime.telemetry import (MetricsRegistry, Span, Tracer,
+                                 estimate_clock_offset)
 from ..runtime.wire import BCAST_MIN_FANOUT, choose_wire_codec
 from .cluster import _CHAIN_KINDS, _RUN_IDS, _attach_shm, _node_worker
 
@@ -146,7 +148,9 @@ class ElasticClusterExecutor:
                  session: bool = False,
                  wire_codec: Optional[str] = None,
                  broadcast: bool = True,
-                 stream_gather: bool = True):
+                 stream_gather: bool = True,
+                 trace: bool = True,
+                 straggler_priors: Sequence[int] = ()):
         self.workers_per_node = workers_per_node
         self.free_buffers = free_buffers
         self.mp_context = mp_context
@@ -188,6 +192,19 @@ class ElasticClusterExecutor:
         #: set by a durable session (CMMSession with checkpoint_dir):
         #: called with a handle id when ChaosEvent(corrupt_tile=...) fires
         self.corrupt_tile_hook = None
+        #: flight recorder: on by default (obs_bench gates the paired
+        #: overhead under 5%); ``spans`` holds the last run's timeline
+        #: (master + ingested worker spans) after execute()
+        self.trace = trace
+        #: nodes a previous run's drift report flagged slow: seeded into
+        #: the membership detector so its straggler check fires on the
+        #: first confirming sweep instead of waiting out the patience
+        #: budget (drift_report(...).straggler_priors)
+        self.straggler_priors = tuple(straggler_priors)
+        self.spans: List = []
+        #: per-node clock offsets from the cal handshake — persistent
+        #: across runs/joins (each _spawn calibrates its incarnation)
+        self._clock_offsets: Dict[int, float] = {}
         self._started = False
         self._broken = False
         self._run_msg = None
@@ -224,12 +241,16 @@ class ElasticClusterExecutor:
             args=(node, inq, outq, self._g, self._tile, self._leaf_nodes,
                   self._dtypes, nthreads, prefix,
                   self._mcfg.heartbeat_interval_s, self.blas_threads,
-                  mem_bytes, self._spill_dir),
+                  mem_bytes, self._spill_dir, self.trace),
             daemon=True)
         p.start()
         self._procs[node] = p
         self._inqs[node] = inq
         self._outqs[node] = outq
+        if self.trace:
+            # calibrate this incarnation's clock against the master's
+            # (the echo lands in handle()'s "cal" branch)
+            inq.put(("cal", time.perf_counter()))
         if self._run_msg is not None:
             # session mode: hand the newcomer the CURRENT run's context
             # (graph + resident-leaf handle ids) — fork-inherited state
@@ -442,7 +463,23 @@ class ElasticClusterExecutor:
         def depth_cap(node: int) -> int:
             return 2 * max(1, cur_spec.workers_at(node)) + 1
         fired = [False] * len(self.chaos)
-        cnt = defaultdict(int)
+        # unified metrics registry (replaces the ad-hoc defaultdict):
+        # inc() is the atomic increment path, frozen_view() the read-only
+        # dict the stats consumers have always read
+        cnt = MetricsRegistry()
+        for _k in ("deaths", "joins", "respawns", "straggles",
+                   "recoveries", "replans", "recovered_tasks",
+                   "speculated", "spec_wins", "dup_done", "xfers",
+                   "xfer_bytes", "wire_bytes", "xfers_compressed",
+                   "relay_hops", "leases", "leases_released_on_death",
+                   "xfer_retries", "task_retries", "chaos_dropped_xfers",
+                   "gather_streamed_tiles", "squeezes", "tiles_lost",
+                   "frees", "dup_errors", "alloc_fails_armed"):
+            cnt.inc(_k, 0)
+        # flight recorder: master tracer (node -1) + the persistent
+        # per-incarnation clock offsets the cal handshake maintains
+        tracer = Tracer(node=-1, enabled=self.trace)
+        offsets = self._clock_offsets
         recovery_seconds = [0.0]
         total = len(g)
 
@@ -480,6 +517,10 @@ class ElasticClusterExecutor:
             for n in range(spec.n_nodes):
                 self._spawn(n, self.workers_per_node or spec.workers_at(n),
                             spec.mem_at(n))
+            if self.straggler_priors:
+                # a previous run's drift report flagged these nodes slow:
+                # arm the detector so one confirming sweep fires STRAGGLE
+                ms.seed_straggler_priors(self.straggler_priors)
             self._ms = ms
             self._started = True
 
@@ -533,19 +574,19 @@ class ElasticClusterExecutor:
             if not alive(dstn) \
                     or xfer_inflight.get((dstn, ref)) != (ver, holder):
                 release_pin(holder, ref, codec)
-                cnt["leases_released_on_death"] += 1
+                cnt.inc("leases_released_on_death")
                 return
             if chaos_drop[0] > 0:
                 chaos_drop[0] -= 1
-                cnt["chaos_dropped_xfers"] += 1
+                cnt.inc("chaos_dropped_xfers")
                 sname = f"{self._prefix}chaos_dropped"
             leases[(dstn, ref)] = (holder, codec)
             if codec == "raw":
-                cnt["wire_bytes"] += ref.bytes
+                cnt.inc("wire_bytes", ref.bytes)
                 self._inqs[dstn].put(("xfer", ver, ref, sname, sdt))
             else:
-                cnt["wire_bytes"] += comp_nbytes
-                cnt["xfers_compressed"] += 1
+                cnt.inc("wire_bytes", comp_nbytes)
+                cnt.inc("xfers_compressed")
                 self._inqs[dstn].put(("xfer", ver, ref, sname, sdt,
                                       codec, comp_nbytes, raw_crc))
 
@@ -564,7 +605,7 @@ class ElasticClusterExecutor:
                 if bump_retries:
                     xfer_retries[(ver, dstn)] += 1
                     tries = xfer_retries[(ver, dstn)]
-                    cnt["xfer_retries"] += 1
+                    cnt.inc("xfer_retries")
                     if tries > self._mcfg.xfer_max_retries:
                         raise MemoryBudgetExceeded(
                             n, 0, cur_spec.mem_at(n) or 0,
@@ -645,7 +686,7 @@ class ElasticClusterExecutor:
                     continue
                 codec = wire_codec_for(ref.bytes, holder, node)
                 if exec_nodes.get(p) not in (None, holder):
-                    cnt["relay_hops"] += 1
+                    cnt.inc("relay_hops")
                 if codec != "raw" or cur_spec.mem_at(holder) is not None:
                     # leased path: the holder pins the source (and, when
                     # compressed, stages the encoded payload) before the
@@ -655,7 +696,7 @@ class ElasticClusterExecutor:
                     self._inqs[holder].put(
                         ("pack", ref, codec) if codec != "raw"
                         else ("hold", ref))
-                    cnt["leases"] += 1
+                    cnt.inc("leases")
                 else:
                     sname = avail[(holder, ref)][1]
                     sdt = avail[(holder, ref)][2]
@@ -665,15 +706,15 @@ class ElasticClusterExecutor:
                         # xfer_fail and the bounded-backoff retry
                         # re-issues it for real
                         chaos_drop[0] -= 1
-                        cnt["chaos_dropped_xfers"] += 1
+                        cnt.inc("chaos_dropped_xfers")
                         sname = f"{self._prefix}chaos_dropped"
                     self._inqs[node].put(("xfer", p, ref, sname, sdt))
-                    cnt["wire_bytes"] += ref.bytes
+                    cnt.inc("wire_bytes", ref.bytes)
                 write_busy.add((node, ref))
                 xfer_inflight[(node, ref)] = (p, holder)
                 src_busy[(holder, ref)] += 1
-                cnt["xfers"] += 1
-                cnt["xfer_bytes"] += ref.bytes
+                cnt.inc("xfers")
+                cnt.inc("xfer_bytes", ref.bytes)
             if waiting or prefetch_only:
                 return False
             if t.out is not None:
@@ -711,7 +752,7 @@ class ElasticClusterExecutor:
                 if inflight[node] >= depth_cap(node):
                     continue
                 if try_dispatch(tid, node):
-                    cnt["speculated"] += 1
+                    cnt.inc("speculated")
 
         def run_gc() -> None:
             """Mark-and-sweep over arena bindings: a (node, ref) binding
@@ -761,7 +802,7 @@ class ElasticClusterExecutor:
                 del avail[key]
                 if alive(n):
                     self._inqs[n].put(("free", ref))
-                    cnt["frees"] += 1
+                    cnt.inc("frees")
 
         def replan(resurrect_seed: Set[int] = frozenset()) -> None:
             """Resurrection closure + incremental frontier re-plan —
@@ -787,7 +828,7 @@ class ElasticClusterExecutor:
             for tid in [t.tid for t in g if t.tid not in completed]:
                 for (_ref, p) in needs[tid]:
                     ensure(p)
-            cnt["recovered_tasks"] += len(resurrected)
+            cnt.inc("recovered_tasks", len(resurrected))
 
             for tid in g.tasks:
                 if tid not in completed:
@@ -819,13 +860,18 @@ class ElasticClusterExecutor:
                     assigned[tid] = new_sched.placements[tid].node
             ready.clear()
             ready.update(tid for tid in frontier if deps_left[tid] == 0)
-            cnt["replans"] += 1
+            cnt.inc("replans")
             run_gc()
             recovery_seconds[0] += time.perf_counter() - t0
+            if self.trace:
+                tracer.add(Span("REPLAN", "REPLAN", -1, 0, t0,
+                                time.perf_counter() - t0,
+                                {"resurrected": len(resurrected),
+                                 "frontier": len(frontier)}))
 
         def on_death(n: int) -> None:
             nonlocal cur_spec
-            cnt["deaths"] += 1
+            cnt.inc("deaths")
             survivors = ms.alive_nodes()
             if not self.respawn_dead and \
                     len(survivors) < self._mcfg.min_nodes:
@@ -859,7 +905,7 @@ class ElasticClusterExecutor:
                 holder, codec = leases.pop((dst, ref))
                 if alive(holder):
                     release_pin(holder, ref, codec)
-                    cnt["leases_released_on_death"] += 1
+                    cnt.inc("leases_released_on_death")
             for key in [k for k in leases if leases[k][0] == n]:
                 del leases[key]   # holder died: its pins died with it
             # pending leases ON the dead holder get no ack and no
@@ -889,7 +935,7 @@ class ElasticClusterExecutor:
                 self._spawn(n, self.workers_per_node
                             or cur_spec.workers_at(n), cur_spec.mem_at(n))
                 ms.add_node(n)
-                cnt["respawns"] += 1
+                cnt.inc("respawns")
             else:
                 cur_spec = cur_spec.without_node(n)
             # resident-input tiles homed on the dead node are gone (a
@@ -920,7 +966,7 @@ class ElasticClusterExecutor:
             self._spawn(node, self.workers_per_node or workers,
                         cur_spec.mem_at(node))
             ms.add_node(node)
-            cnt["joins"] += 1
+            cnt.inc("joins")
             replan()
 
         #: each node's un-penalised slowdown, for idempotent straggler
@@ -931,7 +977,7 @@ class ElasticClusterExecutor:
 
         def on_straggle(n: int) -> None:
             nonlocal cur_spec
-            cnt["straggles"] += 1
+            cnt.inc("straggles")
             if self.speculate:
                 others = [k for k in ms.alive_nodes() if k != n]
                 if others:
@@ -953,7 +999,7 @@ class ElasticClusterExecutor:
             nonlocal cur_spec
             if not alive(n):
                 return
-            cnt["recoveries"] += 1
+            cnt.inc("recoveries")
             cur_spec = cur_spec.with_slowdown(n, base_slowdown.get(n, 1.0))
             replan()
 
@@ -997,11 +1043,11 @@ class ElasticClusterExecutor:
                         ("squeeze", int(c.squeeze_bytes)))
                     cur_spec = cur_spec.with_mem(
                         c.mem_squeeze, float(c.squeeze_bytes))
-                    cnt["squeezes"] += 1
+                    cnt.inc("squeezes")
                 if c.alloc_fail is not None and alive(c.alloc_fail):
                     self._inqs[c.alloc_fail].put(
                         ("alloc_fail", int(c.alloc_fail_nth)))
-                    cnt["alloc_fails_armed"] += 1
+                    cnt.inc("alloc_fails_armed")
                 if c.corrupt_tile is not None:
                     self.corrupt_tile_hook(c.corrupt_tile)
                 if c.kill_master:
@@ -1023,6 +1069,9 @@ class ElasticClusterExecutor:
             kind = msg[0]
             if kind == "done":
                 _, n, tid, seg, dt, pid, dur, *_rest = msg
+                if len(_rest) > 1:
+                    tracer.ingest(_rest[1], offsets.get(n, 0.0))
+                cnt.observe("task_seconds", dur)
                 ms.record_task(n, dur)
                 node_pids[n] = pid
                 t = g.tasks[tid]
@@ -1033,7 +1082,7 @@ class ElasticClusterExecutor:
                 dispatched[tid].discard(n)
                 inflight[n] -= 1
                 if tid in completed:
-                    cnt["dup_done"] += 1      # first-writer-wins: a late
+                    cnt.inc("dup_done")      # first-writer-wins: a late
                     return True               # duplicate only adds a copy
                 completed.add(tid)
                 exec_nodes[tid] = n
@@ -1059,14 +1108,14 @@ class ElasticClusterExecutor:
                             gstreamed[t.out] = view.copy()
                         finally:
                             sh.close()
-                        cnt["gather_streamed_tiles"] += 1
+                        cnt.inc("gather_streamed_tiles")
                         if gather_t_first[0] is None:
                             gather_t_first[0] = \
                                 time.perf_counter() - t_exec0
                     except FileNotFoundError:  # pragma: no cover — the
                         pass                   # barrier pass still runs
                 if spec_pending.pop(tid, None) == n:
-                    cnt["spec_wins"] += 1
+                    cnt.inc("spec_wins")
                 for s in sorted(t.succs):
                     deps_left[s] -= 1
                     if deps_left[s] == 0 and s not in completed \
@@ -1077,6 +1126,8 @@ class ElasticClusterExecutor:
                 fire_chaos()
             elif kind == "xfer_done":
                 _, n, version, ref, seg, dt, *_rest = msg
+                if len(_rest) > 1:
+                    tracer.ingest(_rest[1], offsets.get(n, 0.0))
                 write_busy.discard((n, ref))
                 ent = xfer_inflight.pop((n, ref), None)
                 if ent is not None and (ent[1], ref) in src_busy:
@@ -1103,7 +1154,7 @@ class ElasticClusterExecutor:
                     release_pin(lease[0], ref, lease[1])
                 xfer_retries[(version, n)] += 1
                 tries = xfer_retries[(version, n)]
-                cnt["xfer_retries"] += 1
+                cnt.inc("xfer_retries")
                 if tries > self._mcfg.xfer_max_retries:
                     if "ArenaOverflow" in tb:
                         raise MemoryBudgetExceeded(
@@ -1175,7 +1226,7 @@ class ElasticClusterExecutor:
                 fault_pending.discard((n, ref))
                 fail_pending_lease(n, ref, bump_retries=False)
                 ent = avail.pop((n, ref), None)
-                cnt["tiles_lost"] += 1
+                cnt.inc("tiles_lost")
                 if ent is not None and not value_secured(ent[0]):
                     replan({ent[0]})
             elif kind == "retained":
@@ -1187,6 +1238,15 @@ class ElasticClusterExecutor:
             elif kind == "hb":
                 ms.heartbeat(msg[1])
                 node_pids.setdefault(msg[1], msg[2])
+                if len(msg) > 3:
+                    # idle-period span flush piggybacked on the heartbeat
+                    tracer.ingest(msg[3], offsets.get(msg[1], 0.0))
+                return False
+            elif kind == "cal":
+                # worker clock echo: NTP-style midpoint offset, mapping
+                # that incarnation's span timestamps onto the master clock
+                offsets[msg[1]] = estimate_clock_offset(
+                    msg[2], msg[3], time.perf_counter())
                 return False
             elif kind == "error":
                 if msg[2] in completed:
@@ -1198,7 +1258,7 @@ class ElasticClusterExecutor:
                         write_busy.discard((msg[1], lt.out))
                     dispatched[msg[2]].discard(msg[1])
                     inflight[msg[1]] -= 1
-                    cnt["dup_errors"] += 1
+                    cnt.inc("dup_errors")
                     return True
                 tid = msg[2]
                 t = g.tasks.get(tid)
@@ -1236,13 +1296,15 @@ class ElasticClusterExecutor:
                     write_busy.discard((msg[1], t.out))
                 dispatched[tid].discard(msg[1])
                 inflight[msg[1]] -= 1
-                cnt["task_retries"] += 1
+                cnt.inc("task_retries")
                 task_retry_at[tid] = time.monotonic() + min(
                     self._mcfg.retry_backoff_s * (2 ** (tries - 1)), 2.0)
                 if deps_left[tid] == 0 and not dispatched[tid]:
                     ready.add(tid)
             elif kind == "stats":
                 self._node_stats[msg[1]] = msg[2]
+                if len(msg) > 4:
+                    tracer.ingest(msg[4], offsets.get(msg[1], 0.0))
             return True
 
         # -- master event loop ----------------------------------------------
@@ -1416,6 +1478,7 @@ class ElasticClusterExecutor:
             # -- gather result tiles of non-persisted roots -----------------
             outs: List[np.ndarray] = []
             gather_bytes = 0
+            gather_span_t0 = time.perf_counter()
             for rs in rsets:
                 if not rs.gather:
                     continue
@@ -1466,6 +1529,10 @@ class ElasticClusterExecutor:
                     gather_bytes += r.bytes
                 outs.append(assemble(vals, rs.shape, plan.tile, rs.uid))
             gather_t_full = time.perf_counter() - t_exec0
+            if self.trace:
+                tracer.add(Span("GATHER", "GATHER", -1, 0, gather_span_t0,
+                                time.perf_counter() - gather_span_t0,
+                                {"bytes": gather_bytes}))
 
             # -- retention: persisted tiles into the session store ----------
             # a tile's home is wherever its (canonical) value actually
@@ -1523,6 +1590,9 @@ class ElasticClusterExecutor:
                         if msg[0] == "stats":
                             self._node_stats[msg[1]] = msg[2]
                             node_pids.setdefault(msg[1], msg[3])
+                            if len(msg) > 4:
+                                tracer.ingest(msg[4],
+                                              offsets.get(msg[1], 0.0))
                         got = True
                     if not got:
                         time.sleep(0.005)
@@ -1549,7 +1619,20 @@ class ElasticClusterExecutor:
                         p.terminate()
                         p.join(timeout=5)
 
-        self.stats = {
+        leaked_spill = 0
+        if not self.session:
+            # after a clean one-shot run every spill file must be gone;
+            # leftovers are leaks (counted, then reaped)
+            try:
+                leaked_spill = len(os.listdir(self._spill_dir))
+            except OSError:
+                pass
+            shutil.rmtree(self._spill_dir, ignore_errors=True)
+        # the registry's frozen_view IS the stats dict consumers always
+        # read — counters stay inside the registry, run-shaped facts ride
+        # along as extras
+        self.spans = tracer.drain()
+        self.stats = cnt.frozen_view({
             "tasks_run": total,
             "nodes_initial": spec.n_nodes,
             "nodes_final": len(ms.alive_nodes()),
@@ -1557,24 +1640,7 @@ class ElasticClusterExecutor:
                            for n in cur_spec.alive_nodes()),
             "exec_nodes": exec_nodes,
             "node_pids": node_pids,
-            "deaths": cnt["deaths"],
-            "joins": cnt["joins"],
-            "respawns": cnt["respawns"],
-            "straggles": cnt["straggles"],
-            "recoveries": cnt["recoveries"],
-            "replans": cnt["replans"],
-            "recovered_tasks": cnt["recovered_tasks"],
             "recovery_seconds": recovery_seconds[0],
-            "speculated": cnt["speculated"],
-            "spec_wins": cnt["spec_wins"],
-            "dup_done": cnt["dup_done"],
-            "xfers": cnt["xfers"],
-            "xfer_bytes": cnt["xfer_bytes"],
-            "wire_bytes": cnt["wire_bytes"],
-            "xfers_compressed": cnt["xfers_compressed"],
-            "relay_hops": cnt["relay_hops"],
-            "leases": cnt["leases"],
-            "leases_released_on_death": cnt["leases_released_on_death"],
             # hygiene audits — both must be 0 after a clean run: an open
             # lease is a stranded source pin; a surviving retry entry
             # means a recovered edge/task kept its failure count and
@@ -1582,11 +1648,7 @@ class ElasticClusterExecutor:
             "stale_leases": len(leases) + sum(len(v) for v
                                               in pending_lease.values()),
             "stale_retry_entries": len(xfer_retries) + len(task_retries),
-            "xfer_retries": cnt["xfer_retries"],
-            "task_retries": cnt["task_retries"],
-            "chaos_dropped_xfers": cnt["chaos_dropped_xfers"],
             "gather_bytes": gather_bytes,
-            "gather_streamed_tiles": cnt["gather_streamed_tiles"],
             "gather_first_tile_s": gather_t_first[0],
             "gather_full_result_s": gather_t_full,
             "retained_tiles": retained_count,
@@ -1596,8 +1658,6 @@ class ElasticClusterExecutor:
                                      for s in self._node_stats.values()),
             "cur_buffer_bytes": sum(s["cur_buffer_bytes"]
                                     for s in self._node_stats.values()),
-            "squeezes": cnt["squeezes"],
-            "tiles_lost": cnt["tiles_lost"],
             "evictions": sum(s.get("evictions", 0)
                              for s in self._node_stats.values()),
             "faults": sum(s.get("faults", 0)
@@ -1608,17 +1668,8 @@ class ElasticClusterExecutor:
                                for s in self._node_stats.values()),
             "spilled_bytes": sum(s.get("spilled_bytes", 0)
                                  for s in self._node_stats.values()),
-            "leaked_spill_files": 0,
-        }
-        if not self.session:
-            # after a clean one-shot run every spill file must be gone;
-            # leftovers are leaks (counted, then reaped)
-            try:
-                self.stats["leaked_spill_files"] = \
-                    len(os.listdir(self._spill_dir))
-            except OSError:
-                pass
-            shutil.rmtree(self._spill_dir, ignore_errors=True)
+            "leaked_spill_files": leaked_spill,
+        })
         if not outs:
             return None
         return outs[0] if len(outs) == 1 else outs

@@ -38,14 +38,19 @@ from ..core.fusion import eval_fused
 from ..core.graph import Task, TaskGraph, TaskKind, TileRef, matmul_flags
 from ..core.lazy import EWISE_FNS, apply_scale, leaf_slice
 from ..core.tiling import assemble, result_sets_of, tile_slices
+from ..runtime.telemetry import Tracer
 
 
 class LocalExecutor:
     def __init__(self, workers: Optional[int] = None, use_pallas: bool = False,
-                 free_buffers: bool = True):
+                 free_buffers: bool = True, trace: bool = True):
         self.workers = workers
         self.use_pallas = use_pallas
         self.free_buffers = free_buffers
+        #: flight recorder: EXEC spans per task (node 0, one lane per
+        #: pool thread); ``spans`` holds the last run's timeline
+        self.trace = trace
+        self.spans: list = []
         #: filled by execute(): peak_buffer_bytes, tasks_run, buffers_freed
         self.stats: Dict[str, int] = {}
 
@@ -195,6 +200,10 @@ class LocalExecutor:
                 cv.notify_all()
 
         errors: list = []
+        # flight recorder: one EXEC span per task on node 0, lanes keyed
+        # by pool thread — the in-process equivalent of the cluster
+        # workers' piggybacked spans
+        tracer = Tracer(node=0, enabled=self.trace)
         with ThreadPoolExecutor(max_workers=nworkers) as pool:
             submitted = 0
             total = len(g)
@@ -210,7 +219,10 @@ class LocalExecutor:
 
                     def job(tid=tid):
                         try:
-                            run_task(g.tasks[tid])
+                            t = g.tasks[tid]
+                            with tracer.span(t.kind.name, cat="EXEC",
+                                             tid=tid, kind=t.kind.name):
+                                run_task(t)
                         except BaseException as e:  # surface task failures
                             errors.append(e)
                         finally:
@@ -244,6 +256,7 @@ class LocalExecutor:
                     residency.retain_local(rs.uid, r.i, r.j, buf)
                     retained += 1
 
+        self.spans = tracer.drain()
         self.stats = {"peak_buffer_bytes": mem["peak"],
                       "cur_buffer_bytes": mem["cur"],
                       "buffers_freed": mem["freed"],

@@ -76,6 +76,11 @@ class TileCheckpointStore:
         #: tracebacks of failed async writes (durability degrades, the
         #: session keeps computing)
         self.write_errors: List[str] = []
+        #: optional flight-recorder hook (``runtime/telemetry.Tracer``):
+        #: when set, every snapshot publication records a CHECKPOINT
+        #: span (async saves record it on the writer thread, so the
+        #: trace shows the write overlapping the next compute)
+        self.tracer = None
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, fresh: Dict[int, dict],
@@ -87,6 +92,18 @@ class TileCheckpointStore:
         ``carry`` hids reuse their previous manifest entry (shards stay in
         their older ``snap_`` directory).  Returns the published manifest.
         """
+        carry = tuple(carry)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            nbytes = sum(int(a.nbytes) for meta in fresh.values()
+                         for a in meta["tiles"].values())
+            with tr.span("CHECKPOINT", step=int(step), nbytes=nbytes,
+                         fresh=len(fresh), carry=len(carry)):
+                return self._save(step, fresh, carry)
+        return self._save(step, fresh, carry)
+
+    def _save(self, step: int, fresh: Dict[int, dict],
+              carry: Iterable[int] = ()) -> dict:
         prev = self._baseline()
         tmp = os.path.join(self.dir, f"snap_{step}.tmp")
         final = os.path.join(self.dir, f"snap_{step}")

@@ -148,6 +148,24 @@ class MembershipService:
         st.alive = False
         return ClusterEvent(DEATH, node, reason or "marked dead")
 
+    def seed_straggler_priors(self, nodes) -> None:
+        """Pre-load the straggler detector with drift-report priors.
+
+        A node the drift analysis (``core/drift.py``) found outside the
+        residual band in a *previous* run starts this run one flagged
+        sweep short of its patience budget: the first sweep that
+        observes it over the bar fires STRAGGLE immediately instead of
+        waiting out ``straggler_patience`` sweeps, while a node whose
+        drift was transient is exonerated by its first clean sweep
+        (``flagged`` resets to 0) and pays nothing.  The master cannot
+        be seeded — it is exempt from eviction.
+        """
+        for n in nodes:
+            st = self.nodes.get(int(n))
+            if st is None or not st.alive or st.node == self.master:
+                continue
+            st.flagged = max(st.flagged, self.cfg.straggler_patience - 1)
+
     # -- detection ------------------------------------------------------------
     def poll(self, liveness: Optional[Mapping[int, bool]] = None
              ) -> List[ClusterEvent]:

@@ -91,11 +91,23 @@ class TileSpillStore:
         self.reads = 0
         self.bytes_written = 0
         self.bytes_read = 0
+        #: optional flight-recorder hook (``runtime/telemetry.Tracer``):
+        #: when set, every spill / fault-in records a SPILL / FAULTIN
+        #: span — the evidence the drift report prices against the
+        #: TimeModel's spill bandwidths
+        self.tracer = None
 
     # -- write / read / drop ------------------------------------------------
     def spill(self, key, arr: np.ndarray) -> int:
         """Write ``arr`` to the cold tier under ``key``; returns bytes
         written.  Overwrites any previous entry for the key."""
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            with tr.span("SPILL", nbytes=int(arr.nbytes), key=str(key)):
+                return self._spill(key, arr)
+        return self._spill(key, arr)
+
+    def _spill(self, key, arr: np.ndarray) -> int:
         os.makedirs(self.dir, exist_ok=True)
         self.drop(key)
         path = os.path.join(self.dir, f"{self._fp}_{self._seq}.npy")
@@ -110,6 +122,18 @@ class TileSpillStore:
         return nbytes
 
     def fault_in(self, key, keep: bool = False) -> np.ndarray:
+        """CRC-verified read of ``key`` back from the cold tier (see
+        :meth:`_fault_in`); records a FAULTIN span when a tracer is
+        wired."""
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            with tr.span("FAULTIN", key=str(key)) as sp:
+                arr = self._fault_in(key, keep)
+                sp.args["nbytes"] = int(arr.nbytes)
+                return arr
+        return self._fault_in(key, keep)
+
+    def _fault_in(self, key, keep: bool = False) -> np.ndarray:
         """Read ``key`` back from the cold tier, CRC-verified.  The entry
         is consumed (exclusive tiering: a tile lives in exactly one tier)
         unless ``keep`` — a caller that still has to allocate hot-tier

@@ -39,7 +39,7 @@ import numpy as np
 __all__ = [
     "WireCodec", "RawCodec", "ZlibCodec", "CODECS", "get_codec",
     "encode_tile", "decode_tile", "choose_wire_codec", "wire_seconds",
-    "broadcast_tree", "BCAST_MIN_FANOUT",
+    "predicted_xfer_seconds", "broadcast_tree", "BCAST_MIN_FANOUT",
 ]
 
 #: minimum cross-node destination count before a relay tree beats
@@ -160,6 +160,34 @@ def wire_seconds(nbytes: int, src: int, dst: int, spec, tm) -> float:
         return base
     comp = nbytes / cbw + spec.comm_time(int(nbytes / ratio), src, dst)
     return min(base, comp)
+
+
+def predicted_xfer_seconds(nbytes: int, tm, codec: str = "raw",
+                           comp_nbytes: int = 0) -> float:
+    """Model-predicted wall seconds for one *materialized* XFER leg.
+
+    Unlike :func:`wire_seconds` — which prices the codec *choice*
+    against the planning-level link model — this prices what the
+    destination worker actually does: a shared-memory attach + copy
+    (``ipc_latency + bytes / ipc_bandwidth``, the terms
+    ``profiler.calibrate_ipc`` fits), plus a decode pass priced at the
+    codec throughput prior when the payload came compressed.  The
+    drift report compares measured XFER spans against this, so a raw
+    leg evidences ``ipc_bandwidth`` and a compressed one
+    ``compress_bandwidth``.
+    """
+    if nbytes <= 0 or tm is None:
+        return 0.0
+    lat = getattr(tm, "ipc_latency", 0.0)
+    bw = getattr(tm, "ipc_bandwidth", 0.0)
+    if codec == "raw":
+        return lat + (nbytes / bw if bw > 0 else 0.0)
+    cbw = getattr(tm, "compress_bandwidth", 0.0)
+    payload = comp_nbytes or nbytes
+    t = lat + (payload / bw if bw > 0 else 0.0)
+    if cbw > 0:
+        t += nbytes / cbw
+    return t
 
 
 def broadcast_tree(src: int, dsts: Sequence[int],

@@ -1,0 +1,432 @@
+"""Observability tier: flight recorder, metrics registry, drift report.
+
+Contract (ISSUE: flight recorder): tracing is cheap enough to stay on by
+default and NEVER perturbs numerics — a traced run is bit-identical to
+an untraced one.  The recorded timeline is complete (one EXEC span per
+scheduled task, one XFER span per planned cross-node movement), aligns
+worker clocks onto the master timeline, exports as valid Chrome-trace
+JSON, and the drift report joins it against the simulator's predicted
+timeline to flag straggler nodes and mis-fitted TimeModel terms.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import ClusteredMatrix as CM, CMMEngine, analytic_time_model
+from repro.core.drift import drift_report
+from repro.core.graph import TaskKind
+from repro.core.machine import hetero_spec
+from repro.core.session import CMMSession
+from repro.runtime.telemetry import (MetricsRegistry, Span, Tracer,
+                                     chrome_trace, estimate_clock_offset,
+                                     export_chrome_trace, _Histogram)
+
+TM = analytic_time_model()
+
+
+def _synth(n=64):
+    A = CM.rand(n, n, seed=0)
+    B = CM.rand(n, n, seed=1)
+    return (A @ B) + A
+
+
+def _plan(expr, tile, spec):
+    eng = CMMEngine(spec, TM, plan_cache=False)
+    return eng.plan(expr, tile=tile), eng
+
+
+# -- tracer units ------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_span_records_interval():
+    clk = FakeClock(10.0)
+    tr = Tracer(node=3, enabled=True, clock=clk)
+    with tr.span("GEMM", cat="EXEC", tid=7):
+        clk.t = 10.5
+    (sp,) = tr.drain()
+    assert (sp.name, sp.cat, sp.node) == ("GEMM", "EXEC", 3)
+    assert sp.t0 == 10.0 and sp.dur == pytest.approx(0.5)
+    assert sp.args == {"tid": 7}
+    assert tr.drain() == []          # drain took everything
+
+
+def test_span_nesting_containment():
+    clk = FakeClock(0.0)
+    tr = Tracer(node=0, clock=clk)
+    with tr.span("outer", cat="A"):
+        clk.t = 1.0
+        with tr.span("inner", cat="B"):
+            clk.t = 2.0
+        clk.t = 3.0
+    spans = {s.name: s for s in tr.drain()}
+    out, inn = spans["outer"], spans["inner"]
+    # children exit (and record) first; the parent interval contains them
+    assert out.t0 <= inn.t0
+    assert inn.t0 + inn.dur <= out.t0 + out.dur
+    assert out.lane == inn.lane      # same thread -> same lane
+
+
+def test_span_recorded_on_exception():
+    clk = FakeClock(0.0)
+    tr = Tracer(clock=clk)
+    with pytest.raises(ValueError):
+        with tr.span("boom", cat="EXEC"):
+            clk.t = 0.25
+            raise ValueError("x")
+    (sp,) = tr.drain()
+    assert sp.dur == pytest.approx(0.25)
+
+
+def test_disabled_tracer_records_nothing():
+    tr = Tracer(enabled=False)
+    with tr.span("x", cat="EXEC", tid=1):
+        pass
+    tr.add(Span("y", "EXEC", 0, 0, 0.0, 1.0))
+    assert tr.drain() == []
+    # disabled span() returns one shared context: zero per-call allocation
+    assert tr.span("a") is tr.span("b")
+
+
+def test_lanes_stable_per_thread():
+    tr = Tracer()
+    lanes = {}
+    barrier = threading.Barrier(4)     # keep all threads alive at once —
+    # exited thread idents (and so lanes) are legitimately reusable
+
+    def work(k):
+        barrier.wait()
+        with tr.span(f"t{k}", cat="EXEC"):
+            pass
+        lanes[k] = tr.lane()
+        barrier.wait()
+
+    ths = [threading.Thread(target=work, args=(k,)) for k in range(4)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    spans = {s.name: s for s in tr.drain()}
+    assert len(spans) == 4
+    # concurrent threads get small, dense, distinct lanes, and a span
+    # records on its own thread's lane
+    assert sorted(lanes.values()) == [0, 1, 2, 3]
+    for k in range(4):
+        assert spans[f"t{k}"].lane == lanes[k]
+
+
+# -- clock-offset calibration -------------------------------------------------
+
+def test_estimate_clock_offset_symmetric_delay():
+    # worker clock runs 100s ahead; 10ms symmetric one-way delay
+    ahead = 100.0
+    t_send = 50.0
+    t_worker = (t_send + 0.01) + ahead   # worker echoes mid-flight
+    t_recv = t_send + 0.02
+    off = estimate_clock_offset(t_send, t_worker, t_recv)
+    assert off == pytest.approx(ahead, abs=1e-9)
+
+
+def test_ingest_shifts_onto_master_timeline():
+    master = Tracer(node=-1)
+    # a worker whose clock is 7s ahead recorded t0=107; the event
+    # happened at master time 100
+    sp = Span("EXEC", "EXEC", 2, 0, 107.0, 0.5, {"tid": 1})
+    master.ingest([sp], offset=7.0)
+    (got,) = master.drain()
+    assert got.t0 == pytest.approx(100.0)
+    assert got.dur == pytest.approx(0.5)
+
+
+def test_calibration_roundtrip_aligns_two_clocks():
+    # two fake processes with skewed clocks; the cal handshake recovers
+    # the skew exactly under symmetric delays
+    skew = 3.0
+    t_send = 1.0                       # master stamps
+    t_worker = (t_send + 0.005) + skew  # worker echoes its clock
+    t_recv = 1.01                      # master receives
+    off = estimate_clock_offset(t_send, t_worker, t_recv)
+    worker = Tracer(node=1, clock=FakeClock(0.0))
+    worker.add(Span("EXEC", "EXEC", 1, 0, 5.0 + skew, 0.1))
+    master = Tracer(node=-1)
+    master.ingest(worker.drain(), off)
+    (sp,) = master.drain()
+    assert sp.t0 == pytest.approx(5.0, abs=1e-9)
+
+
+# -- histogram ----------------------------------------------------------------
+
+def test_histogram_summary_basics():
+    h = _Histogram()
+    for v in (0.001, 0.002, 0.004, 0.1):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4
+    assert s["total"] == pytest.approx(0.107)
+    assert s["min"] == 0.001 and s["max"] == 0.1
+    # quantile returns a bucket upper edge within 2x of the true value
+    assert 0.002 <= s["p50"] <= 0.008
+    assert s["p99"] >= 0.1
+
+
+# hypothesis property sweep (skipped where hypothesis is unavailable)
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(xs=st.lists(st.floats(min_value=0.0, max_value=1e4,
+                                 allow_nan=False), max_size=40),
+           ys=st.lists(st.floats(min_value=0.0, max_value=1e4,
+                                 allow_nan=False), max_size=40))
+    def test_histogram_merge_property(xs, ys):
+        """merge(A, B) is indistinguishable from observing A+B directly."""
+        ha, hb, hall = _Histogram(), _Histogram(), _Histogram()
+        for v in xs:
+            ha.observe(v)
+            hall.observe(v)
+        for v in ys:
+            hb.observe(v)
+            hall.observe(v)
+        ha.merge(hb)
+        assert ha.buckets == hall.buckets
+        assert ha.count == hall.count
+        assert ha.total == pytest.approx(hall.total)
+        sa, sall = ha.summary(), hall.summary()
+        for k in ("min", "max", "p50", "p99"):
+            assert sa[k] == pytest.approx(sall[k])
+except ImportError:                    # pragma: no cover
+    pass
+
+
+# -- metrics registry ---------------------------------------------------------
+
+def test_registry_inc_is_atomic_across_threads():
+    reg = MetricsRegistry()
+    N, T = 2000, 8
+
+    def bump():
+        for _ in range(N):
+            reg.inc("hits")
+
+    ths = [threading.Thread(target=bump) for _ in range(T)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    assert reg.get("hits") == N * T    # bare dict += would lose updates
+
+
+def test_registry_frozen_view_is_readonly_dict():
+    reg = MetricsRegistry()
+    reg.inc("xfers", 3)
+    reg.gauge("nodes", [0, 1])
+    reg.observe("task_seconds", 0.5)
+    view = reg.frozen_view({"extra": 7})
+    assert view["xfers"] == 3 and view["extra"] == 7
+    assert view.get("missing", "d") == "d"
+    assert dict(view)["nodes"] == [0, 1]
+    assert view["hist:task_seconds"]["count"] == 1
+    with pytest.raises(TypeError):
+        view["xfers"] = 9
+    # the view is a snapshot: later increments don't leak into it
+    reg.inc("xfers")
+    assert view["xfers"] == 3
+
+
+def test_registry_merge():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.inc("n", 2)
+    b.inc("n", 5)
+    b.observe("lat", 0.1)
+    a.merge(b)
+    assert a.get("n") == 7
+    assert a.histogram("lat")["count"] == 1
+
+
+# -- Chrome trace export ------------------------------------------------------
+
+def _schema_check(doc):
+    assert set(doc) >= {"traceEvents"}
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] in ("X", "M")
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        if ev["ph"] == "X":
+            assert ev["ts"] >= 0.0 and ev["dur"] >= 0.0
+            assert isinstance(ev["name"], str) and isinstance(ev["cat"], str)
+            json.dumps(ev["args"])     # args must be JSON-serializable
+
+
+def test_chrome_trace_schema_and_normalization():
+    spans = [Span("GEMM", "EXEC", 0, 1, 100.0, 0.5, {"tid": 3}),
+             Span("XFER", "XFER", 1, 0, 100.2, 0.1, {"nbytes": 64}),
+             Span("GATHER", "GATHER", -1, 0, 101.0, 0.2)]
+    doc = chrome_trace(spans)
+    _schema_check(doc)
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert min(e["ts"] for e in xs) == 0.0        # normalized to run start
+    names = {(e["pid"], e["args"]["name"]) for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert (-1, "master") in names and (0, "node 0") in names
+
+
+def test_export_chrome_trace_roundtrip(tmp_path):
+    spans = [Span("E", "EXEC", 0, 0, 1.0, 0.5)]
+    p = tmp_path / "trace.json"
+    export_chrome_trace(spans, str(p))
+    _schema_check(json.load(open(p)))
+
+
+# -- executor integration -----------------------------------------------------
+
+def test_cluster_trace_covers_schedule():
+    """One EXEC span per scheduled task; XFER spans match the plan's
+    cross-node movement table exactly (the ``xfer_index`` oracle)."""
+    spec = hetero_spec((2, 2, 1))
+    plan, eng = _plan(_synth(64), 32, spec)
+    g = plan.program.graph
+    eng.run(_synth(64), executor="cluster", plan=plan, validate=True)
+    ex = [s for s in eng.last_spans if s.cat == "EXEC"]
+    tids = [s.args["tid"] for s in ex]
+    assert sorted(tids) == sorted(plan.schedule.placements)  # exactly once
+    # every EXEC span ran on its scheduled node
+    for s in ex:
+        assert s.node == plan.schedule.placements[s.args["tid"]].node
+    idx = plan.schedule.xfer_index(g)
+    got = {(s.args["version"], s.node): s.args["nbytes"]
+           for s in eng.last_spans if s.cat == "XFER"}
+    assert set(got) == set(idx)
+    for key, nbytes in got.items():
+        assert nbytes == idx[key][1]
+    assert any(s.cat == "GATHER" for s in eng.last_spans)
+
+
+def test_tracing_off_is_bit_identical_and_silent():
+    spec = hetero_spec((2, 2, 1))
+    expr = _synth(64)
+    plan, eng = _plan(expr, 32, spec)
+    on = eng.run(expr, executor="cluster", plan=plan)
+    assert eng.last_spans
+    plan2, eng2 = _plan(expr, 32, spec)
+    off = eng2.run(expr, executor="cluster", plan=plan2, trace=False)
+    assert eng2.last_spans == []
+    np.testing.assert_array_equal(on, off)
+    # stats survive the registry migration on both legs (dict view)
+    for st in (eng.last_exec_stats, eng2.last_exec_stats):
+        assert st["tasks_run"] == len(plan.program.graph)
+        assert "xfers" in st and "wire_bytes" in st
+
+
+def test_session_trace_accumulates_and_exports(tmp_path):
+    spec = hetero_spec((2, 2, 1))
+    A = CM.rand(48, 48, seed=0)
+    with CMMSession(CMMEngine(spec, TM), executor="elastic", tile=24) as s:
+        P = s.persist(A @ A)
+        one = len(s.spans)
+        assert one > 0
+        s.compute(P + A)
+        assert len(s.spans) > one      # spans accumulate across runs
+        p = tmp_path / "session_trace.json"
+        n = s.dump_trace(str(p), include_predicted=True)
+        doc = json.load(open(p))
+        _schema_check(doc)
+        assert n == len(doc["traceEvents"])
+        cats = {e["cat"] for e in doc["traceEvents"] if e["ph"] == "X"}
+        assert "EXEC" in cats and "PRED_EXEC" in cats
+        rep = s.drift_report()
+        assert {nd.node for nd in rep.nodes} >= set(range(spec.n_nodes))
+
+
+def test_local_and_batched_spans():
+    expr = _synth(48)
+    eng = CMMEngine(tile=24)
+    out1 = eng.run(expr, executor="local")
+    ex = [s for s in eng.last_spans if s.cat == "EXEC"]
+    assert sorted(s.args["tid"] for s in ex) == sorted(
+        eng.last_plan.program.graph.tasks)
+    out2 = eng.run(expr, executor="batched")
+    assert eng.last_spans and all(s.args.get("batched")
+                                  for s in eng.last_spans)
+    np.testing.assert_array_equal(out1, out2)
+
+
+# -- drift report -------------------------------------------------------------
+
+def _spans_from_sim(plan, slow_node=None, factor=5.0):
+    """Synthesize a measured timeline from the simulated one, inflating
+    ``slow_node``'s task durations by ``factor``."""
+    out = []
+    for iv in plan.sim.intervals:
+        dur = iv.end - iv.start
+        if iv.node == slow_node:
+            dur *= factor
+        out.append(Span(iv.kind, "EXEC", iv.node, iv.slot, iv.start, dur,
+                        {"tid": iv.tid, "kind": iv.kind}))
+    return out
+
+
+def test_drift_flags_synthetically_slow_node():
+    spec = hetero_spec((2, 2, 2))
+    plan, _ = _plan(_synth(96), 32, spec)
+    rep = drift_report(_spans_from_sim(plan, slow_node=1), plan, tm=TM)
+    nd = rep.node(1)
+    assert nd.flagged and nd.samples >= 3
+    assert rep.straggler_priors == [1]
+    assert nd.rel == pytest.approx(5.0, rel=0.01)
+    for n in (0, 2):
+        assert not rep.node(n).flagged
+    # a perfectly-matching run flags nothing
+    clean = drift_report(_spans_from_sim(plan), plan, tm=TM)
+    assert clean.straggler_priors == []
+    assert not any(nd.flagged for nd in clean.nodes)
+    assert clean.fleet_ratio == pytest.approx(1.0)
+    # kernel_time matched the simulator exactly -> unflagged
+    assert not clean.term("kernel_time").flagged
+
+
+def test_drift_reports_every_requested_node():
+    spec = hetero_spec((2, 2, 1))
+    plan, _ = _plan(_synth(64), 32, spec)
+    rep = drift_report([], plan, tm=TM)      # no spans at all
+    assert [nd.node for nd in rep.nodes] == list(range(spec.n_nodes))
+    assert all(nd.samples == 0 and not nd.flagged for nd in rep.nodes)
+
+
+def test_drift_term_recalibration_suggestion():
+    spec = hetero_spec((2, 2, 1))
+    plan, _ = _plan(_synth(64), 32, spec)
+    # XFERs took 4x the predicted ipc time -> bandwidth is ~4x optimistic
+    from repro.runtime.wire import predicted_xfer_seconds
+    spans = []
+    nbytes = 1 << 25                   # bandwidth-dominated payload
+    for _ in range(4):
+        p = predicted_xfer_seconds(nbytes, TM)
+        spans.append(Span("XFER", "XFER", 1, 0, 0.0, 4.0 * p,
+                          {"nbytes": nbytes, "codec": "raw"}))
+    rep = drift_report(spans, plan, tm=TM, min_samples=3)
+    td = rep.term("ipc_bandwidth")
+    assert td.flagged and td.ratio == pytest.approx(4.0)
+    assert td.suggested == pytest.approx(TM.ipc_bandwidth / 4.0)
+    # applying the suggestion collapses the drift into the band (the
+    # fixed ipc_latency term keeps the residual from being exactly 1.0)
+    tm2 = TM.recalibrated("ipc_bandwidth", td.ratio)
+    rep2 = drift_report(spans, plan, tm=tm2, min_samples=3)
+    assert rep2.term("ipc_bandwidth").ratio == pytest.approx(1.0, rel=0.05)
+    assert not rep2.term("ipc_bandwidth").flagged
+
+
+def test_drift_report_as_dict_json():
+    spec = hetero_spec((2, 2, 1))
+    plan, _ = _plan(_synth(64), 32, spec)
+    rep = drift_report(_spans_from_sim(plan, slow_node=0), plan, tm=TM)
+    d = json.loads(json.dumps(rep.as_dict()))
+    assert d["band"] == 1.5
+    assert len(d["nodes"]) == spec.n_nodes
+    assert rep.summary()                     # renders without raising
