@@ -1,7 +1,19 @@
-"""Render the §Roofline table from results/dryrun/*.json (launch/dryrun.py
-must have been run).  One row per (arch x shape x mesh) cell."""
+"""Render roofline tables.
+
+Two modes:
+
+* default — the §Roofline table from ``results/dryrun*/...`` JSON cells
+  (``launch/dryrun.py`` must have been run).  One row per
+  (arch x shape x mesh) cell.  Degrades to a hint when no results exist.
+* ``--tasks`` — the analytic per-task roofline audit from
+  ``core/roofline.py``: one row per distinct (task kind, tile, dtype)
+  signature of a paper-suite matmul+elementwise plan, comparing the
+  calibrated TimeModel's kernel time against the analytic bound.  Needs
+  no prior results — it is pure planning.
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 from typing import Dict, List, Optional
@@ -20,10 +32,15 @@ def load_cells(mesh: str = "single_pod_16x16") -> List[dict]:
         return out
     for arch in sorted(os.listdir(base)):
         ad = os.path.join(base, arch)
+        if not os.path.isdir(ad):
+            continue
         for f in sorted(os.listdir(ad)):
             if f.endswith(".json"):
-                with open(os.path.join(ad, f)) as fh:
-                    out.append(json.load(fh))
+                try:
+                    with open(os.path.join(ad, f)) as fh:
+                        out.append(json.load(fh))
+                except (OSError, json.JSONDecodeError) as e:
+                    print(f"(skipping unreadable cell {arch}/{f}: {e})")
     return out
 
 
@@ -43,11 +60,65 @@ def render(cells: List[dict]) -> str:
     return "\n".join(rows)
 
 
-def main(mesh: str = "single_pod_16x16"):
-    cells = load_cells(mesh)
+# -- analytic per-task audit (core/roofline.py) -------------------------------
+
+def task_audit_rows(n: int = 256, tile: int = 32,
+                    dtypes=("float64", "float32")) -> List[dict]:
+    """Audit rows for the paper-suite matmul+elementwise workload, per
+    dtype (itemsize feeds the byte counts)."""
+    import numpy as np
+    from repro.core import (ClusteredMatrix as CM, CMMEngine,
+                            analytic_time_model)
+    tm = analytic_time_model()
+    rows: List[dict] = []
+    for dt in dtypes:
+        npdt = np.dtype(dt)
+        A = CM.rand(n, n, seed=1, dtype=npdt)
+        B = CM.rand(n, n, seed=2, dtype=npdt)
+        C = CM.rand(n, n, seed=3, dtype=npdt)
+        eng = CMMEngine(timemodel=tm, tile=(tile, tile))
+        plan = eng.plan(((A @ B) + C).relu())
+        for r in eng.roofline_audit(plan, itemsize=npdt.itemsize):
+            d = r.as_dict()
+            d["dtype"] = dt
+            rows.append(d)
+    return rows
+
+
+def render_task_audit(rows: List[dict]) -> str:
+    hdr = (f"{'kind':10s} {'dims':16s} {'dtype':8s} {'count':>5s} "
+           f"{'FLOP/B':>7s} {'model(s)':>10s} {'roofl(s)':>10s} "
+           f"{'ratio':>7s} {'bound':>8s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['kind']:10s} {str(tuple(r['dims'])):16s} {r['dtype']:8s} "
+            f"{r['count']:5d} {r['intensity']:7.2f} {r['model_s']:10.3e} "
+            f"{r['roofline_s']:10.3e} {min(r['ratio'], 999.99):7.2f} "
+            f"{r['bound']:>8s}")
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="single_pod_16x16")
+    ap.add_argument("--tasks", action="store_true",
+                    help="render the analytic per-task roofline audit "
+                         "(no dry-run results needed)")
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--tile", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    if args.tasks:
+        rows = task_audit_rows(n=args.n, tile=args.tile)
+        print(render_task_audit(rows))
+        return rows
+
+    cells = load_cells(args.mesh)
     if not cells:
-        print(f"(no dry-run results for {mesh}; run "
-              f"`python -m repro.launch.dryrun --all`)")
+        print(f"(no dry-run results for {args.mesh} under {RESULTS}; run "
+              f"`python -m repro.launch.dryrun --all`, or use "
+              f"`--tasks` for the analytic per-task audit)")
         return []
     print(render(cells))
     return cells

@@ -28,6 +28,7 @@ import numpy as np
 
 from .fusion import (FusionReport, leaves_in_order_many, optimize_many,
                      residency_layout, structural_signature_many)
+from .roofline import audit_timemodel
 from .graph import TaskGraph, TaskKind
 from .heft import DirectCost, Schedule, heft_schedule
 from .lazy import ClusteredMatrix, Op, topo_order, topo_order_many
@@ -110,6 +111,16 @@ class Plan:
             best, t = "cluster", self.cluster_makespan
         return best
 
+    def roofline_waves(self, tm, **kw) -> list:
+        """Per-wave roofline fractions of this plan (how close each
+        wave's predicted compute sits to the analytic machine ceiling —
+        :func:`repro.core.roofline.wave_roofline`)."""
+        from .roofline import wave_roofline
+        from ..exec.batched import build_waves
+        waves = self.waves or build_waves(self.program.graph)
+        return wave_roofline(self.program.graph, waves, tm,
+                             spec=self.spec, **kw)
+
 
 def _memo_cluster_pred(g, sched, spec, tm) -> Callable[[], float]:
     """Memoized cluster-strategy predictor, shared by a cached plan and
@@ -159,6 +170,7 @@ class CMMEngine:
                  tile: Optional[int] = None,
                  cache_aware: bool = True,
                  fuse: bool = True,
+                 fuse_epilogue: bool = True,
                  plan_cache: bool = True,
                  fast_planning: bool = True,
                  elastic: bool = False):
@@ -167,6 +179,10 @@ class CMMEngine:
         self.tile = tile
         self.cache_aware = cache_aware
         self.fuse = fuse
+        #: fold single-consumer elementwise chains into their matmul as an
+        #: epilogue program (``fusion.fuse_matmul_epilogues_many``); off =
+        #: the unfused baseline (standalone FUSED tasks per tile)
+        self.fuse_epilogue = fuse_epilogue
         self.plan_cache = plan_cache
         #: elastic runtime mode: multi-node execution goes through the
         #: fault-tolerant ``"elastic"`` backend and ``auto`` selection
@@ -254,7 +270,8 @@ class CMMEngine:
             # transposed-operand tile indexing needs a square tile on
             # ragged grids; keep explicit TRANSPOSE nodes otherwise
             roots, report = optimize_many(roots,
-                                          fold_transpose=tile[0] == tile[1])
+                                          fold_transpose=tile[0] == tile[1],
+                                          fuse_epilogue=self.fuse_epilogue)
 
         key = None
         if self.plan_cache:
@@ -494,6 +511,27 @@ class CMMEngine:
         from .drift import drift_report
         return drift_report(self.last_spans, self.last_plan,
                             tm=self.timemodel, **kw)
+
+    def roofline_report(self, **kw):
+        """Achieved-vs-roofline analysis over the last run's spans
+        (:func:`repro.core.roofline.roofline_report` against the last
+        plan) — nodes far below the analytic ceiling are straggler
+        priors even when the fitted model has absorbed their slowdown."""
+        if self.last_plan is None:
+            raise RuntimeError("no executed plan to analyse — "
+                               "run execute_plan() first")
+        from .roofline import roofline_report
+        return roofline_report(self.last_spans, self.last_plan,
+                               tm=self.timemodel, **kw)
+
+    def roofline_audit(self, plan: Optional[Plan] = None, **kw):
+        """Audit the TimeModel against the analytic roofline for a plan's
+        task signatures (:func:`repro.core.roofline.audit_timemodel`)."""
+        plan = plan or self.last_plan
+        if plan is None:
+            raise RuntimeError("no plan to audit — plan() or run() first")
+        return audit_timemodel(plan.program.graph, self.timemodel,
+                               spec=plan.spec, **kw)
 
     def choose_executor(self, plan: Plan) -> str:
         """Per-plan executor strategy from predicted makespans (§3.3's

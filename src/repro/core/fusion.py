@@ -20,6 +20,15 @@ The engine runs these rewrite passes over the lazy expression DAG *before*
   task per tile, eliminating every interior tile buffer of the chain.
   Multi-consumer nodes are never inlined (their value is needed elsewhere);
   they can still root their own region.
+* **matmul-epilogue fusion** — an elementwise node or FUSED region whose
+  only use of a single-consumer MATMUL is as a same-shaped operand is
+  folded INTO that matmul as an **epilogue program** on its payload
+  (``graph.epilogue_payload``).  The hot shape ``relu(A@B + C)`` then
+  executes as the addmul k-chain alone: the last chain task applies the
+  epilogue to the accumulated ``C`` tile in one pass — no FUSED task, no
+  materialised matmul intermediate.  The epilogue reuses the FUSED
+  tile-program encoding with input slot 0 = the accumulator and slots
+  ``1..`` = the extra operands appended to the MATMUL's parents.
 
 The FUSED payload is a small hashable tile program — a tuple of
 instructions in topological order::
@@ -40,6 +49,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from .graph import epilogue_payload, matmul_epilogue, matmul_flags
 from .lazy import (ClusteredMatrix, EWISE_FNS, Op, apply_scale, topo_order,
                    topo_order_many)
 
@@ -60,6 +70,8 @@ class FusionReport:
     transposes_folded: int = 0
     fused_regions: int = 0
     fused_ops: int = 0          # elementwise nodes swallowed by FUSED regions
+    epilogues_fused: int = 0    # FUSED/elementwise nodes folded into a MATMUL
+    epilogue_ops: int = 0       # arithmetic instrs now running as epilogues
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)
@@ -121,25 +133,32 @@ def fold_identities_many(roots: Sequence[ClusteredMatrix],
             if a.op is Op.TRANSPOSE:          # (A.T).T -> A
                 out = a.parents[0]
         elif node.op is Op.MATMUL:
-            a, b = parents
-            if _is_eye(b) and a.dtype == node.dtype:
+            a, b = parents[:2]
+            extras = parents[2:]           # epilogue operands (re-optimize)
+            epi = matmul_epilogue(node.payload)
+            if epi is None and not extras and _is_eye(b) \
+                    and a.dtype == node.dtype:
                 out = a
-            elif _is_eye(a) and b.dtype == node.dtype:
+            elif epi is None and not extras and _is_eye(a) \
+                    and b.dtype == node.dtype:
                 out = b
             else:
-                ta, tb = node.payload or (False, False)
+                flags0 = matmul_flags(node.payload)
+                ta, tb = flags0
                 while fold_transpose and a.op is Op.TRANSPOSE:
                     a, ta = a.parents[0], not ta
                     report.transposes_folded += 1
                 while fold_transpose and b.op is Op.TRANSPOSE:
                     b, tb = b.parents[0], not tb
                     report.transposes_folded += 1
-                if (a, b) != parents or (ta, tb) != (node.payload or
-                                                    (False, False)):
+                if (a, b) != parents[:2] or (ta, tb) != flags0:
+                    if epi is not None:
+                        payload = epilogue_payload((ta, tb), epi)
+                    else:
+                        payload = (ta, tb) if ta or tb else None
                     out = ClusteredMatrix(Op.MATMUL, node.shape, node.dtype,
-                                          parents=(a, b),
-                                          payload=((ta, tb) if ta or tb
-                                                   else None),
+                                          parents=(a, b) + extras,
+                                          payload=payload,
                                           name=node.name)
 
         if out is not None and out.op is not Op.MATMUL:
@@ -314,35 +333,149 @@ def fuse_elementwise_many(roots: Sequence[ClusteredMatrix],
 
 
 # ---------------------------------------------------------------------------
+# pass 4: matmul-epilogue fusion
+# ---------------------------------------------------------------------------
+
+def _as_epilogue_prog(node: ClusteredMatrix,
+                      slot_of: Dict[int, int]) -> tuple:
+    """Rewrite ``node`` (a FUSED region or a single elementwise op) as an
+    epilogue program whose ``("in", k)`` slots follow ``slot_of`` —
+    parent uid -> epilogue input slot (0 = the matmul accumulator)."""
+    if node.op is Op.FUSED:
+        out = []
+        for ins in node.payload:
+            if ins[0] == "in":
+                out.append(("in", slot_of[node.parents[ins[1]].uid]))
+            else:
+                out.append(ins)
+        return tuple(out)
+    # single elementwise node: synthesize the minimal program
+    slots = [slot_of[p.uid] for p in node.parents]
+    instrs: List[tuple] = []
+    idx_of: Dict[int, int] = {}          # input slot -> instruction index
+    for s in slots:
+        if s not in idx_of:
+            instrs.append(("in", s))
+            idx_of[s] = len(instrs) - 1
+    ops = [idx_of[s] for s in slots]
+    if node.op is Op.EWISE:
+        instrs.append(("ewise", node.payload, ops[0]))
+    elif node.op is Op.SCALE:
+        kind, s = node.payload
+        instrs.append(("scale", kind, s, ops[0]))
+    else:
+        opname = {Op.ADD: "add", Op.SUB: "sub", Op.EWMUL: "ewmul"}[node.op]
+        instrs.append((opname, ops[0], ops[1]))
+    return tuple(instrs)
+
+
+def fuse_matmul_epilogues(root: ClusteredMatrix,
+                          report: FusionReport) -> ClusteredMatrix:
+    """Single-root wrapper over :func:`fuse_matmul_epilogues_many`."""
+    return fuse_matmul_epilogues_many((root,), report)[0]
+
+
+def fuse_matmul_epilogues_many(roots: Sequence[ClusteredMatrix],
+                               report: FusionReport
+                               ) -> List[ClusteredMatrix]:
+    """Fold elementwise consumers of single-consumer MATMULs into the
+    matmul as an epilogue program (runs after elementwise fusion, so a
+    whole chain like ``relu(A@B + C)`` arrives as ONE FUSED node).
+
+    Candidate anchor: a MATMUL parent of an elementwise/FUSED node that
+    (a) has no epilogue yet, (b) is consumed ONLY by this node, (c) is not
+    itself a program root, and (d) has the consumer's shape (elementwise
+    ops preserve shape, so this always holds for direct operands).  The
+    consumer is rewritten into the matmul: parents become
+    ``(A, B, *other_operands)`` and the payload carries the epilogue
+    program with slot 0 bound to the accumulated ``C`` tile.  Only ONE
+    matmul is absorbed per region — other matmul operands stay
+    materialised inputs (epilogue extras)."""
+    order = topo_order_many(roots)
+    cons = _consumers(roots)
+    root_uids = {r.uid for r in roots}
+    new: Dict[int, ClusteredMatrix] = {}
+
+    for node in order:
+        parents = tuple(new[p.uid] for p in node.parents)
+        out: Optional[ClusteredMatrix] = None
+
+        mi = None
+        if node.op is Op.FUSED or node.op in ELEMENTWISE_OPS:
+            for i, (po, pn) in enumerate(zip(node.parents, parents)):
+                if (pn.op is Op.MATMUL
+                        and matmul_epilogue(pn.payload) is None
+                        and po.uid not in root_uids
+                        and cons.get(po.uid) == {node.uid}
+                        and pn.shape == node.shape):
+                    mi = i
+                    break
+        if mi is not None:
+            anchor = parents[mi]
+            # epilogue input slots: 0 = accumulator; 1.. = the region's
+            # other external operands, in first-use order.  Keyed by the
+            # PRE-pass parent uid so a CSE-duplicated anchor operand
+            # (e.g. ``M + M``) maps every occurrence to slot 0.
+            extras: List[ClusteredMatrix] = []
+            slot_of: Dict[int, int] = {node.parents[mi].uid: 0}
+            for po, pn in zip(node.parents, parents):
+                if po.uid not in slot_of:
+                    slot_of[po.uid] = 1 + len(extras)
+                    extras.append(pn)
+            prog = _as_epilogue_prog(node, slot_of)
+            out = ClusteredMatrix(
+                Op.MATMUL, node.shape, node.dtype,
+                parents=tuple(anchor.parents) + tuple(extras),
+                payload=epilogue_payload(matmul_flags(anchor.payload), prog),
+                name=node.name)
+            report.epilogues_fused += 1
+            report.epilogue_ops += fused_op_count(prog)
+
+        if out is None:
+            out = node if parents == node.parents else \
+                ClusteredMatrix(node.op, node.shape, node.dtype,
+                                parents=parents, payload=node.payload,
+                                name=node.name)
+        new[node.uid] = out
+
+    return [new[r.uid] for r in roots]
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
 def optimize(root: ClusteredMatrix, fold_transpose: bool = True,
-             fuse: bool = True) -> Tuple[ClusteredMatrix, FusionReport]:
+             fuse: bool = True, fuse_epilogue: bool = True
+             ) -> Tuple[ClusteredMatrix, FusionReport]:
     """Run all rewrite passes; returns (optimized root, report).
 
     ``fold_transpose=False`` keeps explicit TRANSPOSE nodes (needed when the
     tile is non-square, where transposed tile indexing is ill-defined on
-    ragged grids).
+    ragged grids).  ``fuse_epilogue=False`` keeps elementwise consumers of
+    matmuls as standalone FUSED tasks (the unfused oracle baseline).
     """
     roots, report = optimize_many((root,), fold_transpose=fold_transpose,
-                                  fuse=fuse)
+                                  fuse=fuse, fuse_epilogue=fuse_epilogue)
     return roots[0], report
 
 
 def optimize_many(roots: Sequence[ClusteredMatrix],
-                  fold_transpose: bool = True, fuse: bool = True
+                  fold_transpose: bool = True, fuse: bool = True,
+                  fuse_epilogue: bool = True
                   ) -> Tuple[List[ClusteredMatrix], FusionReport]:
     """Optimize several roots as ONE program: every pass (identity folds,
-    CSE, elementwise fusion) runs over the union DAG, so subexpressions
-    shared *across* roots are merged — the ``compute_many`` shared-CSE
-    contract."""
+    CSE, elementwise fusion, matmul-epilogue fusion) runs over the union
+    DAG, so subexpressions shared *across* roots are merged — the
+    ``compute_many`` shared-CSE contract."""
     report = FusionReport(nodes_before=len(topo_order_many(roots)))
     roots = fold_identities_many(roots, report,
                                  fold_transpose=fold_transpose)
     roots = cse_many(roots, report)
     if fuse:
         roots = fuse_elementwise_many(roots, report)
+        if fuse_epilogue:
+            roots = fuse_matmul_epilogues_many(roots, report)
     report.nodes_after = len(topo_order_many(roots))
     return list(roots), report
 

@@ -50,11 +50,40 @@ COMPUTE_KINDS = {
 
 def matmul_flags(payload) -> Tuple[bool, bool]:
     """Transposed-operand flags carried by ADDMUL/MATMUL tasks (the fusion
-    optimizer folds ``A.T @ B`` into flags instead of a TRANSPOSE pass)."""
+    optimizer folds ``A.T @ B`` into flags instead of a TRANSPOSE pass).
+
+    Understands both the bare ``(ta, tb)`` form and the epilogue-carrying
+    ``("epi", (ta, tb), prog)`` form (see :func:`epilogue_payload`)."""
+    if (isinstance(payload, tuple) and len(payload) == 3
+            and payload[0] == "epi"):
+        payload = payload[1]
     if (isinstance(payload, tuple) and len(payload) == 2
             and all(isinstance(x, bool) for x in payload)):
         return payload
     return (False, False)
+
+
+def matmul_epilogue(payload) -> Optional[tuple]:
+    """The fused elementwise epilogue program attached to an ADDMUL/MATMUL
+    (``None`` when the task is a plain GEMM-accumulate).
+
+    The program reuses the FUSED tile-program encoding (``core.fusion``):
+    input slot 0 is the fully accumulated ``C`` tile, slots ``1..`` are the
+    task's extra operand tiles ``ins[2:]`` in order.  The executor applies
+    it once, after the last k-step of the accumulate chain."""
+    if (isinstance(payload, tuple) and len(payload) == 3
+            and payload[0] == "epi"):
+        return payload[2]
+    return None
+
+
+def epilogue_payload(flags: Optional[Tuple[bool, bool]],
+                     prog: tuple) -> tuple:
+    """Build the tagged MATMUL/ADDMUL payload carrying a fused epilogue:
+    ``("epi", (ta, tb), prog)`` — hashable, so CSE / plan-cache keys and
+    the wave executor's group signatures work unchanged."""
+    ta, tb = matmul_flags(flags)
+    return ("epi", (ta, tb), tuple(prog))
 
 
 @dataclass(frozen=True)
@@ -191,6 +220,15 @@ class TaskGraph:
                 assert sa[1] == sb[0], f"inner dim mismatch in {t}"
                 assert t.out.shape == (sa[0], sb[1]), \
                     f"out shape mismatch in {t}"
+                if matmul_epilogue(t.payload) is not None:
+                    # epilogue extras are elementwise operands of the
+                    # accumulated C tile — same shape by construction
+                    for r in t.ins[2:]:
+                        assert r.shape == t.out.shape, \
+                            f"epilogue extra shape mismatch in {t}"
+                else:
+                    assert len(t.ins) == 2, \
+                        f"extra ins without an epilogue in {t}"
         self.topo()  # raises on cycle
 
     def counts(self) -> Dict[str, int]:

@@ -352,13 +352,19 @@ def eager_eval(root: ClusteredMatrix) -> np.ndarray:
         elif node.op is Op.EWMUL:
             vals[node.uid] = vals[node.parents[0].uid] * vals[node.parents[1].uid]
         elif node.op is Op.MATMUL:
+            from .graph import matmul_epilogue, matmul_flags
             a = vals[node.parents[0].uid]
             b = vals[node.parents[1].uid]
-            if node.payload:                 # folded-transpose flags (ta, tb)
-                ta, tb = node.payload
-                a = a.T if ta else a
-                b = b.T if tb else b
-            vals[node.uid] = a @ b
+            ta, tb = matmul_flags(node.payload)  # folded-transpose flags
+            a = a.T if ta else a
+            b = b.T if tb else b
+            c = a @ b
+            epi = matmul_epilogue(node.payload)
+            if epi is not None:
+                from .fusion import eval_fused   # local import (cycle)
+                c = eval_fused(epi, [c] + [vals[p.uid]
+                                           for p in node.parents[2:]])
+            vals[node.uid] = c
         elif node.op is Op.FUSED:
             from .fusion import eval_fused   # local import (cycle)
             vals[node.uid] = eval_fused(

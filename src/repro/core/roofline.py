@@ -1,0 +1,406 @@
+"""Analytic roofline model: FLOP/byte counts per task, node peak
+estimates, and an audit of the calibrated TimeModel against the bound.
+
+The TimeModel (§3.4) is *fitted* — OLS over profiled timings — so nothing
+in the planning loop says whether its predictions are physically
+plausible, or whether a node's measured throughput is anywhere near what
+the machine can do.  This module supplies the missing analytic side:
+
+* :func:`task_work` — closed-form FLOP and byte counts per
+  ``(task kind, tile shape, dtype)``, using the same arithmetic
+  conventions the rest of the planner prices with (``2mnk`` matmuls,
+  ``fusion.fused_flops`` weights for elementwise chains and matmul
+  epilogues).
+* :func:`node_peaks` — per-node peak FLOP/s and memory bandwidth
+  estimates *derived from the calibrated TimeModel itself* (marginal
+  rate of the fitted matmul / ewise polynomials, scaled by the
+  machine model's per-node slowdown), so the roofline and the planner
+  price the same machine.
+* :func:`audit_timemodel` — one row per distinct task signature
+  comparing the model's ``kernel_time`` against the analytic roofline
+  bound ``max(flops/peak, bytes/bw)``.  A ratio *below* 1 means the
+  fitted polynomial claims super-roofline throughput (mis-calibration);
+  a large ratio means the kernel is priced far off the bound.
+* :func:`wave_roofline` — per-wave roofline fractions for a planned
+  program (how close each wave's predicted time is to its bound).
+* :func:`roofline_report` — joins a real run's EXEC spans (the PR-9
+  flight recorder) against per-node rooflines: nodes whose achieved
+  fraction falls below ``band`` x the fleet median become straggler
+  priors, same contract as ``drift.DriftReport.straggler_priors``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .graph import Task, TaskKind, TileRef, matmul_epilogue
+from .timemodel import CostCache, TimeModel
+
+__all__ = ["TaskWork", "task_work", "NodePeak", "node_peaks",
+           "roofline_time", "AuditRow", "audit_timemodel",
+           "wave_roofline", "NodeRoofline", "RooflineReport",
+           "roofline_report"]
+
+#: spans shorter than this are timer noise, not throughput evidence
+_MIN_SPAN_S = 1e-7
+
+
+@dataclass(frozen=True)
+class TaskWork:
+    """Closed-form work of one task: arithmetic and memory traffic."""
+
+    flops: int
+    bytes: int
+
+    @property
+    def intensity(self) -> float:
+        """Arithmetic intensity, FLOP/byte (inf for pure compute)."""
+        if self.bytes == 0:
+            return math.inf if self.flops else 0.0
+        return self.flops / self.bytes
+
+
+def task_work(task: Task, itemsize: int = 8) -> TaskWork:
+    """FLOPs and bytes moved by one task, under the planner's conventions.
+
+    ``itemsize`` is the element width in bytes (8 for the default f64
+    tiles; pass 4/2 for f32/bf16 mixed-precision accounting).  Matmul
+    counts ``2mnk``; elementwise ops count 1 FLOP/element for +,-,x and
+    4 for transcendental EWISE passes — identical weights to
+    ``fusion.fused_flops``, so the analytic counts agree with the flops
+    the tiler prices onto tasks.
+    """
+    k = task.kind
+    if k in (TaskKind.ADDMUL, TaskKind.MATMUL):
+        m, n, kk = task.dims()
+        flops = 2 * m * n * kk
+        # A (m,n) + B (n,k) streamed in, C (m,k) read + written back
+        nbytes = (m * n + n * kk + 2 * m * kk) * itemsize
+        epi = matmul_epilogue(task.payload)
+        if epi is not None:
+            from .fusion import fused_flops
+            flops += fused_flops(epi, m, kk)
+            # epilogue runs on the in-register/VMEM accumulator: only the
+            # extra operands add memory traffic, not the chain temps
+            nbytes += (len(task.ins) - 2) * m * kk * itemsize
+        return TaskWork(flops, nbytes)
+    if k in (TaskKind.SEND, TaskKind.RECV, TaskKind.TAKECOPY,
+             TaskKind.RESIDENT):
+        return TaskWork(0, 0)
+    dims = task.dims()
+    m, n = dims if len(dims) == 2 else (dims[0], 1)
+    if k is TaskKind.FUSED:
+        from .fusion import fused_flops
+        return TaskWork(fused_flops(task.payload, m, n),
+                        (len(task.ins) + 1) * m * n * itemsize)
+    if k is TaskKind.EWISE:
+        return TaskWork(4 * m * n, 2 * m * n * itemsize)
+    if k in (TaskKind.ADD, TaskKind.SUB, TaskKind.EWMUL):
+        return TaskWork(m * n, 3 * m * n * itemsize)
+    if k is TaskKind.SCALE:
+        return TaskWork(m * n, 2 * m * n * itemsize)
+    if k is TaskKind.TRANSPOSE:
+        return TaskWork(0, 2 * m * n * itemsize)
+    if k in (TaskKind.CALLOC, TaskKind.FILL):
+        return TaskWork(0, m * n * itemsize)
+    raise ValueError(k)  # pragma: no cover
+
+
+@dataclass(frozen=True)
+class NodePeak:
+    """One node's estimated machine peaks (from the calibrated model)."""
+
+    node: int
+    flops_per_s: float
+    bytes_per_s: float
+
+
+def _probe_task(kind: TaskKind, dims: Tuple[int, ...]) -> Task:
+    if kind in (TaskKind.ADDMUL, TaskKind.MATMUL):
+        m, n, k = dims
+        return Task(-1, kind,
+                    (TileRef(-1, 0, 0, (m, n)), TileRef(-2, 0, 0, (n, k))),
+                    TileRef(-3, 0, 0, (m, k)), payload=(False, False),
+                    flops=2 * m * n * k)
+    m, n = dims
+    return Task(-1, kind, (TileRef(-1, 0, 0, (m, n)),),
+                TileRef(-2, 0, 0, (m, n)), payload="exp", flops=4 * m * n)
+
+
+def node_peaks(tm: TimeModel, spec=None,
+               nodes: Optional[Iterable[int]] = None) -> List[NodePeak]:
+    """Per-node peak estimates implied by the calibrated TimeModel.
+
+    The peaks are the *marginal* rates of the fitted polynomials — two
+    probe sizes difference out the constant launch overhead — scaled by
+    each node's machine-model slowdown.  They are the model's own belief
+    about the hardware ceiling, which is exactly what the audit and the
+    span report need: a node achieving far below them is either
+    mis-modelled (drift) or throttled (straggler).
+    """
+    if nodes is None:
+        nodes = range(spec.n_nodes) if spec is not None else [0]
+    peaks = []
+    for node in nodes:
+        t1 = tm.kernel_time(_probe_task(TaskKind.ADDMUL, (256, 256, 256)),
+                            spec, node)
+        t2 = tm.kernel_time(_probe_task(TaskKind.ADDMUL, (512, 512, 512)),
+                            spec, node)
+        df = 2 * (512 ** 3 - 256 ** 3)
+        flops_per_s = df / max(t2 - t1, 1e-12)
+        e1 = tm.kernel_time(_probe_task(TaskKind.EWISE, (512, 512)),
+                            spec, node)
+        e2 = tm.kernel_time(_probe_task(TaskKind.EWISE, (1024, 1024)),
+                            spec, node)
+        # the polynomials are fitted on f64 tiles: 2 x 8 B per element
+        db = 2 * 8 * (1024 ** 2 - 512 ** 2)
+        bytes_per_s = db / max(e2 - e1, 1e-12)
+        peaks.append(NodePeak(node=node, flops_per_s=flops_per_s,
+                              bytes_per_s=bytes_per_s))
+    return peaks
+
+
+def roofline_time(work: TaskWork, peak: NodePeak) -> float:
+    """The roofline bound: max of compute-limited and memory-limited time."""
+    tc = work.flops / peak.flops_per_s if peak.flops_per_s > 0 else 0.0
+    tb = work.bytes / peak.bytes_per_s if peak.bytes_per_s > 0 else 0.0
+    return max(tc, tb)
+
+
+@dataclass
+class AuditRow:
+    """One distinct task signature: fitted model vs analytic bound."""
+
+    kind: str
+    dims: Tuple[int, ...]
+    count: int
+    flops: int
+    bytes: int
+    intensity: float
+    model_s: float
+    roofline_s: float
+    #: model_s / roofline_s — < 1 claims super-roofline throughput
+    ratio: float
+    #: which roof binds: "compute" or "memory"
+    bound: str
+
+    def as_dict(self) -> dict:
+        return {"kind": self.kind, "dims": list(self.dims),
+                "count": self.count, "flops": self.flops,
+                "bytes": self.bytes, "intensity": self.intensity,
+                "model_s": self.model_s, "roofline_s": self.roofline_s,
+                "ratio": self.ratio, "bound": self.bound}
+
+
+def audit_timemodel(g, tm: TimeModel, spec=None, node: int = 0,
+                    itemsize: int = 8) -> List[AuditRow]:
+    """Audit the fitted TimeModel against the analytic roofline, one row
+    per distinct task signature of graph ``g`` (priced on ``node``).
+
+    Rows with ``ratio < 1`` deserve suspicion: the OLS fit claims the
+    kernel beats the machine's own peak estimate.  Rows with very large
+    ratios indicate launch-overhead-dominated tiny tiles or a stale fit
+    (cross-check with the drift report's ``kernel_time`` term).
+    """
+    peak = node_peaks(tm, spec, nodes=[node])[0]
+    rows: Dict[tuple, AuditRow] = {}
+    for t in g:
+        if t.kind in (TaskKind.SEND, TaskKind.RECV, TaskKind.TAKECOPY,
+                      TaskKind.RESIDENT):
+            continue
+        sig = CostCache.signature(t)
+        row = rows.get(sig)
+        if row is not None:
+            row.count += 1
+            continue
+        work = task_work(t, itemsize)
+        model_s = tm.kernel_time(t, spec, node)
+        roof_s = roofline_time(work, peak)
+        tc = work.flops / peak.flops_per_s if peak.flops_per_s else 0.0
+        rows[sig] = AuditRow(
+            kind=t.kind.value, dims=t.dims(), count=1,
+            flops=work.flops, bytes=work.bytes,
+            intensity=work.intensity, model_s=model_s,
+            roofline_s=roof_s,
+            ratio=model_s / roof_s if roof_s > 0 else math.inf,
+            bound="compute" if tc >= roof_s else "memory")
+    return sorted(rows.values(),
+                  key=lambda r: (r.kind, r.dims))
+
+
+def wave_roofline(g, waves: Sequence[Sequence[int]], tm: TimeModel,
+                  spec=None, node: int = 0,
+                  itemsize: int = 8) -> List[dict]:
+    """Per-wave roofline fractions for a planned program.
+
+    Each wave's predicted compute (summed ``kernel_time`` of its tasks)
+    is compared to the wave's aggregate roofline bound; ``fraction`` =
+    bound / predicted, i.e. how close the plan thinks the wave runs to
+    the machine ceiling (1.0 = at the roofline).
+    """
+    peak = node_peaks(tm, spec, nodes=[node])[0]
+    cost = CostCache(tm, spec)
+    out = []
+    for wi, wave in enumerate(waves):
+        flops = nbytes = 0
+        model_s = 0.0
+        for tid in wave:
+            t = g.tasks[tid]
+            if t.kind in (TaskKind.SEND, TaskKind.RECV):
+                continue
+            w = task_work(t, itemsize)
+            flops += w.flops
+            nbytes += w.bytes
+            model_s += cost.kernel(t, node)
+        roof_s = roofline_time(TaskWork(flops, nbytes), peak)
+        out.append({"wave": wi, "tasks": len(wave), "flops": flops,
+                    "bytes": nbytes, "model_s": model_s,
+                    "roofline_s": roof_s,
+                    "fraction": (roof_s / model_s) if model_s > 0 else None})
+    return out
+
+
+def _median(xs: List[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+@dataclass
+class NodeRoofline:
+    """One node's achieved-vs-roofline summary over its EXEC spans."""
+
+    node: int
+    samples: int
+    #: median(roofline bound / actual duration) over this node's tasks —
+    #: 1.0 means the node ran its tasks at the machine ceiling
+    fraction: Optional[float]
+    #: fraction normalized by the fleet median — the straggler signal
+    #: (planned heterogeneity is already priced into each node's peak)
+    rel: Optional[float]
+    flagged: bool
+    achieved_flops_per_s: Optional[float] = None
+
+    def as_dict(self) -> dict:
+        return {"node": self.node, "samples": self.samples,
+                "fraction": self.fraction, "rel": self.rel,
+                "flagged": self.flagged,
+                "achieved_flops_per_s": self.achieved_flops_per_s}
+
+
+@dataclass
+class RooflineReport:
+    peaks: List[NodePeak]
+    nodes: List[NodeRoofline]
+    #: nodes achieving below band x fleet median — straggler priors,
+    #: same contract as ``DriftReport.straggler_priors``
+    below_band: List[int]
+    band: float
+    fleet_fraction: Optional[float] = None
+
+    def node(self, n: int) -> Optional[NodeRoofline]:
+        for nr in self.nodes:
+            if nr.node == n:
+                return nr
+        return None
+
+    def as_dict(self) -> dict:
+        return {"band": self.band, "fleet_fraction": self.fleet_fraction,
+                "below_band": list(self.below_band),
+                "peaks": [{"node": p.node, "flops_per_s": p.flops_per_s,
+                           "bytes_per_s": p.bytes_per_s}
+                          for p in self.peaks],
+                "nodes": [nr.as_dict() for nr in self.nodes]}
+
+    def summary(self) -> str:
+        ff = (None if self.fleet_fraction is None
+              else round(self.fleet_fraction, 3))
+        lines = [f"roofline report (band {self.band}x, "
+                 f"fleet fraction {ff})"]
+        for nr in self.nodes:
+            mark = " <-- BELOW ROOFLINE BAND" if nr.node in \
+                self.below_band else ""
+            f = "n/a" if nr.fraction is None else f"{nr.fraction:.3f}"
+            gf = ("" if nr.achieved_flops_per_s is None else
+                  f", {nr.achieved_flops_per_s / 1e9:.2f} GFLOP/s")
+            lines.append(f"  node {nr.node}: {nr.samples} tasks, "
+                         f"roofline fraction {f}{gf}{mark}")
+        return "\n".join(lines)
+
+
+def roofline_report(spans: Iterable, plan, tm: Optional[TimeModel] = None,
+                    band: float = 2.0, min_samples: int = 3,
+                    nodes: Optional[Iterable[int]] = None,
+                    itemsize: int = 8) -> RooflineReport:
+    """Join EXEC spans against per-node rooflines; flag throttled nodes.
+
+    For every span, the task's analytic bound on the node it actually ran
+    on (per-node peaks include the machine model's planned slowdowns) is
+    divided by the measured duration — the *achieved roofline fraction*.
+    A node whose median fraction falls below ``band`` x the fleet median
+    with at least ``min_samples`` samples lands in ``below_band``:
+    an *unplanned* straggler (e.g. a chaos-throttled VM), since planned
+    heterogeneity cancels in the per-node peak.  Complements the drift
+    report: drift compares against the *fitted* prediction, this compares
+    against the *analytic ceiling*, so they disagree exactly when the
+    fitted model itself has absorbed the slowdown.
+    """
+    if tm is None:
+        tm = getattr(plan, "timemodel", None)
+    if tm is None:
+        from .timemodel import analytic_time_model
+        tm = analytic_time_model()
+    g = plan.program.graph
+    spec = plan.spec
+
+    if nodes is None:
+        nodes = range(spec.n_nodes) if spec is not None else []
+    spans = list(spans)
+    span_nodes = {sp.node for sp in spans if sp.cat == "EXEC"}
+    all_nodes = sorted(set(int(n) for n in nodes) | span_nodes)
+
+    peaks = node_peaks(tm, spec, nodes=all_nodes)
+    peak_of = {p.node: p for p in peaks}
+
+    per_node: Dict[int, List[float]] = {}
+    per_node_flops: Dict[int, List[Tuple[int, float]]] = {}
+    for sp in spans:
+        if sp.cat != "EXEC":
+            continue
+        tid = sp.args.get("tid")
+        t = g.tasks.get(tid) if tid is not None else None
+        if t is None or sp.dur < _MIN_SPAN_S:
+            continue
+        peak = peak_of.get(sp.node)
+        if peak is None:
+            continue
+        work = task_work(t, itemsize)
+        bound = roofline_time(work, peak)
+        if bound <= 0:
+            continue
+        per_node.setdefault(sp.node, []).append(bound / sp.dur)
+        per_node_flops.setdefault(sp.node, []).append((work.flops, sp.dur))
+
+    node_frac = {n: _median(v) for n, v in per_node.items()}
+    fleet = _median(list(node_frac.values())) if node_frac else None
+    rows: List[NodeRoofline] = []
+    below: List[int] = []
+    for n in all_nodes:
+        samples = per_node.get(n, [])
+        frac = node_frac.get(n)
+        rel = None
+        flagged = False
+        if frac is not None and fleet and fleet > 0:
+            rel = frac / fleet
+            flagged = len(samples) >= min_samples and rel < 1.0 / band
+            if flagged:
+                below.append(n)
+        fl = per_node_flops.get(n, [])
+        tot_t = sum(d for _, d in fl)
+        achieved = (sum(f for f, _ in fl) / tot_t) if tot_t > 0 else None
+        rows.append(NodeRoofline(node=n, samples=len(samples),
+                                 fraction=frac, rel=rel, flagged=flagged,
+                                 achieved_flops_per_s=achieved))
+    return RooflineReport(peaks=peaks, nodes=rows, below_band=below,
+                          band=band, fleet_fraction=fleet)

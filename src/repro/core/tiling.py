@@ -13,7 +13,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .graph import Task, TaskGraph, TaskKind, TileRef
+from .graph import (Task, TaskGraph, TaskKind, TileRef, matmul_epilogue,
+                    matmul_flags)
 from .lazy import ClusteredMatrix, Op, topo_order, topo_order_many
 
 
@@ -162,14 +163,16 @@ def tile_expression_many(roots: Sequence[ClusteredMatrix], tile,
                     entry[(i, j)] = (r, task.tid)
 
         elif node.op is Op.MATMUL:
-            a, b = node.parents
+            a, b = node.parents[:2]
+            extras = node.parents[2:]      # epilogue operands
+            epi = matmul_epilogue(node.payload)
             ga = tiles[a.uid]
             gb = tiles[b.uid]
             # transposed-operand flags folded in by the fusion optimizer:
             # operand tiles are indexed through the transpose instead of a
             # materialised TRANSPOSE pass (requires a square tile for ragged
             # grids to line up; the engine guarantees that)
-            ta, tb = node.payload or (False, False)
+            ta, tb = matmul_flags(node.payload)
             if (ta or tb) and t[0] != t[1]:
                 raise ValueError("transposed matmul needs a square tile")
             # the inner dimension is tiled by tn on A but by tm on B; a
@@ -183,6 +186,13 @@ def tile_expression_many(roots: Sequence[ClusteredMatrix], tile,
                     f"got {t}; use an int tile size")
             kt = grid_of(a.shape, t)[0 if ta else 1]  # inner tile count
             flags = (ta, tb) if ta or tb else None
+            if epi is not None:
+                # the k-chain accumulates in the *matmul* dtype; the
+                # epilogue's own output dtype emerges when the last chain
+                # task rebinds the tile (bit-identity with the unfused
+                # CALLOC-in-matmul-dtype + separate-FUSED-task path)
+                import numpy as _np
+                dtypes[node.uid] = _np.promote_types(a.dtype, b.dtype)
             for i in range(gm):
                 for j in range(gn):
                     r = ref(node, i, j)
@@ -194,10 +204,25 @@ def tile_expression_many(roots: Sequence[ClusteredMatrix], tile,
                         m_ = ra.shape[1] if ta else ra.shape[0]
                         n_ = ra.shape[0] if ta else ra.shape[1]
                         k_ = rb.shape[0] if tb else rb.shape[1]
-                        task = g.add(TaskKind.ADDMUL, (ra, rb), r,
-                                     payload=flags,
-                                     flops=2 * m_ * n_ * k_,
-                                     deps=(prev, pa, pb))
+                        ins = (ra, rb)
+                        deps = (prev, pa, pb)
+                        payload = flags
+                        flops = 2 * m_ * n_ * k_
+                        if epi is not None and k == kt - 1:
+                            # the LAST chain task applies the epilogue to
+                            # the accumulated C tile in the same pass: its
+                            # extra ins are the (i, j) tiles of the
+                            # epilogue operands, its flops include the
+                            # elementwise work (priced into ADDMUL)
+                            from .fusion import fused_flops
+                            eins = [tiles[e.uid][(i, j)] for e in extras]
+                            ins += tuple(er for er, _ in eins)
+                            deps += tuple(ep for _, ep in eins)
+                            payload = node.payload
+                            flops += fused_flops(epi, *r.shape)
+                        task = g.add(TaskKind.ADDMUL, ins, r,
+                                     payload=payload, flops=flops,
+                                     deps=deps)
                         prev = task.tid
                     entry[(i, j)] = (r, prev)
 

@@ -22,7 +22,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .graph import Task, TaskKind
+from .graph import Task, TaskKind, matmul_epilogue
 from .machine import ClusterSpec
 
 
@@ -186,7 +186,24 @@ class TimeModel:
             # per op is a conservative upper bound)
             from .fusion import fused_op_count
             t *= max(1, fused_op_count(task.payload))
+        elif kind in (TaskKind.ADDMUL, TaskKind.MATMUL):
+            t += self._epilogue_time(task)
         return t
+
+    def _epilogue_time(self, task: Task) -> float:
+        """Extra arithmetic of a fused matmul epilogue: N elementwise
+        passes over the output tile, priced with the ewise-family model
+        (same accounting a standalone FUSED task would get)."""
+        epi = matmul_epilogue(task.payload)
+        if epi is None:
+            return 0.0
+        from .fusion import fused_flops, fused_op_count
+        m, n, k = task.dims()
+        shape = (m, k)                       # the output tile
+        em = self.models.get(TaskKind.FUSED.value) or self.models.get("ewise")
+        if em is None:
+            return fused_flops(epi, *shape) / 1e9
+        return max(1, fused_op_count(epi)) * em.predict(shape)
 
     def kernel_time(self, task: Task, spec: Optional[ClusterSpec] = None,
                     node: int = 0) -> float:
@@ -336,6 +353,14 @@ class CostCache:
         if task.kind is TaskKind.FUSED:
             from .fusion import fused_op_count
             extra = fused_op_count(task.payload)
+        elif task.kind in (TaskKind.ADDMUL, TaskKind.MATMUL):
+            epi = matmul_epilogue(task.payload)
+            if epi is not None:
+                # the pricing reads the op count (fitted-model path) and
+                # the per-element flop weight (analytic fallback); key on
+                # both so cached and uncached predictions always agree
+                from .fusion import fused_flops, fused_op_count
+                extra = ("epi", fused_op_count(epi), fused_flops(epi, 1, 1))
         return (task.kind, task.dims(), extra)
 
     def time(self, task: Task, node: int = 0) -> float:

@@ -45,7 +45,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.fusion import eval_fused
-from ..core.graph import Task, TaskGraph, TaskKind, TileRef, matmul_flags
+from ..core.graph import (Task, TaskGraph, TaskKind, TileRef,
+                          matmul_epilogue, matmul_flags)
 from ..core.lazy import EWISE_FNS, Op, apply_scale, leaf_slice
 from ..core.machine import ClusterSpec
 from ..core.timemodel import CostCache, TimeModel
@@ -86,8 +87,16 @@ def _group_key(t: Task, dtypes: Dict[int, object]) -> tuple:
     dt = lambda ref: str(dtypes.get(ref.tensor, np.float64))  # noqa: E731
     k = t.kind
     if k in (TaskKind.ADDMUL, TaskKind.MATMUL):
-        return (k, matmul_flags(t.payload), t.ins[0].shape, t.ins[1].shape,
-                t.out.shape, dt(t.ins[0]), dt(t.ins[1]), dt(t.out))
+        key = (k, matmul_flags(t.payload), t.ins[0].shape, t.ins[1].shape,
+               t.out.shape, dt(t.ins[0]), dt(t.ins[1]), dt(t.out))
+        epi = matmul_epilogue(t.payload)
+        if epi is not None:
+            # epilogued chain tails batch separately from plain chain
+            # steps: the stacked eval_fused needs matching programs and
+            # matching extra-operand shapes/dtypes across the group
+            key += (epi, tuple(r.shape for r in t.ins[2:]),
+                    tuple(dt(r) for r in t.ins[2:]))
+        return key
     if k is TaskKind.CALLOC:
         return (k, t.out.shape, dt(t.out))
     if k is TaskKind.FILL:
@@ -199,10 +208,19 @@ class WaveExecutor:
     """
 
     def __init__(self, backend: str = "numpy", free_buffers: bool = True,
-                 trace: bool = True):
+                 trace: bool = True, precision: str = "strict"):
         if backend not in ("numpy", "pallas"):
             raise ValueError(f"unknown wave backend {backend!r}")
+        if precision not in ("strict", "mixed"):
+            raise ValueError(f"unknown precision mode {precision!r}")
         self.backend = backend
+        #: ``"strict"`` (default) keeps the bit-identity contract with
+        #: LocalExecutor.  ``"mixed"`` is the opt-in numerics gate: matmul
+        #: accumulators CALLOC in float32, operands are cast to float32
+        #: for the multiply, and epilogued chain outputs are stored as
+        #: bfloat16 — validated by allclose tolerance, never bitwise
+        #: (see TESTING.md, numerics tiers).
+        self.precision = precision
         self.free_buffers = free_buffers
         #: flight recorder: one EXEC span per batched group call (node 0,
         #: lane 0 — waves are sequential in this process)
@@ -240,6 +258,9 @@ class WaveExecutor:
 
         if kind is TaskKind.CALLOC:
             dt = dtypes.get(tasks[0].payload, np.float64)
+            if self.precision == "mixed":
+                # CALLOCs are matmul accumulators: f32 accumulate
+                dt = np.float32
             slab = np.zeros((len(tasks),) + outs[0].shape, dtype=dt)
             arena.register(outs, slab)
             for i, t in enumerate(tasks):
@@ -298,17 +319,49 @@ class WaveExecutor:
             buffers[t.out] = slab[i]
         arena.register([t.out for t in tasks], slab)
 
+    def _epilogue_store_dtype(self):
+        if self.precision != "mixed":
+            return None
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+
+    def _apply_epilogue(self, epi, tasks, c3, buffers, arena) -> None:
+        """Stacked epilogue over the accumulated C slab; rebinds outputs.
+
+        Runs the same ``eval_fused`` program as the unfused FUSED task
+        would, on the same accumulated values, so strict-precision wave
+        execution stays bit-identical to the per-task executors.
+        """
+        nin = len(tasks[0].ins)
+        stacks = [self._gather([t.ins[j] for t in tasks], buffers, arena)
+                  for j in range(2, nin)]
+        slab = eval_fused(epi, [c3] + stacks)
+        store_dt = self._epilogue_store_dtype()
+        if store_dt is not None:
+            slab = slab.astype(store_dt)
+        outs = [t.out for t in tasks]
+        arena.register(outs, slab)
+        for i, t in enumerate(tasks):
+            buffers[t.out] = slab[i]
+
     def _run_matmul(self, kind, tasks, buffers, arena, dtypes) -> None:
         ta, tb = matmul_flags(tasks[0].payload)
+        epi = matmul_epilogue(tasks[0].payload)
         a3 = self._gather([t.ins[0] for t in tasks], buffers, arena)
         b3 = self._gather([t.ins[1] for t in tasks], buffers, arena)
         if ta:
             a3 = a3.transpose(0, 2, 1)
         if tb:
             b3 = b3.transpose(0, 2, 1)
+        if self.precision == "mixed":
+            a3 = a3.astype(np.float32, copy=False)
+            b3 = b3.astype(np.float32, copy=False)
 
         if kind is TaskKind.MATMUL:
             slab = np.matmul(a3, b3)
+            if epi is not None:
+                self._apply_epilogue(epi, tasks, slab, buffers, arena)
+                return
             arena.register([t.out for t in tasks], slab)
             for i, t in enumerate(tasks):
                 buffers[t.out] = slab[i]
@@ -321,6 +374,28 @@ class WaveExecutor:
             from ..kernels import ops as kops
             c3 = crun if crun is not None else \
                 np.stack([buffers[t.out] for t in tasks])
+            if epi is not None:
+                # true fused kernel: accumulator -> epilogue -> store
+                stacks = [self._gather([t.ins[j] for t in tasks],
+                                       buffers, arena)
+                          for j in range(2, len(tasks[0].ins))]
+                store_dt = self._epilogue_store_dtype()
+                slab = np.asarray(kops.addmul_batched(
+                    np.ascontiguousarray(c3), np.ascontiguousarray(a3),
+                    np.ascontiguousarray(b3),
+                    epilogue=epi,
+                    extras=[np.ascontiguousarray(s) for s in stacks],
+                    out_dtype=store_dt))
+                if store_dt is None:
+                    # strict mode: keep the wave pipeline's dtype contract
+                    # (jax may compute in f32; the plain path casts back
+                    # to the accumulator dtype the same way)
+                    slab = slab.astype(np.result_type(
+                        c3.dtype, *[s.dtype for s in stacks]), copy=False)
+                arena.register(outs, slab)
+                for i, t in enumerate(tasks):
+                    buffers[t.out] = slab[i]
+                return
             out = np.asarray(kops.addmul_batched(
                 np.ascontiguousarray(c3), np.ascontiguousarray(a3),
                 np.ascontiguousarray(b3)), dtype=c3.dtype)
@@ -336,6 +411,12 @@ class WaveExecutor:
         else:
             for i, t in enumerate(tasks):
                 buffers[t.out] += prod[i]
+        if epi is not None:
+            # tail of the k-chain: apply the fused epilogue over the
+            # fully-accumulated C tiles in one stacked pass
+            c3 = crun if crun is not None else \
+                np.stack([buffers[t.out] for t in tasks])
+            self._apply_epilogue(epi, tasks, c3, buffers, arena)
 
     # -- driver ------------------------------------------------------------
     def execute(self, plan) -> np.ndarray:

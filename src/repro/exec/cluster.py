@@ -61,7 +61,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.fusion import eval_fused
-from ..core.graph import TaskGraph, TaskKind, TileRef, matmul_flags
+from ..core.graph import (TaskGraph, TaskKind, TileRef, matmul_epilogue,
+                          matmul_flags)
 from ..core.heft import Schedule, edge_bytes
 from ..core.lazy import EWISE_FNS, Op, apply_scale, leaf_slice
 from ..core.machine import ClusterSpec, MemoryBudgetExceeded
@@ -549,6 +550,13 @@ def _execute_task(t, arena: _NodeArena, leaf_nodes, dtypes,
         b = b.T if tb else b
         c = arena.get(t.out)
         c += a @ b
+        epi = matmul_epilogue(t.payload)
+        if epi is not None:
+            # last task of the k-chain: fused elementwise epilogue over
+            # the accumulated tile (rebinds the output segment — store
+            # runs before seg_of so the master sees the new segment)
+            arena.store(t.out, eval_fused(
+                epi, [c] + [arena.get(r) for r in t.ins[2:]]))
         return arena.seg_of(t.out)
     if k is TaskKind.FILL:
         node = leaf_nodes[t.payload]

@@ -35,7 +35,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from ..core.fusion import eval_fused
-from ..core.graph import Task, TaskGraph, TaskKind, TileRef, matmul_flags
+from ..core.graph import (Task, TaskGraph, TaskKind, TileRef,
+                          matmul_epilogue, matmul_flags)
 from ..core.lazy import EWISE_FNS, apply_scale, leaf_slice
 from ..core.tiling import assemble, result_sets_of, tile_slices
 from ..runtime.telemetry import Tracer
@@ -110,17 +111,31 @@ class LocalExecutor:
                 return
             if t.kind is TaskKind.ADDMUL:
                 ta, tb = matmul_flags(t.payload)
+                epi = matmul_epilogue(t.payload)
                 a = buffers[t.ins[0]]
                 b = buffers[t.ins[1]]
                 a = a.T if ta else a
                 b = b.T if tb else b
                 c = buffers[t.out]
                 if self.use_pallas:
-                    buffers[t.out] = np.asarray(
-                        kops.addmul(c, np.ascontiguousarray(a),
-                                    np.ascontiguousarray(b)))
+                    if epi is not None:
+                        buffers[t.out] = np.asarray(kops.addmul(
+                            c, np.ascontiguousarray(a),
+                            np.ascontiguousarray(b),
+                            epilogue=epi,
+                            extras=[np.ascontiguousarray(buffers[r])
+                                    for r in t.ins[2:]]))
+                    else:
+                        buffers[t.out] = np.asarray(
+                            kops.addmul(c, np.ascontiguousarray(a),
+                                        np.ascontiguousarray(b)))
                 else:
                     c += a @ b
+                    if epi is not None:
+                        # last task of the k-chain: apply the fused
+                        # elementwise epilogue over the accumulated tile
+                        buffers[t.out] = eval_fused(
+                            epi, [c] + [buffers[r] for r in t.ins[2:]])
                 return
             if t.kind is TaskKind.ADD:
                 buffers[t.out] = buffers[t.ins[0]] + buffers[t.ins[1]]

@@ -1,0 +1,308 @@
+"""Fused matmul epilogues: fusion pass, tiling, costing, all executors.
+
+The tentpole invariant: attaching a single-consumer elementwise chain to
+its MATMUL as an epilogue program must change *nothing* about the
+numbers on the strict-precision numpy backends — the epilogued plan runs
+the identical ``eval_fused`` instruction sequence on the identical
+accumulated C tiles, just without materialising the intermediate, so
+fused and unfused executions are bitwise equal (f64 and f32).  The
+Pallas legs accumulate in f32 VMEM and are validated at tolerance, like
+the pre-existing plain addmul kernel; the bf16 mixed-precision leg is
+opt-in and gated by a documented allclose tolerance (TESTING.md).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ClusteredMatrix as CM, CMMEngine,
+                        analytic_time_model, c5_9xlarge)
+from repro.core.fusion import (eval_fused, fused_flops, fused_op_count,
+                               optimize, optimize_many)
+from repro.core.graph import TaskKind, matmul_epilogue, matmul_flags
+from repro.core.lazy import Op
+from repro.core.tiling import tile_expression_many
+from repro.core.timemodel import CostCache
+
+TM = analytic_time_model()
+
+
+def _engine(nodes=2, **kw):
+    return CMMEngine(c5_9xlarge(nodes), TM, **kw)
+
+
+def _chain(dtype=np.float64, m=48, k=64, n=32):
+    A = CM.rand(m, k, seed=1, dtype=dtype)
+    B = CM.rand(k, n, seed=2, dtype=dtype)
+    C = CM.rand(m, n, seed=3, dtype=dtype)
+    return ((A @ B) + C).relu() * 2.0
+
+
+# -- the fusion pass ----------------------------------------------------------
+
+def test_epilogue_folds_chain_into_matmul():
+    expr = _chain()
+    opt, rep = optimize(expr)
+    assert opt.op is Op.MATMUL
+    epi = matmul_epilogue(opt.payload)
+    assert epi is not None
+    assert rep.epilogues_fused == 1
+    # relu, scale, add -> 3 fused ops riding the matmul
+    assert rep.epilogue_ops == fused_op_count(epi) == 3
+    # slot 0 is the accumulator; C is the one extra parent
+    assert len(opt.parents) == 3
+
+
+def test_epilogue_respects_multi_consumer_matmul():
+    A = CM.rand(16, 16, seed=1)
+    B = CM.rand(16, 16, seed=2)
+    M = A @ B
+    expr = M.relu() + M.ewise("tanh")      # M feeds two separate regions
+    opt, rep = optimize(expr)
+    # elementwise fusion first merges both consumers into ONE region with
+    # M as a single deduped external -> M becomes single-consumer and the
+    # whole thing legally rides the matmul
+    assert rep.epilogues_fused == 1
+    out = _engine().run(expr, tile=8)
+    np.testing.assert_array_equal(
+        out, _engine(fuse_epilogue=False).run(expr, tile=8))
+
+
+def test_epilogue_preserves_transpose_flags():
+    A = CM.rand(64, 48, seed=4)
+    B = CM.rand(64, 32, seed=5)
+    expr = (A.T @ B).relu()
+    opt, _ = optimize(expr)
+    assert matmul_flags(opt.payload) == (True, False)
+    assert matmul_epilogue(opt.payload) is not None
+
+
+def test_second_matmul_stays_materialized_extra():
+    A = CM.rand(16, 16, seed=1)
+    B = CM.rand(16, 16, seed=2)
+    C = CM.rand(16, 16, seed=3)
+    expr = (A @ B) + (A @ C)               # two matmuls, one consumer
+    opt, rep = optimize(expr)
+    assert rep.epilogues_fused == 1
+    # exactly one matmul became the anchor; the other is an extra parent
+    assert sum(1 for p in opt.parents if p.op is Op.MATMUL) == 1
+
+
+# -- tiling + costing ---------------------------------------------------------
+
+def test_epilogue_rides_last_chain_task_only():
+    roots, _ = optimize_many([_chain(m=32, k=48, n=32)])
+    g = tile_expression_many(roots, (16, 16)).graph
+    g.validate()
+    tasks = list(g.tasks.values())
+    epis = [t for t in tasks if t.kind is TaskKind.ADDMUL
+            and matmul_epilogue(t.payload)]
+    plain = [t for t in tasks if t.kind is TaskKind.ADDMUL
+             and not matmul_epilogue(t.payload)]
+    # 2x2 output grid, 3-step k-chains: 4 chain tails carry the epilogue
+    assert len(epis) == 4 and len(plain) == 8
+    assert all(len(t.ins) == 3 for t in epis)          # C tile wired in
+    assert not any(t.kind is TaskKind.FUSED for t in tasks)
+
+
+def test_fused_plan_has_strictly_fewer_tasks():
+    r1, _ = optimize_many([_chain()])
+    r0, _ = optimize_many([_chain()], fuse_epilogue=False)
+    g1 = tile_expression_many(r1, (16, 16)).graph
+    g0 = tile_expression_many(r0, (16, 16)).graph
+    assert len(g1.tasks) < len(g0.tasks)
+
+
+def test_epilogue_is_priced_into_addmul():
+    roots, _ = optimize_many([_chain(m=32, k=48, n=32)])
+    g = tile_expression_many(roots, (16, 16)).graph
+    tasks = list(g.tasks.values())
+    epi = next(t for t in tasks if t.kind is TaskKind.ADDMUL
+               and matmul_epilogue(t.payload))
+    plain = next(t for t in tasks if t.kind is TaskKind.ADDMUL
+                 and not matmul_epilogue(t.payload))
+    assert epi.flops > plain.flops
+    assert TM.kernel_time(epi) > TM.kernel_time(plain)
+    # memoized costing must key epilogued and plain signatures apart
+    assert CostCache.signature(epi) != CostCache.signature(plain)
+
+
+# -- executors: strict-precision bit identity ---------------------------------
+
+@pytest.mark.parametrize("executor", ["local", "batched", "cluster"])
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def test_fused_bitwise_identical_to_unfused(executor, dtype):
+    un = _engine(fuse_epilogue=False).run(_chain(dtype), tile=16,
+                                          executor=executor)
+    fu = _engine(fuse_epilogue=True).run(_chain(dtype), tile=16,
+                                         executor=executor)
+    np.testing.assert_array_equal(fu, un)
+    assert fu.dtype == un.dtype == dtype
+
+
+def test_mixed_dtype_chain_promotes_like_unfused():
+    A = CM.rand(32, 32, seed=6, dtype=np.float32)
+    B = CM.rand(32, 32, seed=7, dtype=np.float32)
+    C = CM.rand(32, 32, seed=8, dtype=np.float64)
+    expr = ((A @ B) + C).relu()
+    un = _engine(fuse_epilogue=False).run(expr, tile=16)
+    fu = _engine(fuse_epilogue=True).run(expr, tile=16)
+    np.testing.assert_array_equal(fu, un)
+    assert fu.dtype == np.float64
+
+
+# -- Pallas legs (f32 VMEM accumulate: tolerance, not bitwise) ----------------
+
+def test_pallas_kernel_epilogue_matches_numpy():
+    kops = pytest.importorskip("repro.kernels.ops")
+    rng = np.random.default_rng(0)
+    c = rng.standard_normal((16, 16))
+    a = rng.standard_normal((16, 48))
+    b = rng.standard_normal((48, 16))
+    d = rng.standard_normal((16, 16))
+    prog = (("in", 0), ("in", 1), ("add", 0, 1),
+            ("ewise", "relu", 2), ("scale", "mul", 2.0, 3))
+    out = np.asarray(kops.addmul(c, a, b, epilogue=prog, extras=[d]))
+    ref = np.maximum((c + a @ b) + d, 0.0) * 2.0
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_wave_pallas_epilogue_matches_numpy_backend():
+    pytest.importorskip("jax")
+    fu = _engine(fuse_epilogue=True).run(
+        _chain(m=32, k=48, n=32), tile=16, executor="batched-pallas")
+    ref = _engine(fuse_epilogue=True).run(
+        _chain(m=32, k=48, n=32), tile=16, executor="batched")
+    assert fu.dtype == ref.dtype
+    np.testing.assert_allclose(fu, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_mixed_precision_is_optin_and_within_tolerance():
+    pytest.importorskip("ml_dtypes")
+    from repro.exec.batched import WaveExecutor
+    eng = _engine()
+    plan = eng.plan(_chain(), tile=16)
+    out = WaveExecutor(backend="numpy", precision="mixed").execute(plan)
+    assert out.dtype.name == "bfloat16"
+    ref = _chain().eager()
+    # documented bf16 tolerance (TESTING.md numerics tiers)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float64), ref,
+                               rtol=2e-2, atol=2e-2)
+    with pytest.raises(ValueError):
+        WaveExecutor(precision="fast")
+
+
+# -- eval_fused scratch reuse across mixed dtypes (satellite) -----------------
+
+def test_eval_fused_scratch_reuse_mixed_dtypes():
+    """Recycled scratch buffers must never leak across dtype boundaries:
+    a f32 temp cannot be reused as the out= of a f64 ufunc (and inputs
+    are never recycled at all)."""
+    rng = np.random.default_rng(1)
+    x64 = rng.standard_normal((8, 8))
+    x32 = rng.standard_normal((8, 8)).astype(np.float32)
+    prog = (("in", 0),                    # f64
+            ("in", 1),                    # f32
+            ("ewise", "relu", 0),         # f64 temp
+            ("ewise", "tanh", 1),         # f32 temp
+            ("add", 2, 3),                # promotes -> f64
+            ("ewise", "exp", 4))
+    in0, in1 = x64.copy(), x32.copy()
+    out = eval_fused(prog, [in0, in1])
+    ref = np.exp(np.maximum(x64, 0.0) + np.tanh(x32))
+    np.testing.assert_array_equal(out, ref)
+    assert out.dtype == np.float64
+    # inputs were not written by the interpreter's buffer recycling
+    np.testing.assert_array_equal(in0, x64)
+    np.testing.assert_array_equal(in1, x32)
+
+
+def test_eval_fused_reuse_disabled_for_int_inputs():
+    x = np.arange(16).reshape(4, 4)       # int64: sin promotes to f64
+    prog = (("in", 0), ("ewise", "sin", 0), ("ewise", "cos", 1))
+    np.testing.assert_array_equal(eval_fused(prog, [x]),
+                                  np.cos(np.sin(x)))
+
+
+# -- fused_flops vs analytic counts (satellite; randomized programs) ----------
+
+def _random_prog(rng, n_inputs):
+    """A random well-formed FUSED program over ``n_inputs`` inputs."""
+    instrs = [("in", i) for i in range(n_inputs)]
+    ewise = ["sin", "cos", "exp", "tanh", "abs", "relu", "sqrt"]
+    for _ in range(rng.integers(1, 8)):
+        kind = rng.choice(["ewise", "scale", "add", "sub", "ewmul"])
+        i = int(rng.integers(0, len(instrs)))
+        j = int(rng.integers(0, len(instrs)))
+        if kind == "ewise":
+            instrs.append(("ewise", str(rng.choice(ewise)), i))
+        elif kind == "scale":
+            instrs.append(("scale", "mul", float(rng.uniform(0.5, 2)), i))
+        else:
+            instrs.append((kind, i, j))
+    return tuple(instrs)
+
+
+def _analytic_flops(prog, m, n):
+    """Independent recount: 4 flops/elem per transcendental pass, 1 for
+    arithmetic — the task_work/tiling convention."""
+    total = 0
+    for ins in prog:
+        if ins[0] == "ewise":
+            total += 4 * m * n
+        elif ins[0] in ("scale", "add", "sub", "ewmul"):
+            total += m * n
+    return total
+
+
+def test_fused_flops_matches_analytic_on_random_programs():
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        prog = _random_prog(rng, int(rng.integers(1, 4)))
+        m, n = int(rng.integers(1, 64)), int(rng.integers(1, 64))
+        assert fused_flops(prog, m, n) == _analytic_flops(prog, m, n)
+
+
+try:
+    import hypothesis  # noqa: F401
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(0, 10_000), m=st.integers(1, 128),
+           n=st.integers(1, 128))
+    @settings(max_examples=60, deadline=None)
+    def test_fused_flops_matches_analytic_hypothesis(seed, m, n):
+        rng = np.random.default_rng(seed)
+        prog = _random_prog(rng, int(rng.integers(1, 4)))
+        assert fused_flops(prog, m, n) == _analytic_flops(prog, m, n)
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_eval_fused_random_programs_match_reference(seed):
+        """eval_fused with scratch recycling == naive interpretation."""
+        rng = np.random.default_rng(seed)
+        n_in = int(rng.integers(1, 4))
+        prog = _random_prog(rng, n_in)
+        dts = [rng.choice([np.float32, np.float64]) for _ in range(n_in)]
+        xs = [rng.uniform(0.1, 2.0, (6, 5)).astype(dt) for dt in dts]
+        from repro.core.lazy import EWISE_FNS, apply_scale
+        vals = []
+        for ins in prog:
+            if ins[0] == "in":
+                vals.append(xs[ins[1]])
+            elif ins[0] == "ewise":
+                vals.append(EWISE_FNS[ins[1]](vals[ins[2]]))
+            elif ins[0] == "scale":
+                vals.append(apply_scale(ins[1], vals[ins[3]], ins[2]))
+            elif ins[0] == "add":
+                vals.append(vals[ins[1]] + vals[ins[2]])
+            elif ins[0] == "sub":
+                vals.append(vals[ins[1]] - vals[ins[2]])
+            elif ins[0] == "ewmul":
+                vals.append(vals[ins[1]] * vals[ins[2]])
+        out = eval_fused(prog, xs)
+        np.testing.assert_array_equal(out, vals[-1])
+        assert out.dtype == vals[-1].dtype

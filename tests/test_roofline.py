@@ -1,0 +1,203 @@
+"""Analytic roofline model: work counts, peaks, audit, span report.
+
+The roofline is the analytic cross-check on the *fitted* TimeModel: task
+FLOP/byte counts are closed-form, node peaks are derived from the fitted
+polynomials' marginal rates, and the span-joined report flags nodes far
+below the ceiling as straggler priors (the drift report's complement —
+it still fires when the fitted model has absorbed a node's slowdown).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ClusteredMatrix as CM, CMMEngine,
+                        analytic_time_model, c5_9xlarge)
+from repro.core.fusion import fused_flops, optimize_many
+from repro.core.graph import Task, TaskKind, TileRef, matmul_epilogue
+from repro.core.machine import hetero_spec
+from repro.core.roofline import (TaskWork, audit_timemodel, node_peaks,
+                                 roofline_report, roofline_time, task_work,
+                                 wave_roofline)
+from repro.core.tiling import tile_expression_many
+
+TM = analytic_time_model()
+
+
+def _task(kind, ins, out, payload=None):
+    return Task(0, kind, ins, out, payload=payload)
+
+
+def _ref(shape, t=0):
+    return TileRef(t, 0, 0, shape)
+
+
+# -- work counts --------------------------------------------------------------
+
+def test_addmul_work_counts():
+    t = _task(TaskKind.ADDMUL, (_ref((16, 32)), _ref((32, 8), 1)),
+              _ref((16, 8), 2), payload=(False, False))
+    w = task_work(t)
+    assert w.flops == 2 * 16 * 32 * 8
+    assert w.bytes == (16 * 32 + 32 * 8 + 2 * 16 * 8) * 8
+    assert w.intensity == w.flops / w.bytes
+
+
+def test_epilogued_addmul_adds_epilogue_work():
+    prog = (("in", 0), ("in", 1), ("add", 0, 1), ("ewise", "relu", 2))
+    payload = ("epi", (False, False), prog)
+    t = _task(TaskKind.ADDMUL,
+              (_ref((16, 32)), _ref((32, 8), 1), _ref((16, 8), 3)),
+              _ref((16, 8), 2), payload=payload)
+    w = task_work(t)
+    plain = task_work(_task(TaskKind.ADDMUL,
+                            (_ref((16, 32)), _ref((32, 8), 1)),
+                            _ref((16, 8), 2), payload=(False, False)))
+    assert w.flops == plain.flops + fused_flops(prog, 16, 8)
+    assert w.bytes == plain.bytes + 16 * 8 * 8   # one extra operand read
+
+
+def test_ewise_and_fused_work_counts():
+    e = task_work(_task(TaskKind.EWISE, (_ref((8, 8)),), _ref((8, 8), 1),
+                        payload="exp"))
+    assert e.flops == 4 * 64 and e.bytes == 2 * 64 * 8
+    a = task_work(_task(TaskKind.ADD, (_ref((8, 8)), _ref((8, 8), 1)),
+                        _ref((8, 8), 2)))
+    assert a.flops == 64 and a.bytes == 3 * 64 * 8
+    assert task_work(_task(TaskKind.TAKECOPY, (), _ref((8, 8)))).flops == 0
+
+
+def test_itemsize_scales_bytes_not_flops():
+    t = _task(TaskKind.EWISE, (_ref((8, 8)),), _ref((8, 8), 1),
+              payload="exp")
+    assert task_work(t, itemsize=4).bytes == task_work(t).bytes // 2
+    assert task_work(t, itemsize=4).flops == task_work(t).flops
+
+
+# -- peaks + roofline time ----------------------------------------------------
+
+def test_node_peaks_match_analytic_model_constants():
+    # the analytic model IS a roofline: 5.5 GFLOP/s, 10 GB/s
+    p = node_peaks(TM)[0]
+    assert p.flops_per_s == pytest.approx(5.5e9, rel=1e-6)
+    assert p.bytes_per_s == pytest.approx(10e9, rel=1e-6)
+
+
+def test_node_peaks_scale_with_machine_slowdown():
+    spec = hetero_spec((1, 1), slowdown=(1.0, 2.0))  # node 1 2x slower
+    p0, p1 = node_peaks(TM, spec)
+    assert p0.flops_per_s == pytest.approx(2 * p1.flops_per_s, rel=1e-6)
+
+
+def test_roofline_time_picks_binding_roof():
+    peak = node_peaks(TM)[0]
+    compute = TaskWork(flops=10 ** 9, bytes=8)
+    memory = TaskWork(flops=8, bytes=10 ** 9)
+    assert roofline_time(compute, peak) == pytest.approx(1e9 / peak.flops_per_s)
+    assert roofline_time(memory, peak) == pytest.approx(1e9 / peak.bytes_per_s)
+
+
+# -- audit + waves ------------------------------------------------------------
+
+def _graph(tile=(16, 16)):
+    A = CM.rand(64, 64, seed=1)
+    B = CM.rand(64, 64, seed=2)
+    C = CM.rand(64, 64, seed=3)
+    roots, _ = optimize_many([((A @ B) + C).relu()])
+    return tile_expression_many(roots, tile).graph
+
+
+def test_audit_one_row_per_signature():
+    g = _graph()
+    rows = audit_timemodel(g, TM)
+    # addmul/calloc/fill, with addmul split by epilogue signature
+    assert len(rows) == 4
+    addmuls = [r for r in rows if r.kind == "addmul"]
+    # plain chain steps and epilogued tails audit as separate rows
+    assert len(addmuls) == 2
+    assert sum(r.count for r in rows) == \
+        sum(1 for t in g if t.kind not in
+            (TaskKind.SEND, TaskKind.RECV, TaskKind.TAKECOPY,
+             TaskKind.RESIDENT))
+    for r in rows:
+        assert r.roofline_s > 0 and r.ratio > 0
+        assert r.bound in ("compute", "memory")
+    # the analytic model prices matmul AT the roofline (plus launch
+    # constant), so the fitted-vs-bound ratio must stay sane, >= ~1
+    assert all(r.ratio > 0.99 for r in addmuls)
+
+
+def test_wave_fractions_bounded():
+    from repro.exec.batched import build_waves
+    g = _graph()
+    waves = build_waves(g)
+    rows = wave_roofline(g, waves, TM)
+    assert len(rows) == len(waves)
+    for r in rows:
+        if r["fraction"] is not None:
+            assert 0.0 <= r["fraction"] <= 1.0 + 1e-9
+
+
+def test_engine_roofline_audit_hook():
+    eng = CMMEngine(c5_9xlarge(2), TM)
+    plan = eng.plan(((CM.rand(32, 32, seed=1) @ CM.rand(32, 32, seed=2))
+                     + CM.rand(32, 32, seed=3)).relu(), tile=16)
+    rows = eng.roofline_audit(plan)
+    assert rows and any(r.kind == "addmul" for r in rows)
+    assert [w["wave"] for w in plan.roofline_waves(TM)] \
+        == list(range(len(plan.waves)))
+
+
+# -- span-joined report -------------------------------------------------------
+
+class _Span:
+    def __init__(self, node, tid, dur):
+        self.cat = "EXEC"
+        self.node = node
+        self.dur = dur
+        self.args = {"tid": tid}
+
+
+def test_roofline_report_flags_only_throttled_node():
+    """Planned heterogeneity cancels in per-node peaks; an *unplanned*
+    4x throttle on node 1 is the only below-band outlier."""
+    spec = hetero_spec((1, 1, 1, 1),      # nodes 2,3 planned 2x slower
+                       slowdown=(1.0, 1.0, 2.0, 2.0))
+    eng = CMMEngine(spec, TM)
+    plan = eng.plan(((CM.rand(64, 64, seed=1) @ CM.rand(64, 64, seed=2))
+                     + CM.rand(64, 64, seed=3)).relu(), tile=16)
+    g = plan.program.graph
+    peaks = {p.node: p for p in node_peaks(TM, spec)}
+    spans = []
+    for i, t in enumerate(g):
+        if t.kind not in (TaskKind.ADDMUL, TaskKind.MATMUL):
+            continue
+        node = i % 4
+        base = roofline_time(task_work(t), peaks[node]) / 0.8
+        dur = base * (4.0 if node == 1 else 1.0)   # unplanned throttle
+        spans.append(_Span(node, t.tid, dur))
+    rep = roofline_report(spans, plan, tm=TM, band=2.0)
+    assert rep.below_band == [1]
+    assert rep.node(1).flagged and not rep.node(2).flagged
+    assert rep.node(0).fraction == pytest.approx(0.8, rel=1e-6)
+    assert "BELOW ROOFLINE BAND" in rep.summary()
+    d = rep.as_dict()
+    assert d["below_band"] == [1] and len(d["peaks"]) == 4
+
+
+def test_roofline_report_no_spans_degrades():
+    eng = CMMEngine(c5_9xlarge(2), TM)
+    plan = eng.plan((CM.rand(16, 16, seed=1) @ CM.rand(16, 16, seed=2)),
+                    tile=8)
+    rep = roofline_report([], plan, tm=TM)
+    assert rep.below_band == [] and rep.fleet_fraction is None
+    assert all(nr.fraction is None for nr in rep.nodes)
+
+
+def test_engine_roofline_report_hook_end_to_end():
+    eng = CMMEngine(c5_9xlarge(2), TM)
+    out = eng.run(((CM.rand(64, 64, seed=1) @ CM.rand(64, 64, seed=2))
+                   + CM.rand(64, 64, seed=3)).relu(), tile=32,
+                  executor="local")
+    assert out is not None
+    rep = eng.roofline_report()
+    assert any(nr.samples > 0 for nr in rep.nodes)
+    assert rep.fleet_fraction is not None
